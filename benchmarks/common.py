@@ -1,0 +1,29 @@
+"""Shared helpers for the paper-experiment benchmarks.
+
+Communication accounting follows paper Section 1.2: UpCom/DownCom are floats
+per participating client per round; TotalCom = UpCom + alpha * DownCom.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def totalcom(trace: dict, alpha: float) -> np.ndarray:
+    return trace["up_floats"] + alpha * trace["down_floats"]
+
+
+def floats_to_accuracy(trace: dict, target: float, alpha: float):
+    """First TotalCom value at which suboptimality <= target (None if never)."""
+    sub = trace["suboptimality"]
+    idx = np.argmax(sub <= target)
+    if sub[idx] > target:
+        return None
+    return float(totalcom(trace, alpha)[idx])
+
+
+def summarize(traces: dict, target: float, alpha: float) -> dict:
+    out = {}
+    for name, tr in traces.items():
+        out[name] = floats_to_accuracy(tr, target, alpha)
+    return out

@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.report > benchmarks/artifacts/roofline_table.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline
+
+
+def memory_table(mesh: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(
+            roofline.ART, mesh, "*", "*", "*.json"))):
+        r = json.load(open(path))
+        m = r["memory_analysis"]
+        rows.append((
+            r["arch"], r["shape"], r["step"],
+            (m["argument_bytes"] or 0) / 1e9,
+            (m["temp_bytes"] or 0) / 1e9,
+            (m["output_bytes"] or 0) / 1e9,
+            r["compile_s"],
+        ))
+    out = [
+        f"| arch | shape | step | args GB/dev | temp GB/dev | out GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a, s, st, ab, tb, ob, cs in rows:
+        out.append(f"| {a} | {s} | {st} | {ab:.2f} | {tb:.2f} | {ob:.2f} | {cs} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = roofline.table(mesh)
+    out = [
+        "| arch | shape | step | compute s | memory s | collective s |"
+        " dominant | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        u = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} |"
+            f" {r['compute_s']:.3e} | {r['memory_s']:.3e} |"
+            f" {r['collective_s']:.3e} | {r['dominant']} |"
+            f" {'' if u is None else f'{u:.3f}'} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n## Roofline table — {mesh}\n")
+        print(roofline_table(mesh))
+    print("\n## Memory analysis — pod16x16 (per-device)\n")
+    print(memory_table("pod16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline table assembly: reads the dry-run artifacts and emits the
+per-(arch x shape x mesh) three-term analysis of EXPERIMENTS.md §Roofline.
+
+For train shapes the amortized round is  E[L] * local + comm  with
+E[L] = 1/p (Remark 2); the dominant term is reported for the amortized
+round as well as for each step separately.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "artifacts", "dryrun"
+)
+EXPECTED_L = 4.0  # 1/p with the dry-run default p = 0.25
+
+
+def load(mesh: str = "pod16x16", art_dir: str = ART) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, mesh, "*", "*", "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def amortize(local: dict, comm: dict, L: float = EXPECTED_L) -> dict:
+    r = {}
+    for term in ("compute_s", "memory_s", "collective_s"):
+        r[term] = L * local["roofline"][term] + comm["roofline"][term]
+    r["dominant"] = max(
+        ("compute", r["compute_s"]), ("memory", r["memory_s"]),
+        ("collective", r["collective_s"]), key=lambda kv: kv[1],
+    )[0]
+    mf = local["roofline"]["model_flops_per_chip"]
+    hlo = local["cost_analysis"]["flops"]
+    r["useful_flops_ratio"] = mf / hlo if hlo else None
+    return r
+
+
+def table(mesh: str = "pod16x16", art_dir: str = ART) -> List[dict]:
+    rows = load(mesh, art_dir)
+    by_pair: Dict[tuple, Dict[str, dict]] = {}
+    for r in rows:
+        by_pair.setdefault((r["arch"], r["shape"]), {})[r["step"]] = r
+
+    out = []
+    for (arch, shape), steps in sorted(by_pair.items()):
+        if "local" in steps and "comm" in steps:
+            am = amortize(steps["local"], steps["comm"])
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "step": "round(amortized)",
+                **{k: am[k] for k in
+                   ("compute_s", "memory_s", "collective_s", "dominant",
+                    "useful_flops_ratio")},
+                "local_dominant": steps["local"]["roofline"]["dominant"],
+                "comm_dominant": steps["comm"]["roofline"]["dominant"],
+            }
+            out.append(rec)
+        else:
+            for step, r in steps.items():
+                rl = r["roofline"]
+                out.append({
+                    "arch": arch, "shape": shape, "mesh": mesh, "step": step,
+                    "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                    "collective_s": rl["collective_s"],
+                    "dominant": rl["dominant"],
+                    "useful_flops_ratio": rl["useful_flops_ratio"],
+                })
+    return out
+
+
+def pick_hillclimb_candidates(rows: List[dict]) -> List[dict]:
+    """worst useful-flops ratio, most collective-bound, most paper-central."""
+    cands = []
+    with_ratio = [r for r in rows if r.get("useful_flops_ratio")]
+    if with_ratio:
+        cands.append({
+            "why": "worst useful-flops ratio",
+            **min(with_ratio, key=lambda r: r["useful_flops_ratio"]),
+        })
+    coll = [
+        r for r in rows
+        if r["collective_s"] > 0 and r["dominant"] == "collective"
+    ] or rows
+    cands.append({
+        "why": "most collective-bound",
+        **max(coll, key=lambda r: r["collective_s"] /
+              max(r["compute_s"] + r["memory_s"], 1e-30)),
+    })
+    train = [r for r in rows if r["shape"] == "train_4k"]
+    if train:
+        cands.append({
+            "why": "paper-central (TAMUNA train round, largest model)",
+            **max(train, key=lambda r: r["compute_s"]),
+        })
+    return cands
+
+
+def run():
+    rows = table("pod16x16")
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['step']}",
+            "us_per_call": r["compute_s"] * 1e6,  # compute term, us
+            "derived": (
+                f"mem_us={r['memory_s']*1e6:.1f} "
+                f"coll_us={r['collective_s']*1e6:.1f} "
+                f"dominant={r['dominant']}"
+            ),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    import pprint
+
+    rows = table("pod16x16")
+    pprint.pprint(rows)
+    print("\nhillclimb candidates:")
+    pprint.pprint(pick_hillclimb_candidates(rows))

@@ -1,0 +1,121 @@
+"""Benchmark harness driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call is the natural scalar
+of each benchmark: wall time for kernels, communicated floats for the
+convex-experiment reproductions, roofline compute-seconds for the dry-run
+table).  Full row dicts are dumped to benchmarks/artifacts/results.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...] [--paper-scale]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig2,fig3,table1,table2,kernels,roofline")
+    ap.add_argument("--paper-scale", action="store_true")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(here)
+    for p in (repo, os.path.join(repo, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+    all_rows = {}
+    csv_rows = []
+
+    def emit(name, us, derived):
+        csv_rows.append((name, us, derived))
+
+    def section(key, fn):
+        if only and key not in only:
+            return
+        t0 = time.time()
+        rows = fn()
+        all_rows[key] = rows
+        print(f"# {key}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+        return rows
+
+    rows = section("fig2", lambda: __import__(
+        "benchmarks.paper_fig2", fromlist=["run"]).run(args.paper_scale))
+    if rows:
+        for r in rows:
+            emit(
+                f"fig2/{r['regime']}/a{r['alpha']}/{r['algo']}",
+                r["floats_to_target"] if r["floats_to_target"] else -1,
+                f"final_subopt={r['final_subopt']:.3e}",
+            )
+
+    rows = section("fig3", lambda: __import__(
+        "benchmarks.paper_fig3", fromlist=["run"]).run(args.paper_scale))
+    if rows:
+        for r in rows:
+            emit(
+                f"fig3/{r['regime']}/a{r['alpha']}/{r['algo']}",
+                r["floats_to_target"] if r["floats_to_target"] else -1,
+                f"final_subopt={r['final_subopt']:.3e}",
+            )
+
+    rows = section("table1", lambda: __import__(
+        "benchmarks.paper_table1", fromlist=["run"]).run())
+    if rows:
+        for r in rows:
+            emit(
+                f"table1/{r['algo']}",
+                r["upcom_measured"] if r["upcom_measured"] else -1,
+                f"theory={r['upcom_theory']:.3e}",
+            )
+
+    rows = section("table2", lambda: __import__(
+        "benchmarks.paper_table2", fromlist=["run"]).run())
+    if rows:
+        for r in rows:
+            emit(
+                f"table2/a{r['alpha']}/{r['algo']}",
+                r["totalcom_measured"] if r["totalcom_measured"] else -1,
+                f"theory_a0={r['totalcom_theory_alpha0']:.3e}",
+            )
+
+    rows = section("kernels", lambda: __import__(
+        "benchmarks.kernel_bench", fromlist=["run"]).run())
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    def _roofline():
+        from benchmarks import roofline
+
+        try:
+            return roofline.run()
+        except Exception as e:  # artifacts may not exist yet
+            print(f"# roofline skipped: {e}", file=sys.stderr)
+            return []
+
+    rows = section("roofline", _roofline)
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us},{derived}")
+
+    os.makedirs(os.path.join(here, "artifacts"), exist_ok=True)
+    with open(os.path.join(here, "artifacts", "results.json"), "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

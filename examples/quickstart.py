@@ -1,0 +1,58 @@
+"""Quickstart: the paper's algorithm on the paper's problem, in ~40 lines.
+
+Reproduces the core claim of TAMUNA on a synthetic w8a-like logistic
+regression: linear convergence to the exact solution with compressed uplink
+(only ceil(s*d/c) floats per client per round) and 25% client participation
+— and fewer communicated floats than Scaffold to the same accuracy.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import baselines, problems, tamuna
+
+
+def main():
+    # a heterogeneous logistic-regression problem split over 64 clients
+    prob = problems.make_logreg_problem(
+        n=64, d=256, samples_per_client=8, kappa=1000.0, seed=0
+    )
+    print(f"problem: n={prob.n} clients, d={prob.d}, kappa={prob.kappa:.0f}")
+
+    # TAMUNA with Theorem-3 tuned parameters, 25% participation
+    cfg = tamuna.TamunaConfig.tuned(prob, c=16)
+    print(f"tuned: gamma={cfg.gamma:.2e} p={cfg.p:.3f} s={cfg.s} c={cfg.c}"
+          f"  (uplink floats/round/client = {max(1, -(-cfg.s*prob.d//cfg.c))},"
+          f" vs d={prob.d} uncompressed)")
+
+    trace = tamuna.run(prob, cfg, num_rounds=3000, record_every=250)
+    for r, sub, up in zip(trace["rounds"], trace["suboptimality"],
+                          trace["up_floats"]):
+        print(f"  round {r:5d}  f(x)-f* = {sub:.3e}  "
+              f"uplink floats/client = {up}")
+
+    # versus Scaffold (LT + PP, no acceleration) at the same participation
+    target = float(prob.suboptimality(prob.x_star * 0.0)) * 1e-6
+    sc = baselines.run_scaffold(
+        prob, 1.0 / (prob.L + prob.mu), local_steps=int(1 / cfg.p),
+        c=16, num_rounds=3000, record_every=20,
+    )
+
+    def floats_to(tr):
+        idx = np.argmax(tr["suboptimality"] < target)
+        return tr["up_floats"][idx] if tr["suboptimality"][idx] < target \
+            else None
+
+    ft, fs = floats_to(trace), floats_to(sc)
+    print(f"\nuplink floats to reach {target:.1e}: "
+          f"TAMUNA={ft}  Scaffold={fs}"
+          + (f"  (speedup {fs/ft:.1f}x)" if ft and fs else ""))
+
+
+if __name__ == "__main__":
+    main()

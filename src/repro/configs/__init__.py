@@ -1,0 +1,16 @@
+"""Architecture configs (one module per assigned architecture) + registry."""
+
+from repro.configs.registry import (
+    ARCHS,
+    SHAPES,
+    InputShape,
+    get_config,
+    get_reduced_config,
+    input_specs,
+    list_archs,
+)
+
+__all__ = [
+    "ARCHS", "SHAPES", "InputShape", "get_config", "get_reduced_config",
+    "input_specs", "list_archs",
+]

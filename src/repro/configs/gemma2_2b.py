@@ -1,0 +1,51 @@
+"""gemma2-2b [dense]: 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000
+— local(4096-SWA)+global alternating, attn/final logit softcap, sandwich
+norms, scaled tied embeddings.  [arXiv:2408.00118]"""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256000,
+    sliding_window=4096,
+    local_global_pattern=2,  # even layers local, odd global
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norm=True,
+    scale_embed=True,
+    tie_embeddings=True,
+    act="gelu",
+    dtype=jnp.bfloat16,
+    source="arXiv:2408.00118",
+)
+
+REDUCED = ModelConfig(
+    name="gemma2-2b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab=512,
+    sliding_window=64,
+    local_global_pattern=2,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norm=True,
+    scale_embed=True,
+    tie_embeddings=True,
+    act="gelu",
+    dtype=jnp.float32,
+    source=CONFIG.source,
+)

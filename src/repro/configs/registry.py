@@ -1,0 +1,206 @@
+"""Architecture registry + the 4 assigned input shapes + input_specs().
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the lowered step function — no device
+allocation — exactly what ``jax.jit(...).lower(**specs)`` needs.
+
+Shape semantics (per the assignment):
+  train_4k     seq_len=4096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> prefill_step
+  decode_32k   seq_len=32768   global_batch=128   -> serve_step (1 new token
+                                                     vs seq_len KV cache)
+  long_500k    seq_len=524288  global_batch=1     -> serve_step, requires
+                                                     sub-quadratic attention
+
+long_500k policy (DESIGN.md §4): native for rwkv6 / zamba2 / gemma2 (SWA);
+full-attention archs run a documented sliding-window-override variant
+(window 8192); whisper-tiny is skipped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+ARCHS = {
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose unmodified attention is already sub-quadratic (or windowed)
+NATIVE_SUBQUADRATIC = {"rwkv6-7b", "zamba2-2.7b", "gemma2-2b", "gemma2-9b"}
+# archs for which long_500k is skipped entirely (documented in DESIGN.md)
+LONG_SKIP = {"whisper-tiny"}
+# window applied to full-attention archs for the long_500k variant
+LONG_OVERRIDE_WINDOW = 8192
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str, shape: Optional[str] = None) -> ModelConfig:
+    """Full-size config, with documented long_500k adjustments applied."""
+    cfg: ModelConfig = _module(arch).CONFIG
+    if shape == "long_500k":
+        if arch in LONG_SKIP:
+            raise ValueError(
+                f"{arch}: long_500k is skipped (full-attention enc-dec; "
+                "see DESIGN.md §4)"
+            )
+        if arch not in NATIVE_SUBQUADRATIC:
+            cfg = dataclasses.replace(
+                cfg, sliding_window_override=LONG_OVERRIDE_WINDOW
+            )
+        if arch == "zamba2-2.7b":
+            # window the weight-shared attention block at 500k context
+            cfg = dataclasses.replace(
+                cfg, sliding_window=LONG_OVERRIDE_WINDOW
+            )
+    return cfg
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return _module(arch).REDUCED
+
+
+def supported(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in LONG_SKIP:
+        return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    arch: str,
+    shape_name: str,
+    cfg: Optional[ModelConfig] = None,
+    batch_override: Optional[int] = None,
+    kv_dtype=jnp.bfloat16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the step fn."""
+    cfg = cfg or get_config(arch, shape_name)
+    sh = SHAPES[shape_name]
+    B = batch_override or sh.global_batch
+    T = sh.seq_len
+    i32 = jnp.int32
+
+    if sh.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((B, cfg.n_frames, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, T), i32),
+                "labels": _sds((B, T), i32),
+            }
+        specs = {
+            "tokens": _sds((B, T - cfg.prefix_len), i32),
+            "labels": _sds((B, T - cfg.prefix_len), i32),
+        }
+        if cfg.prefix_len:
+            specs["prefix_embeds"] = _sds(
+                (B, cfg.prefix_len, cfg.d_model), cfg.dtype
+            )
+        return specs
+
+    if sh.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((B, cfg.n_frames, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, T), i32),
+            }
+        specs = {"tokens": _sds((B, T - cfg.prefix_len), i32)}
+        if cfg.prefix_len:
+            specs["prefix_embeds"] = _sds(
+                (B, cfg.prefix_len, cfg.d_model), cfg.dtype
+            )
+        return specs
+
+    # decode: one token against a cache of length T
+    cache = cache_specs(cfg, B, T, kv_dtype)
+    return {
+        "token": _sds((B, 1), i32),
+        "cache": cache,
+        "pos": _sds((), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, kv_dtype):
+    L = cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    f32 = jnp.float32
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": _sds((L, batch, max_seq, kvh, hd), kv_dtype),
+            "v": _sds((L, batch, max_seq, kvh, hd), kv_dtype),
+        }
+    if cfg.family == "rwkv":
+        hd_r = cfg.d_model // cfg.n_heads
+        return {
+            "shift_tm": _sds((L, batch, 1, cfg.d_model), f32),
+            "shift_cm": _sds((L, batch, 1, cfg.d_model), f32),
+            "wkv": _sds((L, batch, cfg.n_heads, hd_r, hd_r), f32),
+        }
+    if cfg.family == "mamba_hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        n_heads = d_inner // cfg.ssm_head_dim
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "conv": _sds((L, batch, 3, d_inner), f32),
+            "ssm": _sds(
+                (L, batch, n_heads, cfg.d_state, cfg.ssm_head_dim), f32
+            ),
+            "k": _sds((n_groups, batch, max_seq, kvh, hd), kv_dtype),
+            "v": _sds((n_groups, batch, max_seq, kvh, hd), kv_dtype),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": _sds((L, batch, max_seq, kvh, hd), kv_dtype),
+            "v": _sds((L, batch, max_seq, kvh, hd), kv_dtype),
+            "xk": _sds((L, batch, cfg.n_frames, kvh, hd), kv_dtype),
+            "xv": _sds((L, batch, cfg.n_frames, kvh, hd), kv_dtype),
+        }
+    raise ValueError(cfg.family)

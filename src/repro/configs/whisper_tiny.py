@@ -1,0 +1,47 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865
+— encoder-decoder; mel-spectrogram + conv frontend STUBBED (precomputed
+frame embeddings, 1500 frames).  [arXiv:2212.04356]
+
+Note: the real model's decoder context is 448; the assigned decode_32k shape
+is exercised mechanically (cache of 32768).  long_500k is SKIPPED for this
+arch (full-attention enc-dec audio decoder; see DESIGN.md §4)."""
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,  # decoder layers
+    n_encoder_layers=4,
+    n_frames=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    rope_theta=None,  # sinusoidal positions
+    tie_embeddings=True,
+    act="gelu",
+    dtype=jnp.bfloat16,
+    source="arXiv:2212.04356",
+)
+
+REDUCED = ModelConfig(
+    name="whisper-tiny-reduced",
+    family="encdec",
+    n_layers=2,
+    n_encoder_layers=2,
+    n_frames=64,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab=512,
+    rope_theta=None,
+    tie_embeddings=True,
+    act="gelu",
+    dtype=jnp.float32,
+    source=CONFIG.source,
+)

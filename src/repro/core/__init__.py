@@ -1,0 +1,15 @@
+"""Core TAMUNA library: the paper's contribution as composable JAX modules.
+
+Layout:
+  masks.py        permutation-template compression masks (paper Fig. 1)
+  compression.py  compressors (permutation / rand-k / top-k) + aggregation
+  problems.py     convex finite-sum problems (paper Section 5 experiments)
+  tamuna.py       Algorithm 1 (round-based federated core)
+  baselines.py    GD / FedAvg / Scaffold / Scaffnew / CompressedScaffnew /
+                  DIANA / EF21 / 5GCS
+  theory.py       Theorem 1/3 rates and Tables 1-2 complexity formulas
+"""
+
+from repro.core import baselines, compression, masks, problems, tamuna, theory
+
+__all__ = ["baselines", "compression", "masks", "problems", "tamuna", "theory"]

@@ -1,0 +1,351 @@
+"""Baselines the paper compares TAMUNA against (Tables 1-2, Figs. 2-3).
+
+All algorithms share the trace-dict interface of ``tamuna.run`` so the
+benchmark harness can overlay them on the same TotalCom axis:
+
+  * GD                  — vanilla distributed gradient descent
+  * FedAvg / LocalSGD   — LT heuristic, no variance reduction (client drift)
+  * Scaffold            — LT + control variates (Karimireddy et al. 2020)
+  * Scaffnew            — accelerated LT (ProxSkip; Mishchenko et al. 2022)
+  * CompressedScaffnew  — LT + permutation CC (Condat et al. 2022a)
+  * DIANA               — CC of gradient differences, rand-k
+  * EF21                — biased CC with error feedback, top-k
+  * 5GCS                — LT + PP via inexact prox / Point-SAGA
+                          (Grudzień et al. 2023)
+
+Uplink/downlink float accounting follows Section 1.2 of the paper: per-round
+floats sent by *one* participating client (UpCom) and broadcast size
+(DownCom); TotalCom = UpCom + alpha * DownCom.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, masks
+from repro.core.problems import FiniteSumProblem
+
+__all__ = [
+    "run_gd",
+    "run_fedavg",
+    "run_scaffold",
+    "run_scaffnew",
+    "run_compressed_scaffnew",
+    "run_diana",
+    "run_ef21",
+    "run_5gcs",
+]
+
+
+def _trace_loop(prob, num_rounds, step, state, key, up_per_round,
+                down_per_round, algo, record_every=1, x_of=None):
+    """Shared driver: run rounds, record suboptimality vs communicated floats."""
+    x_of = x_of or (lambda s: s["x"])
+    step = jax.jit(step)
+    rounds, subopt, up, down = [], [], [], []
+    for r in range(num_rounds):
+        key, rk = jax.random.split(key)
+        state = step(state, rk)
+        if r % record_every == 0 or r == num_rounds - 1:
+            rounds.append(r + 1)
+            subopt.append(float(prob.suboptimality(x_of(state))))
+            up.append((r + 1) * up_per_round)
+            down.append((r + 1) * down_per_round)
+    return dict(
+        algo=algo,
+        rounds=np.array(rounds),
+        suboptimality=np.array(subopt),
+        up_floats=np.array(up),
+        down_floats=np.array(down),
+        state=state,
+    )
+
+
+# --------------------------------------------------------------------------
+# GD
+# --------------------------------------------------------------------------
+def run_gd(prob: FiniteSumProblem, gamma: float, num_rounds: int,
+           seed: int = 0, record_every: int = 1) -> dict:
+    def step(state, key):
+        del key
+        x = state["x"]
+        return {"x": x - gamma * prob.grad(x)}
+
+    return _trace_loop(
+        prob, num_rounds, step, {"x": jnp.zeros(prob.d)},
+        jax.random.key(seed), up_per_round=prob.d, down_per_round=prob.d,
+        algo="gd", record_every=record_every,
+    )
+
+
+# --------------------------------------------------------------------------
+# FedAvg / LocalSGD (heuristic LT; biased fixed point -> client drift)
+# --------------------------------------------------------------------------
+def run_fedavg(prob: FiniteSumProblem, gamma: float, local_steps: int,
+               c: Optional[int] = None, num_rounds: int = 100, seed: int = 0,
+               record_every: int = 1) -> dict:
+    c = c or prob.n
+
+    def step(state, key):
+        x = state["x"]
+        cohort, _ = compression.split_cohort(key, prob.n, c)
+        X = jnp.broadcast_to(x, (c, prob.d))
+
+        def body(X, _):
+            Xn = jnp.zeros((prob.n, prob.d), X.dtype).at[cohort].set(X)
+            G = prob.grad_all_local(Xn)[cohort]
+            return X - gamma * G, None
+
+        X, _ = jax.lax.scan(body, X, None, length=local_steps)
+        return {"x": X.mean(axis=0)}
+
+    return _trace_loop(
+        prob, num_rounds, step, {"x": jnp.zeros(prob.d)},
+        jax.random.key(seed), up_per_round=prob.d, down_per_round=prob.d,
+        algo="fedavg", record_every=record_every,
+    )
+
+
+# --------------------------------------------------------------------------
+# Scaffold (option II control variates)
+# --------------------------------------------------------------------------
+def run_scaffold(prob: FiniteSumProblem, gamma: float, local_steps: int,
+                 c: Optional[int] = None, global_lr: float = 1.0,
+                 num_rounds: int = 100, seed: int = 0,
+                 record_every: int = 1) -> dict:
+    c = c or prob.n
+
+    def step(state, key):
+        x, ci, cg = state["x"], state["ci"], state["cg"]
+        cohort, _ = compression.split_cohort(key, prob.n, c)
+        X = jnp.broadcast_to(x, (c, prob.d))
+        ci_cohort = ci[cohort]
+
+        def body(X, _):
+            Xn = jnp.zeros((prob.n, prob.d), X.dtype).at[cohort].set(X)
+            G = prob.grad_all_local(Xn)[cohort]
+            return X - gamma * (G - ci_cohort + cg), None
+
+        X, _ = jax.lax.scan(body, X, None, length=local_steps)
+        # option II: ci+ = ci - cg + (x - y_i) / (K gamma)
+        ci_new = ci_cohort - cg + (x[None, :] - X) / (local_steps * gamma)
+        dci = ci_new - ci_cohort
+        ci = ci.at[cohort].set(ci_new)
+        cg = cg + dci.sum(axis=0) / prob.n
+        x = x + global_lr * (X.mean(axis=0) - x)
+        return {"x": x, "ci": ci, "cg": cg}
+
+    state = {
+        "x": jnp.zeros(prob.d),
+        "ci": jnp.zeros((prob.n, prob.d)),
+        "cg": jnp.zeros(prob.d),
+    }
+    # Uplink: y_i and ci delta (2d per client, as in the Scaffold paper)
+    return _trace_loop(
+        prob, num_rounds, step, state, jax.random.key(seed),
+        up_per_round=2 * prob.d, down_per_round=2 * prob.d,
+        algo="scaffold", record_every=record_every,
+    )
+
+
+# --------------------------------------------------------------------------
+# Scaffnew / ProxSkip (full participation; prob. p communication)
+# --------------------------------------------------------------------------
+def run_scaffnew(prob: FiniteSumProblem, gamma: float, p: float,
+                 num_iters: int = 1000, seed: int = 0,
+                 record_every: int = 1) -> dict:
+    """Single-loop Scaffnew; a 'round' below is one iteration; float counters
+    are accumulated only on communication iterations."""
+
+    def step(state, key):
+        X, h, up = state["X"], state["h"], state["up"]
+        k1, _ = jax.random.split(key)
+        G = prob.grad_all_local(X)
+        Xhat = X - gamma * G + gamma * h
+        theta = jax.random.bernoulli(k1, p)
+        xbar = Xhat.mean(axis=0)
+        Xnew = jnp.where(theta, jnp.broadcast_to(xbar, X.shape), Xhat)
+        hnew = jnp.where(theta, h + (p / gamma) * (xbar[None, :] - Xhat), h)
+        return {
+            "X": Xnew, "h": hnew,
+            "up": up + jnp.where(theta, prob.d, 0),
+            "x": jnp.where(theta, xbar, state["x"]),
+        }
+
+    state = {
+        "X": jnp.zeros((prob.n, prob.d)),
+        "h": jnp.zeros((prob.n, prob.d)),
+        "up": jnp.zeros((), jnp.int64),
+        "x": jnp.zeros(prob.d),
+    }
+    step_j = jax.jit(step)
+    key = jax.random.key(seed)
+    rounds, subopt, up = [], [], []
+    for t in range(num_iters):
+        key, rk = jax.random.split(key)
+        state = step_j(state, rk)
+        if t % record_every == 0 or t == num_iters - 1:
+            rounds.append(t + 1)
+            subopt.append(float(prob.suboptimality(state["x"])))
+            up.append(int(state["up"]))
+    up = np.array(up)
+    return dict(
+        algo="scaffnew", rounds=np.array(rounds),
+        suboptimality=np.array(subopt), up_floats=up, down_floats=up.copy(),
+        state=state,
+    )
+
+
+# --------------------------------------------------------------------------
+# CompressedScaffnew = Algorithm 2 with full participation (c = n)
+# --------------------------------------------------------------------------
+def run_compressed_scaffnew(prob: FiniteSumProblem, gamma: float, p: float,
+                            s: int, chi: Optional[float] = None,
+                            num_iters: int = 1000, seed: int = 0,
+                            record_every: int = 1) -> dict:
+    n = prob.n
+    chi = chi if chi is not None else n * (s - 1) / (s * (n - 1))
+
+    def step(state, key):
+        X, h, up = state["X"], state["h"], state["up"]
+        k1, k2 = jax.random.split(key)
+        G = prob.grad_all_local(X)
+        Xhat = X - gamma * G + gamma * h
+        theta = jax.random.bernoulli(k1, p)
+        q = masks.sample_mask(k2, prob.d, n, s)  # (d, n)
+        xbar = compression.aggregate_masked(Xhat, q, s)
+        Xnew = jnp.where(theta, jnp.broadcast_to(xbar, X.shape), Xhat)
+        hdelta = (p * chi / gamma) * q.T * (xbar[None, :] - Xhat)
+        hnew = jnp.where(theta, h + hdelta, h)
+        upf = masks.column_nnz(prob.d, n, s)
+        return {
+            "X": Xnew, "h": hnew,
+            "up": up + jnp.where(theta, upf, 0),
+            "down": state["down"] + jnp.where(theta, prob.d, 0),
+            "x": jnp.where(theta, xbar, state["x"]),
+        }
+
+    z = jnp.zeros((), jnp.int64)
+    state = {
+        "X": jnp.zeros((n, prob.d)), "h": jnp.zeros((n, prob.d)),
+        "up": z, "down": z, "x": jnp.zeros(prob.d),
+    }
+    step_j = jax.jit(step)
+    key = jax.random.key(seed)
+    rounds, subopt, up, down = [], [], [], []
+    for t in range(num_iters):
+        key, rk = jax.random.split(key)
+        state = step_j(state, rk)
+        if t % record_every == 0 or t == num_iters - 1:
+            rounds.append(t + 1)
+            subopt.append(float(prob.suboptimality(state["x"])))
+            up.append(int(state["up"]))
+            down.append(int(state["down"]))
+    return dict(
+        algo="compressed_scaffnew", rounds=np.array(rounds),
+        suboptimality=np.array(subopt), up_floats=np.array(up),
+        down_floats=np.array(down), state=state,
+    )
+
+
+# --------------------------------------------------------------------------
+# DIANA with rand-k compression of gradient differences
+# --------------------------------------------------------------------------
+def run_diana(prob: FiniteSumProblem, gamma: float, k: int,
+              alpha_lr: Optional[float] = None, num_rounds: int = 500,
+              seed: int = 0, record_every: int = 1) -> dict:
+    n, d = prob.n, prob.d
+    alpha_lr = alpha_lr if alpha_lr is not None else k / d  # 1/(1+omega)
+
+    def step(state, key):
+        x, h, hbar = state["x"], state["h"], state["hbar"]
+        keys = jax.random.split(key, n)
+        G = prob.grad_all(x)
+        M = jax.vmap(lambda kk, v: compression.rand_k(kk, v, k))(keys, G - h)
+        g_est = hbar + M.mean(axis=0)
+        return {
+            "x": x - gamma * g_est,
+            "h": h + alpha_lr * M,
+            "hbar": hbar + alpha_lr * M.mean(axis=0),
+        }
+
+    state = {
+        "x": jnp.zeros(d), "h": jnp.zeros((n, d)), "hbar": jnp.zeros(d)
+    }
+    return _trace_loop(
+        prob, num_rounds, step, state, jax.random.key(seed),
+        up_per_round=k, down_per_round=prob.d, algo="diana",
+        record_every=record_every,
+    )
+
+
+# --------------------------------------------------------------------------
+# EF21 with top-k compression (biased, error feedback)
+# --------------------------------------------------------------------------
+def run_ef21(prob: FiniteSumProblem, gamma: float, k: int,
+             num_rounds: int = 500, seed: int = 0,
+             record_every: int = 1) -> dict:
+    n, d = prob.n, prob.d
+
+    def step(state, key):
+        del key
+        x, g = state["x"], state["g"]
+        x_new = x - gamma * g.mean(axis=0)
+        Gnew = prob.grad_all(x_new)
+        C = jax.vmap(lambda v: compression.top_k(v, k))(Gnew - g)
+        return {"x": x_new, "g": g + C}
+
+    g0 = prob.grad_all(jnp.zeros(d))  # paper-standard warm start g_i^0
+    state = {"x": jnp.zeros(d), "g": g0}
+    return _trace_loop(
+        prob, num_rounds, step, state, jax.random.key(seed),
+        up_per_round=k, down_per_round=prob.d, algo="ef21",
+        record_every=record_every,
+    )
+
+
+# --------------------------------------------------------------------------
+# 5GCS (Grudzień et al. 2023): Point-SAGA with cohorts and inexact prox
+# computed by an inner loop of local GD steps.
+# --------------------------------------------------------------------------
+def run_5gcs(prob: FiniteSumProblem, gamma: float, c: int,
+             inner_steps: int = 20, inner_lr: Optional[float] = None,
+             num_rounds: int = 200, seed: int = 0,
+             record_every: int = 1) -> dict:
+    """Each round: cohort clients compute prox_{gamma f_i}(z_i) inexactly via
+    ``inner_steps`` GD steps on the strongly-convex prox subproblem, then the
+    server and clients update the SAGA-style duals.  LT = the inner loop;
+    PP = the cohort sampling (the paper's two-level combination)."""
+    n, d = prob.n, prob.d
+    inner_lr = inner_lr if inner_lr is not None else 1.0 / (prob.L + 1.0 / gamma)
+
+    def step(state, key):
+        x, U, ubar = state["x"], state["U"], state["ubar"]
+        cohort, _ = compression.split_cohort(key, n, c)
+        z = x[None, :] + gamma * (U[cohort] - ubar[None, :])  # (c, d)
+
+        def body(Y, _):
+            Yn = jnp.zeros((n, d), Y.dtype).at[cohort].set(Y)
+            G = prob.grad_all_local(Yn)[cohort]
+            return Y - inner_lr * (G + (Y - z) / gamma), None
+
+        Y, _ = jax.lax.scan(body, z, None, length=inner_steps)
+        u_new = (z - Y) / gamma  # ~ grad f_i(prox)
+        du = u_new - U[cohort]
+        U2 = U.at[cohort].set(u_new)
+        ubar2 = ubar + du.sum(axis=0) / n
+        x_new = Y.mean(axis=0)
+        return {"x": x_new, "U": U2, "ubar": ubar2}
+
+    state = {"x": jnp.zeros(d), "U": jnp.zeros((n, d)), "ubar": jnp.zeros(d)}
+    return _trace_loop(
+        prob, num_rounds, step, state, jax.random.key(seed),
+        up_per_round=prob.d, down_per_round=prob.d, algo="5gcs",
+        record_every=record_every,
+    )

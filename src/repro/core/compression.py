@@ -1,0 +1,102 @@
+"""Compression operators used by TAMUNA and the baselines.
+
+* ``permutation``-mask compressor (the paper's own; see masks.py),
+* ``rand_k`` unbiased sparsifier (DIANA baseline),
+* ``top_k`` biased sparsifier (EF21 baseline),
+* aggregation helpers with the exact ``1/s`` reconstruction of Algorithm 1.
+
+Everything operates on flat vectors; pytree plumbing lives in dist/.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+
+__all__ = [
+    "apply_mask",
+    "aggregate_masked",
+    "rand_k",
+    "top_k",
+    "uplink_floats_permutation",
+    "uplink_floats_rand_k",
+]
+
+
+def apply_mask(v: jax.Array, q_col: jax.Array) -> jax.Array:
+    """``C_i(v)``: elementwise multiply by the client's binary mask column."""
+    return v * q_col.astype(v.dtype)
+
+
+def aggregate_masked(xs: jax.Array, q: jax.Array, s: int) -> jax.Array:
+    """Server aggregation ``x_bar = (1/s) sum_i C_i(x_i)`` (Algorithm 1 l.12).
+
+    xs: ``(c, d)`` stacked active-client vectors; q: ``(d, c)`` mask.
+    Exact at consensus: if all rows of ``xs`` are equal, returns that vector
+    exactly (each coordinate has exactly ``s`` owners).
+    """
+    masked = xs * q.T.astype(xs.dtype)  # (c, d)
+    return masked.sum(axis=0) / s
+
+
+def rand_k(key: jax.Array, v: jax.Array, k: int) -> jax.Array:
+    """Unbiased rand-k compressor: keep ``k`` uniform coordinates scaled by
+    ``d/k`` (zero elsewhere).  ``E[rand_k(v)] = v``."""
+    d = v.shape[0]
+    idx = jax.random.choice(key, d, shape=(k,), replace=False)
+    out = jnp.zeros_like(v)
+    return out.at[idx].set(v[idx] * (d / k))
+
+
+def top_k(v: jax.Array, k: int) -> jax.Array:
+    """Biased top-k compressor: keep the k largest-magnitude coordinates."""
+    d = v.shape[0]
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    out = jnp.zeros_like(v)
+    return out.at[idx].set(v[idx])
+
+
+def quantize_stochastic(
+    key: jax.Array, v: jax.Array, bits: int
+) -> jax.Array:
+    """Unbiased per-tensor stochastic-rounding quantizer (symmetric).
+
+    Beyond-paper experiment: the paper's conclusion leaves "quantization on
+    top of the permutation sparsifier" as an open question; this composes an
+    UNBIASED quantizer with the mask, so E[Q(C_i(x))] = C_i(x) and the
+    aggregation remains exact in expectation.  See EXPERIMENTS.md §Beyond.
+    """
+    levels = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(v)) / levels
+    scale = jnp.maximum(scale, 1e-12)
+    z = v / scale
+    low = jnp.floor(z)
+    p = z - low
+    rnd = jax.random.uniform(key, v.shape)
+    q = low + (rnd < p).astype(v.dtype)
+    return q * scale
+
+
+def uplink_floats_permutation(d: int, c: int, s: int) -> int:
+    """Floats uploaded per client per round under the permutation mask."""
+    return masks.column_nnz(d, c, s)
+
+
+def uplink_floats_rand_k(k: int) -> int:
+    return k
+
+
+def split_cohort(
+    key: jax.Array, n: int, c: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Sample the active cohort ``Omega`` (c of n, uniform, no replacement).
+
+    Returns ``(cohort_idx (c,), member_mask (n,))``.
+    """
+    idx = jax.random.choice(key, n, shape=(c,), replace=False)
+    member = jnp.zeros((n,), dtype=bool).at[idx].set(True)
+    return idx, member

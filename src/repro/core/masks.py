@@ -1,0 +1,135 @@
+"""Permutation-based compression masks (TAMUNA / CompressedScaffnew, Fig. 1).
+
+The uplink compressor of TAMUNA multiplies each client's vector elementwise by
+a binary mask ``q_i`` (column ``i`` of a mask matrix ``q in {0,1}^{d x c}``).
+``q`` is a uniformly random column permutation of a fixed *template* with
+exactly ``s`` ones in every row, so that
+
+  * every coordinate ``k`` is uploaded by exactly ``s`` of the ``c`` active
+    clients  (row property — makes the aggregation ``(1/s) sum_i C_i(x_i)``
+    exact when all ``x_i`` are equal: the zero-error-at-consensus property),
+  * every client uploads ``floor(s d / c)`` or ``ceil(s d / c)`` coordinates
+    (column property — the UpCom saving of factor ``~ c/s``).
+
+Two template regimes (paper Fig. 1):
+
+  * ``d >= c/s``  : row ``k`` has ones at columns ``mod(s k + t, c)`` for
+                    ``t = 0..s-1`` (cyclic band).
+  * ``c/s >= d``  : column ``j`` has a single one at row ``mod(j, d)`` for
+                    ``j < d s`` and is empty for ``j >= d s``.
+
+Both are generated *on the fly* from the permutation without materializing
+``q`` — the closed forms below are what the Pallas kernel uses.
+
+A third, TPU-native *blocked* template (``block_template``) keeps the
+exactly-``s``-owners row property but assigns each client **contiguous**
+coordinate slices, turning the sparse uplink into reduce-scatter-shaped
+blocks (see DESIGN.md §3).  It is a row reordering of the cyclic template.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "template_mask",
+    "block_template_mask",
+    "sample_mask",
+    "sample_permutation",
+    "mask_from_permutation",
+    "column_nnz",
+    "owner_band_start",
+]
+
+
+def _validate(d: int, c: int, s: int) -> None:
+    if not (2 <= s <= c):
+        raise ValueError(f"need 2 <= s <= c, got s={s}, c={c}")
+    if d < 1:
+        raise ValueError(f"need d >= 1, got d={d}")
+
+
+def template_mask(d: int, c: int, s: int) -> np.ndarray:
+    """Dense ``{0,1}^{d x c}`` template pattern of paper Fig. 1 (numpy)."""
+    _validate(d, c, s)
+    q = np.zeros((d, c), dtype=np.int8)
+    if d * s >= c:
+        # cyclic band: row k owns columns mod(s k + t, c), t in [0, s)
+        for k in range(d):
+            for t in range(s):
+                q[k, (s * k + t) % c] = 1
+    else:
+        # tall-and-thin regime: column j < d s has one at row mod(j, d)
+        for j in range(d * s):
+            q[j % d, j] = 1
+    return q
+
+
+def block_template_mask(d: int, c: int, s: int) -> np.ndarray:
+    """Contiguous-block template: same row/column properties, but each
+    client's owned coordinates form at most ``s`` contiguous slices.
+
+    Coordinates are partitioned into ``c`` contiguous chunks of size
+    ``ceil(d/c)`` (last chunk ragged); chunk ``j`` is owned by clients
+    ``j, j+1, ..., j+s-1 (mod c)``.  Every coordinate has exactly ``s``
+    owners; every client owns ``s`` chunks (~``s d / c`` coordinates).
+    """
+    _validate(d, c, s)
+    q = np.zeros((d, c), dtype=np.int8)
+    chunk = -(-d // c)  # ceil
+    for k in range(d):
+        j = min(k // chunk, c - 1)
+        for t in range(s):
+            q[k, (j + t) % c] = 1
+    return q
+
+
+def sample_permutation(key: jax.Array, c: int) -> jax.Array:
+    """Uniformly random permutation of ``[c]`` (column permutation)."""
+    return jax.random.permutation(key, c)
+
+
+def mask_from_permutation(
+    perm: jax.Array, d: int, c: int, s: int, *, blocked: bool = False
+) -> jax.Array:
+    """Dense mask ``q[:, i] = template[:, perm[i]]`` as a jnp int8 array.
+
+    Closed-form (no template materialization), jit/vmap friendly.
+    """
+    _validate(d, c, s)
+    cols = perm[None, :]  # (1, c) template column index of each actual column
+    k = jnp.arange(d)[:, None]  # (d, 1)
+    if blocked:
+        chunk = -(-d // c)
+        j = jnp.minimum(k // chunk, c - 1)
+        # owned iff mod(col - j, c) < s
+        q = ((cols - j) % c) < s
+    elif d * s >= c:
+        # owned iff mod(col - s k, c) < s
+        q = ((cols - s * k) % c) < s
+    else:
+        q = (cols < d * s) & ((cols % d) == k)
+    return q.astype(jnp.int8)
+
+
+def sample_mask(
+    key: jax.Array, d: int, c: int, s: int, *, blocked: bool = False
+) -> jax.Array:
+    """Sample the round mask ``q in {0,1}^{d x c}`` (paper Fig. 1(c))."""
+    perm = sample_permutation(key, c)
+    return mask_from_permutation(perm, d, c, s, blocked=blocked)
+
+
+def column_nnz(d: int, c: int, s: int) -> int:
+    """Worst-case uploaded floats per client: ``ceil(s d / c)`` (or 1)."""
+    return max(1, -(-s * d // c))
+
+
+def owner_band_start(k: jax.Array, d: int, c: int, s: int) -> jax.Array:
+    """Start of the cyclic owner band for coordinate ``k`` (``d s >= c``
+    regime): coordinate ``k`` is owned by template columns
+    ``mod(s k + t, c), t in [0, s)``.  Used by the Pallas kernel."""
+    del d
+    return (s * k) % c

@@ -1,0 +1,216 @@
+"""TAMUNA (Algorithm 1) and its single-loop form (Algorithm 2).
+
+This is the *paper-faithful* federated core: an exact implementation of the
+algorithm over a ``FiniteSumProblem`` with
+
+  * LT: ``L^(r) ~ Geometric(p)`` local steps per round (or fixed ``L``),
+  * CC: permutation-mask compression with sparsity ``s`` (masks.py),
+  * PP: uniform cohorts of size ``c``; idle clients do nothing,
+  * optional stochastic gradients of variance ``sigma^2`` (eq. 3).
+
+State layout is stacked for vectorization: ``h`` is ``(n, d)``; only the
+cohort's ``x_i`` exist during a round (paper: idle clients store no model).
+The distributed (mesh/shard_map) version for LM training lives in
+``repro/dist``; this module is the reference semantics and is what the
+convergence tests validate against Theorem 1.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, masks, theory
+from repro.core.problems import FiniteSumProblem
+
+__all__ = ["TamunaConfig", "TamunaState", "init", "round_step", "run", "lyapunov"]
+
+
+@dataclass(frozen=True)
+class TamunaConfig:
+    gamma: float  # local stepsize
+    eta: float  # control-variate stepsize (Remark 2: eta = p * chi)
+    p: float  # inverse expected number of local steps per round
+    c: int  # cohort size (2 <= c <= n)
+    s: int  # compression sparsity index (2 <= s <= c)
+    geometric_L: bool = True  # L^(r) ~ Geom(p); else fixed L = round(1/p)
+    sigma: float = 0.0  # stochastic gradient noise std-dev (per client)
+    blocked_mask: bool = False  # TPU-native contiguous-block template
+    max_L: int = 100_000  # safety cap on geometric draws
+    quantize_bits: int = 0  # BEYOND-PAPER: stochastic-rounding quantization
+    # of the uploaded (masked) values; 0 = off.  Unbiased, so the
+    # aggregation stays exact in expectation (EXPERIMENTS.md §Beyond).
+
+    @staticmethod
+    def tuned(
+        prob: FiniteSumProblem, c: int, alpha: float = 0.0, **over
+    ) -> "TamunaConfig":
+        """Theorem-3 tuned parameters for ``prob`` (eq. 12/14, Remark 2)."""
+        tp = theory.TunedParams.for_problem(
+            prob.mu, prob.L, prob.n, c, prob.d, alpha
+        )
+        cfg = TamunaConfig(gamma=tp.gamma, eta=tp.eta, p=tp.p, c=c, s=tp.s)
+        return replace(cfg, **over) if over else cfg
+
+
+class TamunaState(NamedTuple):
+    x_bar: jax.Array  # (d,) server model estimate
+    h: jax.Array  # (n, d) control variates, sum_i h_i = 0 invariant
+    round: jax.Array  # scalar int
+    total_local_steps: jax.Array  # scalar int (= paper's iteration count t)
+    up_floats: jax.Array  # cumulative uplink floats per client
+    down_floats: jax.Array  # cumulative downlink floats per client
+
+
+def init(prob: FiniteSumProblem, x0: Optional[jax.Array] = None) -> TamunaState:
+    d = prob.d
+    x_bar = jnp.zeros((d,)) if x0 is None else x0
+    zeros = jnp.zeros((prob.n, d))
+    z = jnp.zeros((), jnp.int64)
+    return TamunaState(x_bar, zeros, z, z, z, z)
+
+
+def _local_steps(
+    prob: FiniteSumProblem,
+    cfg: TamunaConfig,
+    x0: jax.Array,  # (c, d) cohort-initial models (all = x_bar)
+    h_cohort: jax.Array,  # (c, d)
+    cohort: jax.Array,  # (c,) indices into [n]
+    L: jax.Array,  # scalar int, number of local steps
+    key: jax.Array,
+) -> jax.Array:
+    """Run ``L`` local steps x <- x - gamma g + gamma h for the cohort."""
+
+    def grads(X, gkey):
+        # Per-client gradient at per-client model; gather the cohort's rows.
+        Xn = jnp.zeros((prob.n, prob.d), X.dtype).at[cohort].set(X)
+        G = prob.grad_all_local(Xn)[cohort]
+        if cfg.sigma > 0.0:
+            G = G + cfg.sigma * jax.random.normal(gkey, G.shape, G.dtype)
+        return G
+
+    def body(carry, _):
+        X, k = carry
+        k, gk = jax.random.split(k)
+        G = grads(X, gk)
+        X = X - cfg.gamma * G + cfg.gamma * h_cohort
+        return (X, k), None
+
+    # Dynamic trip count via fori_loop (L is data-dependent under jit).
+    def fbody(i, carry):
+        del i
+        (X, k), _ = body(carry, None)
+        return (X, k)
+
+    X, _ = jax.lax.fori_loop(0, L, fbody, (x0, key))
+    return X
+
+
+def round_step(
+    prob: FiniteSumProblem, cfg: TamunaConfig, state: TamunaState, key: jax.Array
+) -> TamunaState:
+    """One TAMUNA round (Algorithm 1 lines 3-18), jit-compatible."""
+    k_cohort, k_L, k_mask, k_grad = jax.random.split(key, 4)
+    cohort, _member = compression.split_cohort(k_cohort, prob.n, cfg.c)
+
+    if cfg.geometric_L:
+        u = jax.random.uniform(k_L, (), minval=1e-12, maxval=1.0)
+        L = jnp.minimum(
+            1 + jnp.floor(jnp.log(u) / jnp.log1p(-cfg.p)).astype(jnp.int64),
+            cfg.max_L,
+        )
+    else:
+        L = jnp.asarray(max(1, round(1.0 / cfg.p)), jnp.int64)
+
+    h_cohort = state.h[cohort]
+    x0 = jnp.broadcast_to(state.x_bar, (cfg.c, prob.d))
+    X = _local_steps(prob, cfg, x0, h_cohort, cohort, L, k_grad)
+
+    # UpCom: permutation mask q (d, c); aggregation x_bar = (1/s) sum C_i(x_i)
+    q = masks.sample_mask(
+        k_mask, prob.d, cfg.c, cfg.s, blocked=cfg.blocked_mask
+    )
+    X_up = X
+    if cfg.quantize_bits:
+        qkeys = jax.random.split(jax.random.fold_in(k_mask, 7), cfg.c)
+        X_up = jax.vmap(
+            lambda kk, v: compression.quantize_stochastic(
+                kk, v, cfg.quantize_bits
+            )
+        )(qkeys, X)
+    x_bar_new = compression.aggregate_masked(X_up, q, cfg.s)
+
+    # Control-variate update (line 14) for the cohort only, masked coords only
+    delta = (cfg.eta / cfg.gamma) * q.T.astype(X.dtype) * (
+        x_bar_new[None, :] - X
+    )
+    h = state.h.at[cohort].add(delta)
+
+    up = compression.uplink_floats_permutation(prob.d, cfg.c, cfg.s)
+    return TamunaState(
+        x_bar=x_bar_new,
+        h=h,
+        round=state.round + 1,
+        total_local_steps=state.total_local_steps + L,
+        up_floats=state.up_floats + up,
+        down_floats=state.down_floats + prob.d,
+    )
+
+
+def lyapunov(
+    prob: FiniteSumProblem, cfg: TamunaConfig, state: TamunaState
+) -> jax.Array:
+    """Paper eq. (6) Lyapunov function (with chi recovered from eta = p chi)."""
+    chi = cfg.eta / cfg.p
+    h_star = prob.h_star()
+    term_x = prob.n / cfg.gamma * jnp.sum((state.x_bar - prob.x_star) ** 2)
+    term_h = (
+        cfg.gamma
+        / (cfg.p**2 * chi)
+        * (prob.n - 1)
+        / (cfg.s - 1)
+        * jnp.sum((state.h - h_star) ** 2)
+    )
+    return term_x + term_h
+
+
+def run(
+    prob: FiniteSumProblem,
+    cfg: TamunaConfig,
+    num_rounds: int,
+    seed: int = 0,
+    record_every: int = 1,
+    x0: Optional[jax.Array] = None,
+) -> dict:
+    """Drive ``num_rounds`` rounds; return a trace dict for plotting/tests."""
+    state = init(prob, x0)
+    step = jax.jit(partial(round_step, prob, cfg))
+    key = jax.random.key(seed)
+
+    rounds, subopt, up, down, steps, lyap = [], [], [], [], [], []
+    for r in range(num_rounds):
+        key, rk = jax.random.split(key)
+        state = step(state, rk)
+        if r % record_every == 0 or r == num_rounds - 1:
+            rounds.append(r + 1)
+            subopt.append(float(prob.suboptimality(state.x_bar)))
+            up.append(int(state.up_floats))
+            down.append(int(state.down_floats))
+            steps.append(int(state.total_local_steps))
+            if prob.x_star is not None:
+                lyap.append(float(lyapunov(prob, cfg, state)))
+    return dict(
+        algo="tamuna",
+        rounds=np.array(rounds),
+        suboptimality=np.array(subopt),
+        up_floats=np.array(up),
+        down_floats=np.array(down),
+        local_steps=np.array(steps),
+        lyapunov=np.array(lyap),
+        state=state,
+    )

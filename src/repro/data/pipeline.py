@@ -1,0 +1,112 @@
+"""Synthetic-data pipeline with per-client sharding.
+
+Offline container: token streams are generated, not read from disk, but the
+pipeline has the real structure — deterministic per-client shard keys
+(clients see DISJOINT, heterogeneous data: the paper's no-similarity
+regime), per-local-step batching, and device placement to the dp mesh axes.
+
+The token generator is a small order-2 Markov chain per client (distinct
+transition tables), which gives a learnable but heterogeneous distribution —
+loss curves actually go down, unlike uniform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist import sharding
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int = 256
+    per_client_batch: int = 4
+    vocab: int = 512
+    seed: int = 0
+    heterogeneity: float = 1.0  # 0 = iid clients, 1 = fully distinct chains
+    n_clients: Optional[int] = None  # default: from the mesh (1 if no mesh)
+
+
+class SyntheticTokenPipeline:
+    """Yields batches with leaves shaped (n_clients, per_client_batch, seq)."""
+
+    def __init__(self, dcfg: DataConfig, model_cfg: ModelConfig,
+                 mesh: Optional[Mesh] = None):
+        self.dcfg = dcfg
+        self.cfg = model_cfg
+        self.mesh = mesh
+        self.n = dcfg.n_clients or (
+            sharding.n_clients(mesh) if mesh is not None else 1
+        )
+        rng = np.random.default_rng(dcfg.seed)
+        v = min(dcfg.vocab, model_cfg.vocab)
+        self.v = v
+        # per-client bigram transition logits, interpolated toward a shared
+        # table by (1 - heterogeneity)
+        shared = rng.normal(size=(v, v)) * 2.0
+        per = rng.normal(size=(self.n, v, v)) * 2.0
+        mix = dcfg.heterogeneity
+        logits = mix * per + (1 - mix) * shared[None]
+        z = np.exp(logits - logits.max(axis=-1, keepdims=True))
+        self.trans = (z / z.sum(axis=-1, keepdims=True)).astype(np.float64)
+        self.rng = rng
+        self._sharding = (
+            NamedSharding(mesh, sharding.train_batch_pspec(mesh))
+            if mesh is not None else None
+        )
+
+    def _sample_chain(self, client: int, shape) -> np.ndarray:
+        b, t = shape
+        out = np.empty((b, t), np.int32)
+        state = self.rng.integers(0, self.v, size=b)
+        for j in range(t):
+            out[:, j] = state
+            probs = self.trans[client, state]
+            cum = probs.cumsum(axis=-1)
+            u = self.rng.random((b, 1))
+            state = (u < cum).argmax(axis=-1)
+        return out
+
+    def next_batch(self) -> Dict[str, jax.Array]:
+        d = self.dcfg
+        toks = np.stack([
+            self._sample_chain(i, (d.per_client_batch, d.seq_len + 1))
+            for i in range(self.n)
+        ])
+        batch = {
+            "tokens": jnp.asarray(toks[:, :, :-1]),
+            "labels": jnp.asarray(toks[:, :, 1:]),
+        }
+        if self.cfg.prefix_len:
+            pe = self.rng.normal(
+                size=(self.n, d.per_client_batch, self.cfg.prefix_len,
+                      self.cfg.d_model)
+            ).astype(np.float32)
+            batch["prefix_embeds"] = jnp.asarray(pe, self.cfg.dtype)
+        if self.cfg.family == "encdec":
+            fr = self.rng.normal(
+                size=(self.n, d.per_client_batch, self.cfg.n_frames,
+                      self.cfg.d_model)
+            ).astype(np.float32)
+            batch["frames"] = jnp.asarray(fr, self.cfg.dtype)
+        if self._sharding is not None:
+            sh = {
+                k: NamedSharding(self.mesh,
+                                 jax.sharding.PartitionSpec(
+                                     sharding.dp_axes(self.mesh),
+                                     *([None] * (v.ndim - 1))))
+                for k, v in batch.items()
+            }
+            batch = {k: jax.device_put(v, sh[k]) for k, v in batch.items()}
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute/bandwidth hot-spots.
+
+  compress.py     fused TAMUNA mask-generate-and-apply (C_i), VPU/bandwidth
+  local_step.py   fused local step x - gamma*(g - h), 3 reads + 1 write
+  decode_attn.py  flash-decode GQA attention over KV-cache blocks (MXU)
+
+``ops.py`` holds the jit'd wrappers (auto interpret-mode off-TPU);
+``ref.py`` the pure-jnp oracles the tests sweep against.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

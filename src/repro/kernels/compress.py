@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused TAMUNA mask-generate-and-apply (C_i).
+
+The permutation mask is never materialized in HBM: each VMEM tile computes
+its coordinates' ownership from the cyclic-band closed form (masks.py /
+paper Fig. 1) and multiplies in place.  VPU-only (no MXU): the kernel is
+bandwidth-bound by design — 1 read + 1 write per element instead of the
+3 reads + 1 write a materialized-mask path costs.
+
+Grid: 1-D over coordinate blocks; the client's mask column (``slot``) and
+the cohort/sparsity constants arrive via scalar prefetch (SMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compress_kernel(slot_ref, x_ref, o_ref, *, c: int, s: int, block: int):
+    i = pl.program_id(0)
+    slot = slot_ref[0]
+    k = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) + i * block
+    owned = (((slot - s * (k % c)) % c) < s) & (slot < c)
+    x = x_ref[...]
+    o_ref[...] = jnp.where(owned, x, jnp.zeros((), x.dtype))
+
+
+def compress(
+    x: jax.Array,  # (d,) flat
+    slot: jax.Array,  # (1,) int32 mask column (>= c -> inactive, zeros)
+    c: int,
+    s: int,
+    *,
+    block: int = 4096,
+    interpret: bool = True,
+) -> jax.Array:
+    d = x.shape[0]
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    n_blocks = x.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_compress_kernel, c=c, s=s, block=block),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # slot, broadcast to all tiles
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(slot, x)
+    return out[:d] if pad else out

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_ref(
+    x: jax.Array,  # (d,) flat vector (any leading shape flattened by caller)
+    slot: jax.Array,  # scalar int32: this client's mask column, >= c if idle
+    c: int,
+    s: int,
+) -> jax.Array:
+    """TAMUNA permutation-mask compressor C_i(x): cyclic-band template.
+
+    Coordinate k is owned by columns mod(s*k + t, c), t in [0, s).
+    """
+    d = x.shape[0]
+    k = jnp.arange(d, dtype=jnp.int32)
+    owned = (((slot - s * (k % c)) % c) < s) & (slot < c)
+    return jnp.where(owned, x, jnp.zeros((), x.dtype))
+
+
+def fused_local_step_ref(
+    x: jax.Array, g: jax.Array, h: jax.Array, gamma: float
+) -> jax.Array:
+    """TAMUNA local step x <- x - gamma*g + gamma*h (f32 accumulate)."""
+    xf = x.astype(jnp.float32)
+    out = xf - gamma * g.astype(jnp.float32) + gamma * h.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (b, h, hd) single-position queries
+    k: jax.Array,  # (b, S, kvh, hd) cache keys
+    v: jax.Array,  # (b, S, kvh, hd) cache values
+    pos: jax.Array,  # scalar int32: index of the newest token (inclusive)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-token GQA decode attention over a KV cache (f32 softmax)."""
+    b, h, hd = q.shape
+    S, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window is not None:
+        mask &= kpos > pos - window
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import; import it only in a
+dedicated process (python -m repro.launch.dryrun).  This package init
+deliberately does NOT import it.
+"""
+
+from repro.launch import mesh, steps
+
+__all__ = ["mesh", "steps"]

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Called as a FUNCTION so importing this module never touches jax device
+state; the dry-run sets --xla_force_host_platform_device_count=512 before
+any jax import and then calls these.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 (one v5e pod's 256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 4, model: int = 2) -> Mesh:
+    """Small mesh over forced-host devices for tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

@@ -1,0 +1,236 @@
+"""Step builders: assemble (step_fn, in_shardings, input ShapeDtypeStructs)
+for every (architecture x input-shape x mesh) combination.
+
+Used by the multi-pod dry-run, the trainers, and the integration tests, so
+the thing we dry-run is EXACTLY the thing we train/serve.
+
+Train shapes lower TWO functions (Algorithm 2's two iteration types):
+  local   one TAMUNA local step over the global batch — the common case,
+          zero cross-client collectives,
+  comm    the compressed-aggregation + control-variate round end — all of
+          the paper's communication lives here.
+Roofline amortizes: round = E[L] * local + comm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import model_api, sharding, tamuna_dp
+from repro.models.transformer import ModelConfig
+
+
+class Built(NamedTuple):
+    name: str
+    fn: Callable
+    in_specs: Tuple  # ShapeDtypeStructs (positional)
+    in_shardings: Tuple
+    out_shardings: Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def dryrun_model_cfg(arch: str, shape: str) -> ModelConfig:
+    """Full-size config with bf16 master params (fits v5e HBM; DESIGN.md §5)
+    and flash-attention internals time-sharded over `model` (§Perf iter 2 —
+    kv_heads < 16 otherwise makes GSPMD shard head_dim and all-reduce the
+    attention blocks)."""
+    cfg = registry.get_config(arch, shape)
+    return dataclasses.replace(
+        cfg, param_dtype=jnp.bfloat16, flash_t_shard_axis="model"
+    )
+
+
+import os
+
+
+def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
+                       s: int = 4) -> tamuna_dp.DistTamunaConfig:
+    n = sharding.n_clients(mesh)
+    c = n if uplink == "block_rs" else max(2, (3 * n) // 4)
+    return tamuna_dp.DistTamunaConfig(
+        gamma=0.02, c=c, s=min(s, c), p=0.25, uplink=uplink,
+        microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1")),
+    )
+
+
+# --------------------------------------------------------------------------
+# train steps
+# --------------------------------------------------------------------------
+
+
+def build_train_steps(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    tcfg: Optional[tamuna_dp.DistTamunaConfig] = None,
+    cfg: Optional[ModelConfig] = None,
+) -> Dict[str, Built]:
+    cfg = cfg or dryrun_model_cfg(arch, shape_name)
+    tcfg = tcfg or default_tamuna_cfg(mesh)
+    sh = registry.SHAPES[shape_name]
+    n = sharding.n_clients(mesh)
+    assert sh.global_batch % n == 0, (sh.global_batch, n)
+    bs = sh.global_batch // n
+    T = sh.seq_len
+
+    # state specs via eval_shape: no device allocation
+    state_struct = jax.eval_shape(
+        lambda: tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+    )
+    state_pspec = tamuna_dp.state_pspecs(state_struct, cfg, mesh)
+    state_shard = _ns(mesh, state_pspec)
+
+    # per-client batch structs
+    batch_struct: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch_struct["frames"] = _sds(
+            (n, bs, cfg.n_frames, cfg.d_model), cfg.dtype
+        )
+        batch_struct["tokens"] = _sds((n, bs, T), jnp.int32)
+        batch_struct["labels"] = _sds((n, bs, T), jnp.int32)
+    else:
+        Tt = T - cfg.prefix_len
+        batch_struct["tokens"] = _sds((n, bs, Tt), jnp.int32)
+        batch_struct["labels"] = _sds((n, bs, Tt), jnp.int32)
+        if cfg.prefix_len:
+            batch_struct["prefix_embeds"] = _sds(
+                (n, bs, cfg.prefix_len, cfg.d_model), cfg.dtype
+            )
+    da = sharding.dp_axes(mesh)
+    batch_pspec = {
+        k: P(da, *([None] * (v.ndim - 1))) for k, v in batch_struct.items()
+    }
+    batch_shard = _ns(mesh, batch_pspec)
+
+    local_raw = tamuna_dp.make_local_step(cfg, tcfg)
+
+    def local_fn(state, batch):
+        return local_raw(state, **batch)
+
+    comm_raw = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+
+    local = Built(
+        name=f"{arch}:{shape_name}:local",
+        fn=local_fn,
+        in_specs=(state_struct, batch_struct),
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, None),
+    )
+    comm = Built(
+        name=f"{arch}:{shape_name}:comm",
+        fn=comm_raw,
+        in_specs=(state_struct, _sds((2,), jnp.uint32)),
+        in_shardings=(state_shard, NamedSharding(mesh, P())),
+        out_shardings=state_shard,
+    )
+    return {"local": local, "comm": comm}
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+
+def build_prefill_step(
+    arch: str, shape_name: str, mesh: Mesh,
+    cfg: Optional[ModelConfig] = None,
+) -> Built:
+    cfg = cfg or dryrun_model_cfg(arch, shape_name)
+    sh = registry.SHAPES[shape_name]
+    B, T = sh.global_batch, sh.seq_len
+
+    params_struct = jax.eval_shape(
+        lambda: model_api.init(jax.random.key(0), cfg)
+    )
+    params_shard = _ns(mesh, sharding.params_pspecs(params_struct, cfg, mesh))
+
+    inputs: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        inputs["frames"] = _sds((B, cfg.n_frames, cfg.d_model), cfg.dtype)
+        inputs["tokens"] = _sds((B, T), jnp.int32)
+    else:
+        inputs["tokens"] = _sds((B, T - cfg.prefix_len), jnp.int32)
+        if cfg.prefix_len:
+            inputs["prefix_embeds"] = _sds(
+                (B, cfg.prefix_len, cfg.d_model), cfg.dtype
+            )
+    in_pspec = sharding.prefill_input_pspecs(cfg, mesh)
+    in_pspec = {k: in_pspec[k] for k in inputs}
+    in_shard = _ns(mesh, in_pspec)
+
+    def prefill_fn(params, inputs):
+        return model_api.prefill(params, cfg, **inputs)
+
+    return Built(
+        name=f"{arch}:{shape_name}:prefill",
+        fn=prefill_fn,
+        in_specs=(params_struct, inputs),
+        in_shardings=(params_shard, in_shard),
+        out_shardings=None,
+    )
+
+
+def build_decode_step(
+    arch: str, shape_name: str, mesh: Mesh,
+    cfg: Optional[ModelConfig] = None,
+) -> Built:
+    cfg = cfg or dryrun_model_cfg(arch, shape_name)
+    sh = registry.SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+
+    params_struct = jax.eval_shape(
+        lambda: model_api.init(jax.random.key(0), cfg)
+    )
+    # serving params: F-shard MoE experts so gather-dispatch indexes locally
+    params_shard = _ns(mesh, sharding.params_pspecs(
+        params_struct, cfg, mesh, moe_expert_parallel=False
+    ))
+    cache_struct = jax.eval_shape(
+        lambda: model_api.make_cache(cfg, B, S)
+    )
+    serve_pspecs = sharding.serve_input_pspecs(cfg, mesh, B)
+    cache_shard = _ns(mesh, serve_pspecs["cache"])
+    token_shard = NamedSharding(mesh, serve_pspecs["token"])
+    pos_shard = NamedSharding(mesh, P())
+
+    def serve_fn(params, token, cache, pos):
+        return model_api.decode(params, cfg, token, cache, pos)
+
+    return Built(
+        name=f"{arch}:{shape_name}:decode",
+        fn=serve_fn,
+        in_specs=(
+            params_struct,
+            _sds((B, 1), jnp.int32),
+            cache_struct,
+            _sds((), jnp.int32),
+        ),
+        in_shardings=(params_shard, token_shard, cache_shard, pos_shard),
+        out_shardings=(None, cache_shard),
+    )
+
+
+def build(arch: str, shape_name: str, mesh: Mesh, **kw) -> Dict[str, Built]:
+    kind = registry.SHAPES[shape_name].kind
+    if kind == "train":
+        return build_train_steps(arch, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return {"prefill": build_prefill_step(arch, shape_name, mesh, **kw)}
+    return {"decode": build_decode_step(arch, shape_name, mesh, **kw)}

@@ -1,0 +1,47 @@
+"""Minimal metrics logging: CSV + stdout, no external deps."""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricLogger:
+    def __init__(self, path: Optional[str] = None, print_every: int = 1):
+        self.path = path
+        self.print_every = print_every
+        self._writer = None
+        self._file = None
+        self._t0 = time.time()
+        self._n = 0
+
+    def log(self, step: int, metrics: Dict[str, Any]) -> None:
+        row = {"step": step, "wall_s": round(time.time() - self._t0, 3)}
+        row.update({
+            k: (float(v) if hasattr(v, "__float__") else v)
+            for k, v in metrics.items()
+        })
+        if self.path:
+            if self._writer is None:
+                os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+                self._file = open(self.path, "w", newline="")
+                self._writer = csv.DictWriter(
+                    self._file, fieldnames=list(row)
+                )
+                self._writer.writeheader()
+            self._writer.writerow(row)
+            self._file.flush()
+        self._n += 1
+        if self._n % self.print_every == 0:
+            msg = " ".join(
+                f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in row.items()
+            )
+            print(msg, file=sys.stderr)
+
+    def close(self) -> None:
+        if self._file:
+            self._file.close()

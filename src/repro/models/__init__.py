@@ -1,0 +1,9 @@
+"""Functional model zoo: layers, MoE, SSM (Mamba2), RWKV-6, unified
+transformer, and the Whisper-style encoder-decoder."""
+
+from repro.models import encdec, layers, moe, rwkv, ssm, transformer
+from repro.models.transformer import ModelConfig
+
+__all__ = [
+    "encdec", "layers", "moe", "rwkv", "ssm", "transformer", "ModelConfig",
+]

@@ -1,0 +1,239 @@
+"""Whisper-style encoder-decoder transformer (arXiv:2212.04356).
+
+Per the assignment carve-out, the audio frontend (log-mel spectrogram +
+2-layer conv downsampler) is a STUB: ``input_specs`` provides precomputed
+frame embeddings ``(batch, n_frames, d_model)`` and this module implements
+the transformer backbone that consumes them:
+
+  encoder : bidirectional self-attention stack over frames (sinusoidal pos)
+  decoder : causal self-attention + cross-attention to encoder output
+
+Decode supports a KV cache for the self-attention; cross-attention K/V are
+precomputed once from the encoder output and kept in the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.transformer import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def sinusoidal_positions(t: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(
+        dtype
+    )
+
+
+def _init_xattn_block(key, cfg: ModelConfig, cross: bool) -> Params:
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "ln_attn": layers.init_layernorm(cfg.d_model, pd),
+        "attn": layers.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            pd, qkv_bias=True,
+        ),
+        "ln_ff": layers.init_layernorm(cfg.d_model, pd),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, pd, gated=False),
+    }
+    if cross:
+        p["ln_x"] = layers.init_layernorm(cfg.d_model, pd)
+        p["xattn"] = layers.init_attention(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            pd, qkv_bias=True,
+        )
+    return p
+
+
+def init_encdec_params(key, cfg: ModelConfig, n_encoder_layers: int) -> Params:
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": layers.embed_init(
+            kt, cfg.padded_vocab, cfg.d_model, cfg.param_dtype
+        ),
+        "enc_blocks": jax.vmap(
+            lambda k: _init_xattn_block(k, cfg, cross=False)
+        )(enc_keys),
+        "enc_norm": layers.init_layernorm(cfg.d_model, cfg.param_dtype),
+        "dec_blocks": jax.vmap(
+            lambda k: _init_xattn_block(k, cfg, cross=True)
+        )(dec_keys),
+        "final_norm": layers.init_layernorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (b, T_frames, d_model) stub frontend output."""
+    x = frames.astype(cfg.dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, cfg.dtype)[None]
+
+    def body(x, bp):
+        h = layers.layernorm(bp["ln_attn"], x)
+        h = layers.attention_fwd(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=None, causal=False,
+            t_shard_axis=cfg.flash_t_shard_axis,
+        )
+        x = x + h
+        h = layers.layernorm(bp["ln_ff"], x)
+        x = x + layers.mlp_fwd(bp["mlp"], h, act="gelu")
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.layernorm(params["enc_norm"], x)
+
+
+def _cross_attend(bp, x, enc_kv_or_out, cfg, precomputed: bool):
+    b, t, _ = x.shape
+    h = layers.layernorm(bp["ln_x"], x)
+    q = layers.matmul(h, bp["xattn"]["wq"]) + bp["xattn"]["bq"].astype(h.dtype)
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim_)
+    if precomputed:
+        k, v = enc_kv_or_out
+    else:
+        enc = enc_kv_or_out
+        te = enc.shape[1]
+        k = (layers.matmul(enc, bp["xattn"]["wk"])
+             + bp["xattn"]["bk"].astype(enc.dtype)).reshape(
+            b, te, cfg.n_kv_heads, cfg.head_dim_
+        )
+        v = (layers.matmul(enc, bp["xattn"]["wv"])
+             + bp["xattn"]["bv"].astype(enc.dtype)).reshape(
+            b, te, cfg.n_kv_heads, cfg.head_dim_
+        )
+    out = layers.attention_scores(q, k, v, causal=False)
+    out = out.reshape(b, t, cfg.n_heads * cfg.head_dim_)
+    return layers.matmul(out, bp["xattn"]["wo"])
+
+
+def decode_train(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, enc_out: jax.Array
+) -> jax.Array:
+    """Teacher-forced decoder forward; returns hidden states (b, t, d)."""
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, cfg.dtype)[None]
+
+    def body(x, bp):
+        h = layers.layernorm(bp["ln_attn"], x)
+        h = layers.attention_fwd(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=None, causal=True,
+            t_shard_axis=cfg.flash_t_shard_axis,
+        )
+        x = x + h
+        x = x + _cross_attend(bp, x, enc_out, cfg, precomputed=False)
+        h = layers.layernorm(bp["ln_ff"], x)
+        x = x + layers.mlp_fwd(bp["mlp"], h, act="gelu")
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return layers.layernorm(params["final_norm"], x)
+
+
+def loss_fn(
+    params: Params, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array,
+    labels: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, enc)
+    xent = layers.chunked_softmax_xent(
+        h, params["embed"].T, labels, chunk=cfg.xent_chunk,
+        valid_vocab=cfg.vocab,
+    )
+    return xent, {"xent": xent}
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, n_frames: int,
+    kv_dtype=jnp.bfloat16,
+) -> Params:
+    L = cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((L, batch, max_seq, kvh, hd), kv_dtype),
+        "v": jnp.zeros((L, batch, max_seq, kvh, hd), kv_dtype),
+        "xk": jnp.zeros((L, batch, n_frames, kvh, hd), kv_dtype),
+        "xv": jnp.zeros((L, batch, n_frames, kvh, hd), kv_dtype),
+    }
+
+
+def precompute_cross_kv(
+    params: Params, cfg: ModelConfig, enc_out: jax.Array, cache: Params
+) -> Params:
+    """Fill the cross-attention K/V entries of the cache from encoder output."""
+    b, te, _ = enc_out.shape
+
+    def per_layer(bp):
+        k = (layers.matmul(enc_out, bp["xattn"]["wk"])
+             + bp["xattn"]["bk"].astype(enc_out.dtype)).reshape(
+            b, te, cfg.n_kv_heads, cfg.head_dim_
+        )
+        v = (layers.matmul(enc_out, bp["xattn"]["wv"])
+             + bp["xattn"]["bv"].astype(enc_out.dtype)).reshape(
+            b, te, cfg.n_kv_heads, cfg.head_dim_
+        )
+        return k, v
+
+    xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
+    return {**cache, "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype)}
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    b = token.shape[0]
+    x = params["embed"].astype(cfg.dtype)[token]
+    # single-position sinusoid computed directly from the scalar pos
+    dim = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(
+        10000.0, 2 * dim / cfg.d_model
+    )
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)]).astype(cfg.dtype)
+    x = x + pe[None, None, :]
+
+    def body(x, xs):
+        bp, ck, cv, xk, xv = xs
+        h = layers.layernorm(bp["ln_attn"], x)
+        h, ck, cv = layers.attention_decode(
+            bp["attn"], h, ck, cv, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=None,
+        )
+        x = x + h
+        x = x + _cross_attend(
+            bp, x, (xk.astype(x.dtype), xv.astype(x.dtype)), cfg,
+            precomputed=True,
+        )
+        h = layers.layernorm(bp["ln_ff"], x)
+        x = x + layers.mlp_fwd(bp["mlp"], h, act="gelu")
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["xk"],
+         cache["xv"]),
+    )
+    h = layers.layernorm(params["final_norm"], x)[:, 0]
+    logits = jax.lax.dot_general(
+        h, params["embed"].T.astype(h.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, : cfg.vocab]
+    return logits, {**cache, "k": ks, "v": vs}

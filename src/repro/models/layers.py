@@ -1,0 +1,472 @@
+"""Functional building blocks shared by every architecture in the zoo.
+
+Params are plain nested dicts of ``jnp`` arrays (no flax).  Every module is a
+pair ``init_*(key, ...) -> params`` / ``*_fwd(params, x, ...) -> y`` so the
+whole model is a pytree the distribution layer (and TAMUNA itself, which
+masks/aggregates arbitrary pytrees) can shard leaf-by-leaf.
+
+Conventions:
+  * activations computed in ``cfg.dtype`` (bf16 by default), params stored in
+    ``cfg.param_dtype`` (f32), matmuls accumulate in f32
+    (``preferred_element_type``),
+  * attention is GQA with optional RoPE, sliding window and logit softcap
+    (covers stablelm / gemma2 / deepseek / qwen / internlm variants),
+  * decode path takes a single token + KV cache slice-update.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.asarray(
+        scale, dtype
+    )
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), dtype) * jnp.asarray(
+        0.02, dtype
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """bf16-safe matmul with f32 accumulation, result cast back to x.dtype.
+
+    (§Perf iteration 3 tried preferred_element_type=x.dtype to avoid f32
+    activations in HBM; the byte proxy showed a net REGRESSION — the casts
+    became separate fusion outputs — so f32 accumulation stays.  See
+    EXPERIMENTS.md §Perf.)"""
+    return jax.lax.dot_general(
+        x,
+        w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32
+    )
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+
+def init_attention(
+    key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, dtype,
+    qkv_bias: bool = False,
+) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _qkv(params, x, n_heads, n_kv_heads, head_dim):
+    b, t, _ = x.shape
+    q = matmul(x, params["wq"])
+    k = matmul(x, params["wk"])
+    v = matmul(x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, t, n_heads, head_dim)
+    k = k.reshape(b, t, n_kv_heads, head_dim)
+    v = v.reshape(b, t, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def attention_scores(
+    q: jax.Array,  # (b, tq, h, hd)
+    k: jax.Array,  # (b, tk, kvh, hd)
+    v: jax.Array,  # (b, tk, kvh, hd)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    sliding_window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference dense attention (the Pallas decode kernel mirrors this)."""
+    b, tq, h, hd = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, tq, kvh, group, hd)
+    logits = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    logits = softcap(logits, attn_softcap)
+
+    q_pos = jnp.arange(tq) + q_offset  # (tq,)
+    k_pos = jnp.arange(tk)  # (tk,)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    if kv_valid_len is not None:
+        mask &= k_pos[None, :] < kv_valid_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, tq, h, hd)
+
+
+def attention_fwd(
+    params: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    t_shard_axis: Optional[str] = None,
+) -> jax.Array:
+    b, t, _ = x.shape
+    q, k, v = _qkv(params, x, n_heads, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        pos = positions if positions is not None else jnp.arange(t)[None, :]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if t >= FLASH_THRESHOLD:
+        out = flash_attention(
+            q, k, v, causal=causal,
+            window=(jnp.asarray(sliding_window)
+                    if sliding_window is not None else None),
+            attn_softcap=attn_softcap,
+            t_shard_axis=t_shard_axis,
+        )
+    else:
+        out = attention_scores(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            attn_softcap=attn_softcap,
+        )
+    return matmul(out.reshape(b, t, n_heads * head_dim), params["wo"])
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (b, 1, d_model)
+    cache_k: jax.Array,  # (b, S, kvh, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar: index where the new token goes (= cur length)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = 10000.0,
+    sliding_window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    attend_fn=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode with in-place cache update.
+
+    ``attend_fn(q, k, v, pos)`` may be supplied by the distribution layer to
+    run the sequence-parallel (LSE-combined) or Pallas attention instead of
+    the dense reference.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(params, x, n_heads, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        pk = jnp.full((b, 1), pos)
+        q = apply_rope(q, pk, rope_theta)
+        k = apply_rope(k, pk, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    if attend_fn is not None:
+        out = attend_fn(q, cache_k, cache_v, pos)
+    else:
+        out = attention_scores(
+            q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+            causal=True, q_offset=pos, sliding_window=sliding_window,
+            attn_softcap=attn_softcap, kv_valid_len=pos + 1,
+        )
+    y = matmul(out.reshape(b, 1, n_heads * head_dim), params["wo"])
+    return y, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# chunked (flash-style) attention — §Perf iteration 1
+#
+# The dense reference materializes a (b, kvh, g, t, s) f32 logits tensor;
+# at 32k context that is hundreds of GB and forces the SPMD partitioner
+# into TB-scale all-reduces (measured: 3.96 TB/device for deepseek-33b
+# prefill).  This pure-jnp flash attention scans key blocks with an online
+# softmax so the working set is (t, k_chunk) per block and XLA shards it
+# cleanly.  Numerics match attention_scores to ~1e-6 (tests).
+# --------------------------------------------------------------------------
+
+
+def _constrain_t(x: jax.Array, t_dim: int, axis: Optional[str]):
+    """Shard dim ``t_dim`` over mesh axis ``axis``, everything else
+    unconstrained (so the partitioner keeps batch/dp shardings).  §Perf
+    iteration 2: when kv_heads < the model-axis size, GSPMD otherwise
+    shards head_dim and partial-sum all-reduces the flash logits every
+    key block (measured 3.7 TB/device for deepseek prefill)."""
+    if axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    spec = [U] * x.ndim
+    spec[t_dim] = axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def flash_attention(
+    q: jax.Array,  # (b, t, h, hd)
+    k: jax.Array,  # (b, s, kvh, hd)
+    v: jax.Array,  # (b, s, kvh, hd)
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # traced scalar; <=0 or None: global
+    attn_softcap: Optional[float] = None,
+    k_chunk: int = 1024,
+    q_offset: int | jax.Array = 0,
+    t_shard_axis: Optional[str] = None,
+) -> jax.Array:
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    n_blocks = -(-s // k_chunk)
+    pad = n_blocks * k_chunk - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, k_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, k_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    # inputs stay in the compute dtype (bf16): MXU accumulates f32
+    # internally; softmax statistics and the output accumulator are f32.
+    qg = q.reshape(b, t, kvh, group, hd) * jnp.asarray(scale, q.dtype)
+    qg = _constrain_t(qg, 1, t_shard_axis)
+    q_pos = jnp.arange(t) + q_offset  # (t,)
+
+    def body(carry, xs):
+        m, l, acc = carry  # (b,kvh,g,t,1), (b,kvh,g,t,1), (b,kvh,g,t,hd)
+        kc, vc, i = xs
+        logits = jnp.einsum(
+            "btkgd,bskd->bkgts", qg, kc,
+            preferred_element_type=jnp.float32,
+        )  # (b,kvh,g,t,k_chunk) f32
+        if attn_softcap is not None:
+            logits = softcap(logits, attn_softcap)
+        k_pos = jnp.arange(k_chunk) + i * k_chunk
+        mask = jnp.ones((t, k_chunk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < s)[None, :]  # padding
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_cur = logits.max(axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        # p stays f32 into the PV contraction: storing a bf16 copy of p was
+        # measured to ADD ~1.3 TB traffic (§Perf iteration 3, refuted).
+        acc_new = alpha * acc + jnp.einsum(
+            "bkgts,bskd->bkgtd", p, vc.astype(jnp.float32),
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = _constrain_t(
+        jnp.full((b, kvh, group, t, 1), -1e30, jnp.float32), 3, t_shard_axis
+    )
+    l0 = _constrain_t(
+        jnp.zeros((b, kvh, group, t, 1), jnp.float32), 3, t_shard_axis
+    )
+    a0 = _constrain_t(
+        jnp.zeros((b, kvh, group, t, hd), jnp.float32), 3, t_shard_axis
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, hd)
+    return out.astype(q.dtype)
+
+
+# seq length at/above which the scanned flash path replaces the dense one
+# (REPRO_DISABLE_FLASH=1 forces the dense reference — baseline measurement)
+import os as _os
+
+FLASH_THRESHOLD = (
+    10**12 if _os.environ.get("REPRO_DISABLE_FLASH") == "1" else 2048
+)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> Params:
+    if gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp_fwd(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    if "w_gate" in params:
+        return matmul(
+            actf(matmul(x, params["w_gate"])) * matmul(x, params["w_up"]),
+            params["w_down"],
+        )
+    return matmul(actf(matmul(x, params["w_up"])), params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    h: jax.Array,  # (b, t, d_model) final hidden states
+    w_vocab: jax.Array,  # (d_model, vocab)
+    labels: jax.Array,  # (b, t) int32
+    *,
+    chunk: int = 512,
+    logit_softcap: Optional[float] = None,
+    ignore_id: int = -1,
+    valid_vocab: Optional[int] = None,
+) -> jax.Array:
+    """Mean token cross-entropy without materializing (b, t, vocab).
+
+    Scans over sequence chunks: peak logits memory is (b, chunk, vocab).
+    ``valid_vocab``: mask out padded embedding rows (> logical vocab).
+    """
+    b, t, d = h.shape
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore_id)
+    hc = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)  # (n, b, chunk, d)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hx, lx = xs
+        logits = jax.lax.dot_general(
+            hx, w_vocab.astype(hx.dtype),
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        logits = softcap(logits, logit_softcap)
+        if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+            vmask = jnp.arange(logits.shape[-1]) < valid_vocab
+            logits = jnp.where(vmask, logits, -1e30)
+        valid = lx != ignore_id
+        lsafe = jnp.where(valid, lx, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lsafe[..., None], axis=-1
+        ).squeeze(-1)
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (
+            tot + nll.sum().astype(jnp.float32),
+            cnt + valid.sum().astype(jnp.int32),
+        ), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts feed-forward with top-k routing.
+
+Covers both assigned MoE architectures:
+  * qwen2-moe-a2.7b : 60 routed experts, top-4, + 4 "shared" experts that see
+    every token (implemented as one fused shared MLP of width 4*d_ff) with a
+    learned sigmoid gate, per the Qwen1.5-MoE model card.
+  * qwen3-moe-30b-a3b : 128 routed experts, top-8, no shared experts,
+    renormalized top-k probs.
+
+Dispatch is *dense einsum* over the expert axis (one-hot combine weights):
+no gather/scatter, MXU-friendly, and shards cleanly over the ``model`` mesh
+axis (expert parallelism) — tokens meet experts through an all-to-all-free
+contraction; see DESIGN.md §5 and the §Perf iteration on sparse dispatch.
+
+Router aux losses: load-balance (Switch-style) + router z-loss, both
+returned so the trainer can add them to the LM loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def init_moe(
+    key,
+    d_model: int,
+    d_ff_expert: int,
+    num_experts: int,
+    dtype,
+    shared_d_ff: int = 0,
+) -> Params:
+    ks = jax.random.split(key, 5)
+    import math
+
+    sc_in = 1.0 / math.sqrt(d_model)
+    sc_ff = 1.0 / math.sqrt(d_ff_expert)
+    p: Params = {
+        "router": layers.dense_init(ks[0], d_model, num_experts, dtype),
+        # experts stacked on a leading axis -> shardable over `model`
+        "w_gate": jax.random.normal(
+            ks[1], (num_experts, d_model, d_ff_expert), dtype
+        ) * jnp.asarray(sc_in, dtype),
+        "w_up": jax.random.normal(
+            ks[2], (num_experts, d_model, d_ff_expert), dtype
+        ) * jnp.asarray(sc_in, dtype),
+        "w_down": jax.random.normal(
+            ks[3], (num_experts, d_ff_expert, d_model), dtype
+        ) * jnp.asarray(sc_ff, dtype),
+    }
+    if shared_d_ff:
+        p["shared"] = layers.init_mlp(ks[4], d_model, shared_d_ff, dtype)
+        p["shared_gate"] = jnp.zeros((d_model, 1), dtype)
+    return p
+
+
+def route(
+    params: Params, x: jax.Array, top_k: int, renormalize: bool = True
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Returns (top_idx (..., k), top_p (..., k), aux losses)."""
+    num_experts = params["router"].shape[-1]
+    logits = layers.matmul(x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    hot = jax.nn.one_hot(top_idx, num_experts, dtype=jnp.float32).sum(-2)
+    frac_tokens = jnp.mean(
+        (hot > 0).astype(jnp.float32), axis=tuple(range(hot.ndim - 1))
+    )
+    mean_probs = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    lb = num_experts * jnp.sum(frac_tokens * mean_probs)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return top_idx, top_p, {"load_balance": lb, "router_z": z}
+
+
+def combine_weights(
+    top_idx: jax.Array, top_p: jax.Array, num_experts: int
+) -> jax.Array:
+    """Dense (..., E) combine weights from top-k routing."""
+    return jnp.sum(
+        jax.nn.one_hot(top_idx, num_experts, dtype=jnp.float32)
+        * top_p[..., None],
+        axis=-2,
+    )
+
+
+def moe_fwd(
+    params: Params,
+    x: jax.Array,  # (b, t, d_model)
+    top_k: int,
+    act: str = "silu",
+    renormalize: bool = True,
+    dispatch: str = "auto",  # auto | dense | gather
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    top_idx, top_p, aux = route(params, x, top_k, renormalize)
+    num_experts = params["router"].shape[-1]
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
+    b, t, _ = x.shape
+
+    if dispatch == "auto":
+        import os
+
+        forced = os.environ.get("REPRO_MOE_DISPATCH")  # measurement knob
+        if forced in ("dense", "gather"):
+            dispatch = forced
+        else:
+            # gather wins when few tokens touch few experts (decode): weight
+            # traffic drops from ALL experts to the top_k selected (§Perf i5)
+            dispatch = "gather" if b * t * top_k <= num_experts else "dense"
+
+    if dispatch == "gather":
+        wg = params["w_gate"][top_idx].astype(x.dtype)  # (b,t,k,D,F)
+        wu = params["w_up"][top_idx].astype(x.dtype)
+        wd = params["w_down"][top_idx].astype(x.dtype)  # (b,t,k,F,D)
+        g = jnp.einsum("btd,btkdf->btkf", x, wg,
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("btd,btkdf->btkf", x, wu,
+                       preferred_element_type=jnp.float32)
+        h = (actf(g) * u).astype(x.dtype)
+        y = jnp.einsum(
+            "btkf,btkfd,btk->btd", h, wd, top_p.astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    else:
+        cw = combine_weights(top_idx, top_p, num_experts).astype(x.dtype)
+        # dense-dispatch: every expert sees every token, weighted combine.
+        g = jnp.einsum(
+            "btd,edf->btef", x, params["w_gate"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        u = jnp.einsum(
+            "btd,edf->btef", x, params["w_up"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        h = (actf(g) * u).astype(x.dtype)
+        h = h * cw[..., None]  # weight before down-proj: skipped experts -> 0
+        y = jnp.einsum(
+            "btef,efd->btd", h, params["w_down"].astype(x.dtype),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+
+    if "shared" in params:
+        gate = jax.nn.sigmoid(
+            layers.matmul(x, params["shared_gate"]).astype(jnp.float32)
+        ).astype(x.dtype)
+        y = y + gate * layers.mlp_fwd(params["shared"], x, act)
+    return y, aux

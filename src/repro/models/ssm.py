@@ -1,0 +1,261 @@
+"""State-space / linear-attention machinery: chunked scan + Mamba2 block.
+
+The common recurrence (covers Mamba2/SSD and RWKV-6) is
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{K x V}
+    y_t = r_t^T S_{t-1} + (r_t . (u . k_t)) v_t  (u-bonus form, RWKV)
+or  y_t = r_t^T S_t                              (in-state form, Mamba)
+
+with data-dependent decay ``w_t in (0,1)^K`` (per-key-dim for RWKV, scalar
+per head broadcast for Mamba2).  ``chunked_linear_attention`` evaluates it in
+O(T/C) sequential steps with intra-chunk matmuls (MXU-friendly; this is the
+TPU adaptation of the CUDA selective-scan — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def chunked_linear_attention(
+    r: jax.Array,  # (b, t, h, K) receptance / C
+    k: jax.Array,  # (b, t, h, K) key / B
+    v: jax.Array,  # (b, t, h, V) value / dt*x
+    log_w: jax.Array,  # (b, t, h, K) log decay, <= 0
+    u: Optional[jax.Array] = None,  # (h, K) current-token bonus (RWKV)
+    state: Optional[jax.Array] = None,  # (b, h, K, V) initial state
+    chunk: int = 64,
+    include_current: bool = False,  # Mamba-style y_t = r_t^T S_t
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b,t,h,V), final_state (b,h,K,V)).  float32 internally."""
+    b, t, h, K = r.shape
+    V = v.shape[-1]
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        zr = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zr)
+        k = jnp.pad(k, zr)
+        v = jnp.pad(v, zr)
+        log_w = jnp.pad(log_w, zr)  # log w = 0 -> w = 1 on padding is fine
+
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, n_chunks, chunk, h, K).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(b, n_chunks, chunk, h, K).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(b, n_chunks, chunk, h, V).transpose(1, 0, 3, 2, 4)
+    lw = log_w.astype(f32).reshape(b, n_chunks, chunk, h, K).transpose(1, 0, 3, 2, 4)
+    # shapes now (n_chunks, b, h, chunk, K/V)
+
+    if state is None:
+        state = jnp.zeros((b, h, K, V), f32)
+    else:
+        state = state.astype(f32)
+
+    def per_chunk(S, xs):
+        R, Kk, Vv, LW = xs  # (b, h, C, K/V)
+        L = jnp.cumsum(LW, axis=2)  # L_t = sum_{j<=t} log w_j (incl. t)
+        # readout exponent: Mamba form reads S_t (decay through w_t, use L);
+        # RWKV/u form reads S_{t-1} (use L_{t-1} = L - LW).
+        P = L if include_current else L - LW
+        Ltot = L[:, :, -1:, :]  # (b,h,1,K)
+        # inter-chunk: y1_t = (r_t . exp(P_t)) @ S
+        r_in = R * jnp.exp(P)
+        y1 = jnp.einsum("bhck,bhkv->bhcv", r_in, S)
+        # intra-chunk: A[t,s] = sum_k r_tk k_sk exp(P_t - L_s), s < t
+        k_ = Kk * jnp.exp(-L)
+        A = jnp.einsum("bhck,bhdk->bhcd", r_in, k_)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        y2 = jnp.einsum("bhcd,bhdv->bhcv", A, Vv)
+        y = y1 + y2
+        # state update: S' = exp(Ltot) . S + sum_s (k_s exp(Ltot - L_s)) v_s^T
+        k_out = Kk * jnp.exp(Ltot - L)
+        S_new = jnp.exp(Ltot).transpose(0, 1, 3, 2) * S + jnp.einsum(
+            "bhck,bhcv->bhkv", k_out, Vv
+        )
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(per_chunk, state, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, n_chunks * chunk, h, V)
+    y = y[:, :t]
+
+    if include_current:
+        y = y + jnp.einsum(
+            "bthk,bthk,bthv->bthv",
+            r.astype(f32)[:, :t],
+            k.astype(f32)[:, :t],
+            v.astype(f32)[:, :t],
+        )
+    elif u is not None:
+        bonus = jnp.einsum(
+            "bthk,hk,bthk->bth",
+            r.astype(f32)[:, :t],
+            u.astype(f32),
+            k.astype(f32)[:, :t],
+        )
+        y = y + bonus[..., None] * v.astype(f32)[:, :t]
+    return y, S_final
+
+
+def linear_attention_decode(
+    r: jax.Array,  # (b, h, K)
+    k: jax.Array,
+    v: jax.Array,  # (b, h, V)
+    log_w: jax.Array,  # (b, h, K)
+    state: jax.Array,  # (b, h, K, V)
+    u: Optional[jax.Array] = None,
+    include_current: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrence step; O(1) in sequence length."""
+    f32 = jnp.float32
+    r, k, v, log_w = (a.astype(f32) for a in (r, k, v, log_w))
+    state = state.astype(f32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    new_state = jnp.exp(log_w)[..., None] * state + kv
+    if include_current:
+        y = jnp.einsum("bhk,bhkv->bhv", r, new_state)
+    elif u is not None:
+        y = jnp.einsum("bhk,bhkv->bhv", r, state)
+        y = y + jnp.einsum("bhk,hk,bhk->bh", r, u.astype(f32), k)[..., None] * v
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", r, state)  # strictly-past readout
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block (SSD): scalar per-head decay a_t = exp(-softplus(dt) * A)
+# --------------------------------------------------------------------------
+
+
+def init_mamba2(
+    key, d_model: int, d_state: int, dtype,
+    expand: int = 2, head_dim: int = 64, conv_width: int = 4,
+) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection -> [x (d_inner), z (d_inner), B, C (d_state
+        # each, shared across heads as in Mamba2), dt (n_heads)]
+        "w_in": layers.dense_init(
+            ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads, dtype
+        ),
+        "conv_w": jax.random.normal(ks[1], (conv_width, d_inner), dtype)
+        * jnp.asarray(0.1, dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.zeros((n_heads,), dtype),  # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "w_out": layers.dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _mamba_dims(params):
+    conv_width, d_inner = params["conv_w"].shape
+    n_heads = params["A_log"].shape[0]
+    head_dim = d_inner // n_heads
+    return conv_width, d_inner, n_heads, head_dim
+
+
+def _mamba_split(params, proj, d_inner, d_state, n_heads):
+    x, z, Bm, Cm, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    return x, z, Bm, Cm, dt
+
+
+def mamba2_fwd(
+    params: Params, x_in: jax.Array, d_state: int, chunk: int = 64
+) -> jax.Array:
+    """Training-mode forward, (b, t, d_model) -> (b, t, d_model)."""
+    b, t, _ = x_in.shape
+    conv_width, d_inner, n_heads, head_dim = _mamba_dims(params)
+    proj = layers.matmul(x_in, params["w_in"])
+    x, z, Bm, Cm, dt = _mamba_split(params, proj, d_inner, d_state, n_heads)
+
+    # depthwise causal conv over time
+    xp = jnp.pad(x, ((0, 0), (conv_width - 1, 0), (0, 0)))
+    xc = sum(
+        xp[:, i : i + t] * params["conv_w"][i][None, None].astype(x.dtype)
+        for i in range(conv_width)
+    ) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (b, t, h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (h,)
+    log_w = (dt * A[None, None, :])[..., None]  # (b, t, h, 1) broadcast over K
+    log_w = jnp.broadcast_to(log_w, (b, t, n_heads, d_state))
+
+    xh = xc.reshape(b, t, n_heads, head_dim).astype(jnp.float32)
+    v = xh * dt[..., None]  # dt-scaled input
+    r = jnp.broadcast_to(Cm[:, :, None, :], (b, t, n_heads, d_state))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, t, n_heads, d_state))
+
+    y, _ = chunked_linear_attention(
+        r, k, v, log_w, chunk=chunk, include_current=True
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, t, d_inner).astype(x_in.dtype)
+    y = layers.rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return layers.matmul(y, params["w_out"])
+
+
+def mamba2_init_cache(
+    params: Params, batch: int, d_state: int, dtype=jnp.float32
+) -> Dict[str, jax.Array]:
+    conv_width, d_inner, n_heads, head_dim = _mamba_dims(params)
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), dtype),
+    }
+
+
+def mamba2_decode(
+    params: Params, x_in: jax.Array, cache: Dict[str, jax.Array], d_state: int
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode, (b, 1, d_model) -> (b, 1, d_model); O(1) state."""
+    b = x_in.shape[0]
+    conv_width, d_inner, n_heads, head_dim = _mamba_dims(params)
+    proj = layers.matmul(x_in[:, 0], params["w_in"])
+    x, z, Bm, Cm, dt = _mamba_split(params, proj, d_inner, d_state, n_heads)
+
+    conv_buf = jnp.concatenate([cache["conv"], x[:, None]], axis=1)
+    xc = jnp.einsum(
+        "bcd,cd->bd", conv_buf.astype(jnp.float32),
+        params["conv_w"].astype(jnp.float32),
+    ) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    new_conv = conv_buf[:, 1:]
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (b, h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    log_w = jnp.broadcast_to(
+        (dt * A[None, :])[..., None], (b, n_heads, d_state)
+    )
+    xh = xc.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    v = xh * dt[..., None]
+    r = jnp.broadcast_to(Cm[:, None, :], (b, n_heads, d_state))
+    k = jnp.broadcast_to(Bm[:, None, :], (b, n_heads, d_state))
+    y, new_ssm = linear_attention_decode(
+        r, k, v, log_w, cache["ssm"], include_current=True
+    )
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, d_inner).astype(x_in.dtype)
+    y = layers.rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = layers.matmul(y, params["w_out"])
+    return out[:, None], {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,613 @@
+"""Unified decoder-only transformer covering the assigned architecture zoo.
+
+One config → one of four homogeneous *families*, each a single
+``lax.scan`` over stacked per-layer params (compile-time O(1) in depth):
+
+  dense        pre/post-norm GQA attention (+RoPE, per-layer sliding window,
+               logit softcap) + gated MLP           [stablelm, gemma2-2b/9b,
+                                                     deepseek, internvl-LM]
+  moe          attention + top-k MoE FF (+ optional shared experts)
+                                                    [qwen2-moe, qwen3-moe]
+  rwkv         RWKV-6 time-mix + channel-mix        [rwkv6-7b]
+  mamba_hybrid Mamba2 stacks with a single weight-SHARED attention+MLP block
+               applied every ``shared_attn_every`` layers   [zamba2-2.7b]
+
+Heterogeneity that survives inside a scan (e.g. gemma2's local/global
+alternation) is expressed as *per-layer scalar arrays* threaded through the
+scan (``window``), not as distinct param structures.
+
+Both entry points are pure functions of (params, inputs):
+  forward(params, cfg, tokens, ...)            -> final hidden states
+  loss_fn(params, cfg, tokens, labels, ...)    -> (scalar loss, metrics)
+  decode_step(params, cfg, token, cache, pos)  -> (logits, new cache)
+  init_cache(cfg, batch, max_seq)              -> cache pytree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe, rwkv, ssm
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | rwkv | mamba_hybrid
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # attention details
+    rope_theta: Optional[float] = 10000.0
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None  # window for "local" layers
+    local_global_pattern: Optional[int] = None  # e.g. 2 -> every 2nd local
+    sliding_window_override: Optional[int] = None  # force SWA on ALL layers
+    post_norm: bool = False  # gemma2 sandwich norms
+    act: str = "silu"
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_d_ff: int = 0
+    renormalize: bool = True
+    # ssm / hybrid
+    d_state: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    shared_attn_every: int = 6
+    # embeddings / frontends
+    tie_embeddings: bool = True
+    prefix_len: int = 0  # VLM/audio stub frontend: # of prepended embeddings
+    scale_embed: bool = False  # gemma multiplies embed by sqrt(d_model)
+    # encoder-decoder extras (family == "encdec")
+    n_encoder_layers: int = 0
+    n_frames: int = 0  # encoder input length (stub frontend frames)
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    xent_chunk: int = 512
+    scan_chunk: int = 64  # linear-attention chunk size
+    # §Perf: shard flash-attention internals' query-time axis over this mesh
+    # axis (None = let GSPMD choose; see layers._constrain_t)
+    flash_t_shard_axis: Optional[str] = None
+    # bookkeeping (filled by configs/)
+    source: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a multiple of 128 so the vocab dim shards
+        over the `model` mesh axis (standard practice; logits are sliced back
+        to the logical vocab in the loss/decode paths)."""
+        return -(-self.vocab // 128) * 128
+
+    def layer_windows(self, seq_hint: int = 0) -> jax.Array:
+        """Per-layer sliding windows as an int32 array; 0 means global."""
+        if self.sliding_window_override is not None:
+            w = [self.sliding_window_override] * self.n_layers
+        elif self.sliding_window and self.local_global_pattern:
+            w = [
+                self.sliding_window if (i % self.local_global_pattern == 0) else 0
+                for i in range(self.n_layers)
+            ]
+        elif self.sliding_window:
+            w = [self.sliding_window] * self.n_layers
+        else:
+            w = [0] * self.n_layers
+        return jnp.asarray(w, jnp.int32)
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = init_params(jax.random.key(0), self)  # pragma: no cover
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params: Params) -> int:
+        """Params touched per token (MoE: top_k of num_experts experts)."""
+        total = 0
+        for path, x in jax.tree_util.tree_flatten_with_path(params)[0]:
+            keys = "/".join(str(p) for p in path)
+            if self.family == "moe" and any(
+                f"'{n}'" in keys for n in ("w_gate", "w_up", "w_down")
+            ) and "shared" not in keys:
+                total += x.size * self.top_k // max(self.num_experts, 1)
+            else:
+                total += x.size
+        return total
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    """One layer's params (unstacked)."""
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    if cfg.family in ("dense", "moe"):
+        p: Params = {
+            "ln_attn": layers.init_rmsnorm(cfg.d_model, pd),
+            "attn": layers.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.head_dim_, pd, qkv_bias=cfg.qkv_bias,
+            ),
+            "ln_ff": layers.init_rmsnorm(cfg.d_model, pd),
+        }
+        if cfg.post_norm:
+            p["ln_attn_post"] = layers.init_rmsnorm(cfg.d_model, pd)
+            p["ln_ff_post"] = layers.init_rmsnorm(cfg.d_model, pd)
+        if cfg.family == "moe":
+            p["moe"] = moe.init_moe(
+                ks[1], cfg.d_model, cfg.moe_d_ff, cfg.num_experts, pd,
+                shared_d_ff=cfg.shared_d_ff,
+            )
+        else:
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, pd)
+        return p
+    if cfg.family == "rwkv":
+        return {
+            "ln_tm": layers.init_rmsnorm(cfg.d_model, pd),
+            "tm": rwkv.init_rwkv6_timemix(ks[0], cfg.d_model, cfg.n_heads, pd),
+            "ln_cm": layers.init_rmsnorm(cfg.d_model, pd),
+            "cm": rwkv.init_rwkv6_channelmix(ks[1], cfg.d_model, cfg.d_ff, pd),
+        }
+    if cfg.family == "mamba_hybrid":
+        return {
+            "ln": layers.init_rmsnorm(cfg.d_model, pd),
+            "mamba": ssm.init_mamba2(
+                ks[0], cfg.d_model, cfg.d_state, pd,
+                expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            ),
+        }
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    pd = cfg.param_dtype
+    k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    # stacked per-layer params: tree-of-(L, ...) arrays -> scannable
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)
+    params: Params = {
+        "embed": layers.embed_init(k_embed, cfg.padded_vocab, cfg.d_model, pd),
+        "blocks": blocks,
+        "final_norm": layers.init_rmsnorm(cfg.d_model, pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, cfg.d_model, cfg.padded_vocab, pd
+        )
+    if cfg.family == "mamba_hybrid":
+        params["shared_attn"] = {
+            "ln_attn": layers.init_rmsnorm(cfg.d_model, pd),
+            "attn": layers.init_attention(
+                k_shared, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.head_dim_, pd,
+            ),
+            "ln_ff": layers.init_rmsnorm(cfg.d_model, pd),
+            "mlp": layers.init_mlp(
+                jax.random.fold_in(k_shared, 1), cfg.d_model, cfg.d_ff, pd
+            ),
+        }
+    if cfg.prefix_len:
+        params["prefix_proj"] = layers.dense_init(
+            jax.random.fold_in(k_embed, 7), cfg.d_model, cfg.d_model, pd
+        )
+    return params
+
+
+# --------------------------------------------------------------------------
+# train-mode forward
+# --------------------------------------------------------------------------
+
+
+def _attn_ff_block(
+    bp: Params, x: jax.Array, cfg: ModelConfig, window: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Shared dense/moe block body; returns (x, moe aux loss)."""
+    t = x.shape[1]
+    # dynamic per-layer window: 0 -> global. Implemented by making the
+    # window larger than the sequence when global, so one fused mask works.
+    eff_window = jnp.where(window > 0, window, t + 1)
+    h = layers.rmsnorm(bp["ln_attn"], x)
+    h = _attention_with_dyn_window(bp["attn"], h, cfg, eff_window)
+    if cfg.post_norm:
+        h = layers.rmsnorm(bp["ln_attn_post"], h)
+    x = x + h
+    h = layers.rmsnorm(bp["ln_ff"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        h, auxd = moe.moe_fwd(
+            bp["moe"], h, cfg.top_k, cfg.act, cfg.renormalize
+        )
+        aux = auxd["load_balance"]
+    else:
+        h = layers.mlp_fwd(bp["mlp"], h, cfg.act)
+    if cfg.post_norm:
+        h = layers.rmsnorm(bp["ln_ff_post"], h)
+    return x + h, aux
+
+
+def _attention_with_dyn_window(
+    ap: Params, x: jax.Array, cfg: ModelConfig, window: jax.Array
+) -> jax.Array:
+    """Full-seq attention with a traced (per-layer) window size."""
+    b, t, _ = x.shape
+    q, k, v = layers._qkv(ap, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+    if cfg.rope_theta is not None:
+        pos = jnp.arange(t)[None, :]
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    if t >= layers.FLASH_THRESHOLD:
+        out = layers.flash_attention(
+            q, k, v, causal=True, window=window,
+            attn_softcap=cfg.attn_softcap,
+            t_shard_axis=cfg.flash_t_shard_axis,
+        )
+    else:
+        import math
+
+        group = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, t, cfg.n_kv_heads, group, cfg.head_dim_)
+        logits = jnp.einsum(
+            "btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32
+        ) / math.sqrt(cfg.head_dim_)
+        logits = layers.softcap(logits, cfg.attn_softcap)
+        qp = jnp.arange(t)[:, None]
+        kp = jnp.arange(t)[None, :]
+        mask = (kp <= qp) & (kp > qp - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    out = out.reshape(b, t, cfg.n_heads * cfg.head_dim_)
+    return layers.matmul(out, ap["wo"])
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (b, t)
+    prefix_embeds: Optional[jax.Array] = None,  # (b, P, d_model) stub frontend
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (b, t_total, d_model), total moe aux loss)."""
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model).astype(jnp.float32), cfg.dtype)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(cfg.dtype)
+        if "prefix_proj" in params:
+            pe = layers.matmul(pe, params["prefix_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+
+    windows = cfg.layer_windows()
+
+    if cfg.family in ("dense", "moe"):
+
+        def body(x, xs):
+            bp, w = xs
+            x, aux = _attn_ff_block(bp, x, cfg, w)
+            return x, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, (params["blocks"], windows))
+        aux = auxs.sum()
+
+    elif cfg.family == "rwkv":
+
+        def body(x, bp):
+            x = x + rwkv.rwkv6_timemix_fwd(
+                bp["tm"], layers.rmsnorm(bp["ln_tm"], x), cfg.n_heads,
+                chunk=cfg.scan_chunk,
+                head_shard_axis=cfg.flash_t_shard_axis,
+            )
+            x = x + rwkv.rwkv6_channelmix_fwd(
+                bp["cm"], layers.rmsnorm(bp["ln_cm"], x)
+            )
+            return x, jnp.zeros((), jnp.float32)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = jnp.zeros((), jnp.float32)
+
+    elif cfg.family == "mamba_hybrid":
+        every = cfg.shared_attn_every
+        assert cfg.n_layers % every == 0
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["blocks"],
+        )
+        sap = params["shared_attn"]
+
+        def mamba_body(x, bp):
+            x = x + ssm.mamba2_fwd(
+                bp["mamba"], layers.rmsnorm(bp["ln"], x), cfg.d_state,
+                chunk=cfg.scan_chunk,
+            )
+            return x, None
+
+        if cfg.remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        def group_body(x, gbp):
+            # weight-shared attention block, then `every` mamba layers
+            h = layers.rmsnorm(sap["ln_attn"], x)
+            h = layers.attention_fwd(
+                sap["attn"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window,
+                t_shard_axis=cfg.flash_t_shard_axis,
+            )
+            x = x + h
+            h = layers.rmsnorm(sap["ln_ff"], x)
+            x = x + layers.mlp_fwd(sap["mlp"], h, cfg.act)
+            x, _ = jax.lax.scan(mamba_body, x, gbp)
+            return x, jnp.zeros((), jnp.float32)
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    return layers.rmsnorm(params["final_norm"], x), aux
+
+
+def lm_head_weight(params: Params, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    aux_weight: float = 0.01,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, aux = forward(params, cfg, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        h = h[:, prefix_embeds.shape[1]:]  # loss on text positions only
+    xent = layers.chunked_softmax_xent(
+        h, lm_head_weight(params, cfg), labels,
+        chunk=cfg.xent_chunk, logit_softcap=cfg.final_softcap,
+        valid_vocab=cfg.vocab,
+    )
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a cache)
+# --------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, kv_dtype=jnp.bfloat16
+) -> Params:
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": jnp.zeros(
+                (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), kv_dtype
+            ),
+            "v": jnp.zeros(
+                (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_), kv_dtype
+            ),
+        }
+    if cfg.family == "rwkv":
+        hd = cfg.d_model // cfg.n_heads
+        return {
+            "shift_tm": jnp.zeros((L, batch, 1, cfg.d_model), jnp.float32),
+            "shift_cm": jnp.zeros((L, batch, 1, cfg.d_model), jnp.float32),
+            "wkv": jnp.zeros((L, batch, cfg.n_heads, hd, hd), jnp.float32),
+        }
+    if cfg.family == "mamba_hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        n_heads = d_inner // cfg.ssm_head_dim
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "conv": jnp.zeros((L, batch, 3, d_inner), jnp.float32),
+            "ssm": jnp.zeros(
+                (L, batch, n_heads, cfg.d_state, cfg.ssm_head_dim), jnp.float32
+            ),
+            # shared attention block: one cache per application
+            "k": jnp.zeros(
+                (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_),
+                kv_dtype,
+            ),
+            "v": jnp.zeros(
+                (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim_),
+                kv_dtype,
+            ),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (b, 1) int32
+    cache: Params,
+    pos: jax.Array,  # scalar int32: current length (new token index)
+    attend_fn=None,
+) -> Tuple[jax.Array, Params]:
+    """One decode step; returns (logits (b, vocab), updated cache)."""
+    x = params["embed"].astype(cfg.dtype)[token]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model).astype(jnp.float32), cfg.dtype)
+    windows = cfg.layer_windows()
+
+    if cfg.family in ("dense", "moe"):
+
+        def body(x, xs):
+            bp, w, ck, cv = xs
+            h = layers.rmsnorm(bp["ln_attn"], x)
+            sw = jnp.where(w > 0, w, jnp.iinfo(jnp.int32).max // 2)
+            h, ck, cv = _attention_decode_dyn(
+                bp["attn"], h, ck, cv, pos, cfg, sw, attend_fn
+            )
+            if cfg.post_norm:
+                h = layers.rmsnorm(bp["ln_attn_post"], h)
+            x = x + h
+            h = layers.rmsnorm(bp["ln_ff"], x)
+            if cfg.family == "moe":
+                h, _ = moe.moe_fwd(
+                    bp["moe"], h, cfg.top_k, cfg.act, cfg.renormalize
+                )
+            else:
+                h = layers.mlp_fwd(bp["mlp"], h, cfg.act)
+            if cfg.post_norm:
+                h = layers.rmsnorm(bp["ln_ff_post"], h)
+            return x + h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], windows, cache["k"], cache["v"])
+        )
+        new_cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "rwkv":
+
+        def body(x, xs):
+            bp, stm, scm, wkv = xs
+            h, tm_cache = rwkv.rwkv6_timemix_decode(
+                bp["tm"], layers.rmsnorm(bp["ln_tm"], x),
+                {"shift": stm, "wkv": wkv}, cfg.n_heads,
+            )
+            x = x + h
+            h, new_scm = rwkv.rwkv6_channelmix_decode(
+                bp["cm"], layers.rmsnorm(bp["ln_cm"], x), scm
+            )
+            x = x + h
+            return x, (tm_cache["shift"], new_scm, tm_cache["wkv"])
+
+        x, (stm, scm, wkv) = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["shift_tm"], cache["shift_cm"],
+             cache["wkv"]),
+        )
+        new_cache = {"shift_tm": stm, "shift_cm": scm, "wkv": wkv}
+
+    elif cfg.family == "mamba_hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["blocks"],
+        )
+        conv_g = cache["conv"].reshape((n_groups, every) + cache["conv"].shape[1:])
+        ssm_g = cache["ssm"].reshape((n_groups, every) + cache["ssm"].shape[1:])
+        sap = params["shared_attn"]
+
+        def mamba_body(x, xs):
+            bp, conv, ssm_state = xs
+            h, new_c = ssm.mamba2_decode(
+                bp["mamba"], layers.rmsnorm(bp["ln"], x),
+                {"conv": conv, "ssm": ssm_state}, cfg.d_state,
+            )
+            return x + h, (new_c["conv"], new_c["ssm"])
+
+        def group_body(x, xs):
+            gbp, conv, ssm_state, ck, cv = xs
+            h = layers.rmsnorm(sap["ln_attn"], x)
+            h, ck, cv = layers.attention_decode(
+                sap["attn"], h, ck, cv, pos,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window, attend_fn=attend_fn,
+            )
+            x = x + h
+            h = layers.rmsnorm(sap["ln_ff"], x)
+            x = x + layers.mlp_fwd(sap["mlp"], h, cfg.act)
+            x, (conv, ssm_state) = jax.lax.scan(
+                mamba_body, x, (gbp, conv, ssm_state)
+            )
+            return x, (conv, ssm_state, ck, cv)
+
+        x, (conv, ssm_state, ks, vs) = jax.lax.scan(
+            group_body, x, (grouped, conv_g, ssm_g, cache["k"], cache["v"])
+        )
+        new_cache = {
+            "conv": conv.reshape(cache["conv"].shape),
+            "ssm": ssm_state.reshape(cache["ssm"].shape),
+            "k": ks, "v": vs,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    h = layers.rmsnorm(params["final_norm"], x)[:, 0]
+    logits = jax.lax.dot_general(
+        h, lm_head_weight(params, cfg).astype(h.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )[:, : cfg.vocab]
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
+def _attention_decode_dyn(
+    ap, x, cache_k, cache_v, pos, cfg: ModelConfig, window: jax.Array,
+    attend_fn=None,
+):
+    """Decode attention with traced per-layer window (scan-friendly)."""
+    b = x.shape[0]
+    q, k, v = layers._qkv(ap, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+    if cfg.rope_theta is not None:
+        pk = jnp.full((b, 1), pos)
+        q = layers.apply_rope(q, pk, cfg.rope_theta)
+        k = layers.apply_rope(k, pk, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1
+    )
+    if attend_fn is not None:
+        out = attend_fn(q, cache_k, cache_v, pos, window)
+    else:
+        out = _decode_scores_dyn(q, cache_k, cache_v, pos, window, cfg)
+    y = layers.matmul(
+        out.reshape(b, 1, cfg.n_heads * cfg.head_dim_), ap["wo"]
+    )
+    return y, cache_k, cache_v
+
+
+def _decode_scores_dyn(q, cache_k, cache_v, pos, window, cfg: ModelConfig):
+    import math
+
+    b, _, h, hd = q.shape
+    kvh = cache_k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, 1, kvh, group, hd)
+    logits = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, cache_k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(hd)
+    logits = layers.softcap(logits, cfg.attn_softcap)
+    kpos = jnp.arange(cache_k.shape[1])
+    mask = (kpos <= pos) & (kpos > pos - window)
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, cache_v.astype(q.dtype))
+    return out.reshape(b, 1, h, hd)

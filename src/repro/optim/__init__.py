@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, clip_by_global_norm, global_norm, momentum, sgd,
+)
+
+__all__ = [
+    "Optimizer", "adamw", "clip_by_global_norm", "global_norm", "momentum",
+    "sgd",
+]

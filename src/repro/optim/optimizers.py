@@ -1,0 +1,110 @@
+"""Optimizers built from scratch (no optax in this container).
+
+``sgd`` / ``momentum`` / ``adamw`` share a tiny (init, update) interface over
+arbitrary pytrees.  The TAMUNA trainer uses the plain local step from the
+paper by default; ``local_opt="adamw"`` swaps the inner update for AdamW —
+a beyond-theory option (documented in DESIGN.md §7) used by the LM example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], Tuple[Params, Any]]  # (g, state, p)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+            params, grads,
+        )
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        m = jax.tree.map(
+            lambda mu, g: beta * mu + g.astype(jnp.float32), state, grads
+        )
+        new = jax.tree.map(
+            lambda p, mu: (p - lr * mu.astype(p.dtype)).astype(p.dtype),
+            params, m,
+        )
+        return new, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adamw(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params):
+        count = state.count + 1
+        c = count.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads,
+        )
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        mu_hat_scale = 1.0 / (1 - b1**c)
+        nu_hat_scale = 1.0 / (1 - b2**c)
+
+        def step(p, m, n):
+            upd = (m * mu_hat_scale) / (jnp.sqrt(n * nu_hat_scale) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree.map(step, params, mu, nu)
+        return new, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree)

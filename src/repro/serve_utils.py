@@ -1,0 +1,94 @@
+"""Generation and evaluation utilities on top of the decode runtime.
+
+  sample_token    temperature / top-k / top-p sampling from logits
+  generate        batched autoregressive generation over any model family
+  perplexity      teacher-forced eval over a token stream
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import model_api
+from repro.models.transformer import ModelConfig
+
+
+def sample_token(
+    key: jax.Array,
+    logits: jax.Array,  # (b, vocab) f32
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 0.0,
+) -> jax.Array:
+    """Returns sampled token ids (b,). temperature<=0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p and 0.0 < top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.argmax(cum >= top_p, axis=-1)
+        cutoff = jnp.take_along_axis(
+            sorted_logits, cutoff_idx[:, None], axis=-1
+        )
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+def generate(
+    params: Any,
+    cfg: ModelConfig,
+    prompts: jax.Array,  # (b, prompt_len) int32
+    gen_len: int,
+    key: jax.Array,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 0.0,
+    cache: Optional[Any] = None,
+    attend_fn=None,
+) -> Tuple[jax.Array, Any]:
+    """Prefill via stepped decode (exact across families), then sample."""
+    b, plen = prompts.shape
+    max_seq = plen + gen_len
+    if cache is None:
+        cache = model_api.make_cache(cfg, b, max_seq, kv_dtype=jnp.float32)
+
+    step = jax.jit(
+        lambda p, t, c, pos: model_api.decode(
+            p, cfg, t, c, pos, attend_fn=attend_fn
+        )
+    )
+    logits = None
+    for i in range(plen):
+        logits, cache = step(
+            params, prompts[:, i: i + 1], cache, jnp.asarray(i, jnp.int32)
+        )
+    out = []
+    for i in range(plen, max_seq):
+        key, sk = jax.random.split(key)
+        tok = sample_token(sk, logits, temperature, top_k, top_p)
+        out.append(tok)
+        logits, cache = step(
+            params, tok[:, None].astype(jnp.int32), cache,
+            jnp.asarray(i, jnp.int32),
+        )
+    return jnp.stack(out, axis=1), cache
+
+
+def perplexity(
+    params: Any, cfg: ModelConfig, tokens: jax.Array, labels: jax.Array,
+    **extra,
+) -> float:
+    """exp(mean token NLL) under teacher forcing."""
+    loss, _ = model_api.loss(
+        params, cfg, tokens=tokens, labels=labels, **extra
+    )
+    return float(jnp.exp(loss))

@@ -1,0 +1,118 @@
+"""Every baseline the paper compares against must converge on the same
+heterogeneous strongly convex problem (exact gradients)."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, problems
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return problems.make_quadratic_problem(n=16, d=32, kappa=50)
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    # the paper's regime: large-ish kappa and d, heterogeneous Hessians
+    return problems.make_logreg_problem(
+        n=64, d=256, samples_per_client=8, kappa=1000.0, seed=0
+    )
+
+
+def gamma(prob):
+    return 2.0 / (prob.L + prob.mu)
+
+
+def test_gd(quad):
+    tr = baselines.run_gd(quad, gamma(quad), 400, record_every=100)
+    assert tr["suboptimality"][-1] < 1e-10
+
+
+def test_fedavg_has_client_drift_floor(logreg):
+    # LocalSGD with exact gradients converges to a BIASED fixed point on
+    # problems with heterogeneous curvature (client drift) — the motivation
+    # for TAMUNA's control variates.  (NB: on shared-Hessian quadratics the
+    # drift provably cancels, so this must be tested on logistic regression.)
+    tr = baselines.run_fedavg(
+        logreg, 0.3 * gamma(logreg), local_steps=8, num_rounds=600,
+        record_every=200,
+    )
+    floor = tr["suboptimality"][-1]
+    assert floor < 0.1  # converges...
+    assert floor > 1e-8  # ...but not to the exact solution
+
+
+def test_scaffold(quad):
+    tr = baselines.run_scaffold(
+        quad, 0.5 * gamma(quad), local_steps=5, num_rounds=500,
+        record_every=100,
+    )
+    assert tr["suboptimality"][-1] < 1e-12
+
+
+def test_scaffold_partial_participation(quad):
+    tr = baselines.run_scaffold(
+        quad, 0.5 * gamma(quad), local_steps=5, c=4, num_rounds=1500,
+        record_every=300,
+    )
+    assert tr["suboptimality"][-1] < 1e-8
+
+
+def test_scaffnew(quad):
+    tr = baselines.run_scaffnew(
+        quad, gamma(quad), p=0.3, num_iters=2000, record_every=500
+    )
+    assert tr["suboptimality"][-1] < 1e-12
+
+
+def test_compressed_scaffnew(quad):
+    tr = baselines.run_compressed_scaffnew(
+        quad, gamma(quad), p=0.3, s=4, num_iters=3000, record_every=500
+    )
+    assert tr["suboptimality"][-1] < 1e-10
+
+
+def test_diana(quad):
+    tr = baselines.run_diana(
+        quad, 0.5 / quad.L, k=4, num_rounds=3000, record_every=500
+    )
+    assert tr["suboptimality"][-1] < 1e-10
+
+
+def test_ef21(quad):
+    tr = baselines.run_ef21(
+        quad, 0.5 / quad.L, k=4, num_rounds=3000, record_every=500
+    )
+    assert tr["suboptimality"][-1] < 1e-10
+
+
+def test_5gcs(quad):
+    tr = baselines.run_5gcs(
+        quad, 0.25 / quad.mu, c=8, inner_steps=30, num_rounds=400,
+        record_every=100,
+    )
+    assert tr["suboptimality"][-1] < 1e-9
+
+
+def test_tamuna_beats_scaffold_on_upcom(logreg):
+    """Headline claim (paper Fig. 2, Table 1): in the large-kappa/large-d
+    regime, TAMUNA reaches target accuracy with several times fewer uploaded
+    floats per client than the non-accelerated LT+PP baseline."""
+    from repro.core import tamuna
+
+    target = float(logreg.suboptimality(logreg.x_star * 0.0)) * 1e-6
+    cfg = tamuna.TamunaConfig.tuned(logreg, c=16)
+    tr_t = tamuna.run(logreg, cfg, num_rounds=3000, record_every=20)
+    tr_s = baselines.run_scaffold(
+        logreg, 0.5 * gamma(logreg), local_steps=max(1, int(1 / cfg.p)),
+        c=16, num_rounds=3000, record_every=20,
+    )
+
+    def floats_to(tr):
+        idx = np.argmax(tr["suboptimality"] < target)
+        assert tr["suboptimality"][idx] < target, tr["algo"]
+        return tr["up_floats"][idx]
+
+    ft, fs = floats_to(tr_t), floats_to(tr_s)
+    assert ft < fs / 3, (ft, fs)  # at least a 3x UpCom win

@@ -1,0 +1,151 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the ref.py
+pure-jnp oracles (interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------
+# compress
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [64, 1000, 4096, 5001])
+@pytest.mark.parametrize("c,s", [(8, 3), (16, 4), (12, 2)])
+def test_compress_sweep(d, c, s):
+    x = jax.random.normal(jax.random.key(d + c), (d,))
+    for slot in [0, c // 2, c - 1, c, c + 3]:
+        out = ops.compress(x, jnp.asarray([slot], jnp.int32), c, s, block=512)
+        exp = ref.compress_ref(x, jnp.asarray(slot, jnp.int32), c, s)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_compress_covers_each_coordinate_s_times():
+    d, c, s = 257, 8, 3
+    x = jnp.ones((d,))
+    total = sum(
+        np.asarray(
+            ops.compress(x, jnp.asarray([j], jnp.int32), c, s, block=128)
+        )
+        for j in range(c)
+    )
+    np.testing.assert_array_equal(total, np.full(d, s))
+
+
+@given(
+    st.integers(2, 20), st.integers(2, 20), st.integers(1, 600),
+    st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_compress_property(c, s, d, seed):
+    if s > c:
+        s = c
+    x = jax.random.normal(jax.random.key(seed), (d,))
+    slot = seed % (c + 2)
+    out = ops.compress(x, jnp.asarray([slot], jnp.int32), c, s, block=128)
+    exp = ref.compress_ref(x, jnp.asarray(slot, jnp.int32), c, s)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+# --------------------------------------------------------------------------
+# fused local step
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64,), (33, 7), (4, 5, 6)])
+def test_local_step_sweep(dtype, shape):
+    ks = jax.random.split(jax.random.key(1), 3)
+    x = jax.random.normal(ks[0], shape, jnp.float32).astype(dtype)
+    g = jax.random.normal(ks[1], shape, jnp.float32)
+    h = jax.random.normal(ks[2], shape, jnp.float32)
+    out = ops.fused_local_step(x, g, h, 0.03, block=128)
+    exp = ref.fused_local_step_ref(x, g, h, 0.03)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@given(st.integers(1, 3000), st.floats(1e-4, 1.0), st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_local_step_property(d, gamma, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(ks[0], (d,))
+    g = jax.random.normal(ks[1], (d,))
+    h = jax.random.normal(ks[2], (d,))
+    out = ops.fused_local_step(x, g, h, gamma, block=256)
+    exp = ref.fused_local_step_ref(x, g, h, gamma)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), rtol=1e-5, atol=1e-6
+    )
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,hd,S,bs",
+    [
+        (2, 8, 4, 64, 1024, 256),
+        (1, 4, 1, 128, 2048, 512),
+        (3, 6, 6, 32, 512, 128),   # MHA (whisper-like)
+        (1, 8, 1, 64, 1024, 1024),  # single KV block
+    ],
+)
+def test_decode_attention_sweep(b, h, kvh, hd, S, bs):
+    ks = jax.random.split(jax.random.key(b * h + S), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, S, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, S, kvh, hd), jnp.float32)
+    for pos in [0, S // 3, S - 1]:
+        out = ops.decode_attention(
+            q, k, v, jnp.asarray(pos, jnp.int32), block_s=bs
+        )
+        exp = ref.decode_attention_ref(q, k, v, jnp.asarray(pos, jnp.int32))
+        assert float(jnp.abs(out - exp).max()) < 2e-5, pos
+
+
+@pytest.mark.parametrize("window", [16, 128])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_decode_attention_window_softcap(window, softcap):
+    b, h, kvh, hd, S = 2, 4, 2, 64, 512
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, S, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, S, kvh, hd), jnp.float32)
+    pos = jnp.asarray(300, jnp.int32)
+    out = ops.decode_attention(
+        q, k, v, pos, window=window, softcap=softcap, block_s=128
+    )
+    exp = ref.decode_attention_ref(q, k, v, pos, window=window,
+                                   softcap=softcap)
+    assert float(jnp.abs(out - exp).max()) < 2e-5
+
+
+def test_decode_attention_bf16():
+    b, h, kvh, hd, S = 1, 4, 2, 64, 512
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, S, kvh, hd), jnp.float32).astype(
+        jnp.bfloat16
+    )
+    v = jax.random.normal(ks[2], (b, S, kvh, hd), jnp.float32).astype(
+        jnp.bfloat16
+    )
+    pos = jnp.asarray(S - 1, jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, block_s=128)
+    exp = ref.decode_attention_ref(q, k, v, pos)
+    assert out.dtype == jnp.bfloat16
+    err = float(jnp.abs(
+        out.astype(jnp.float32) - exp.astype(jnp.float32)
+    ).max())
+    assert err < 3e-2, err

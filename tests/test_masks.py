@@ -1,0 +1,118 @@
+"""Property tests for the permutation compression masks (paper Fig. 1).
+
+These are the paper's load-bearing combinatorial facts: exactly s owners per
+coordinate (-> zero error at consensus), balanced columns (-> ceil(sd/c)
+uplink floats per client), unbiased aggregation over the permutation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression, masks
+
+dcs = st.tuples(
+    st.integers(1, 64),   # d
+    st.integers(2, 24),   # c
+    st.integers(2, 24),   # s
+).filter(lambda t: t[2] <= t[1])
+
+
+@given(dcs)
+@settings(max_examples=60, deadline=None)
+def test_template_row_and_column_properties(t):
+    d, c, s = t
+    q = masks.template_mask(d, c, s)
+    assert q.shape == (d, c)
+    # every coordinate has exactly s owners
+    assert (q.sum(axis=1) == s).all()
+    if d * s >= c:
+        nnz = q.sum(axis=0)
+        assert nnz.max() <= -(-s * d // c)
+        assert nnz.min() >= (s * d) // c
+    else:
+        assert q.sum() == d * s
+
+
+@given(dcs, st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_closed_form_matches_template_permutation(t, seed):
+    d, c, s = t
+    key = jax.random.key(seed)
+    perm = masks.sample_permutation(key, c)
+    q = np.asarray(masks.mask_from_permutation(perm, d, c, s))
+    templ = masks.template_mask(d, c, s)
+    expected = templ[:, np.asarray(perm)]
+    np.testing.assert_array_equal(q, expected)
+
+
+@given(dcs)
+@settings(max_examples=30, deadline=None)
+def test_blocked_template_row_property(t):
+    d, c, s = t
+    q = masks.block_template_mask(d, c, s)
+    assert (q.sum(axis=1) == s).all()
+
+
+@given(st.integers(2, 16), st.integers(2, 8), st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_exact_at_consensus(c, s, seed):
+    if s > c:
+        s = c
+    d = 23
+    v = jax.random.normal(jax.random.key(seed), (d,))
+    xs = jnp.broadcast_to(v, (c, d))
+    q = masks.sample_mask(jax.random.key(seed + 1), d, c, s)
+    xbar = compression.aggregate_masked(xs, q, s)
+    np.testing.assert_allclose(np.asarray(xbar), np.asarray(v), rtol=1e-6)
+
+
+def test_aggregation_unbiased_over_permutations():
+    """E_perm[(1/s) sum_i C_i(x_i)] == mean_i(x_i) (paper Section A.1)."""
+    d, c, s = 6, 4, 2
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(c, d)))
+    import itertools
+
+    acc = np.zeros(d)
+    perms = list(itertools.permutations(range(c)))
+    for p in perms:
+        q = masks.mask_from_permutation(jnp.asarray(p), d, c, s)
+        acc += np.asarray(compression.aggregate_masked(xs, q, s))
+    acc /= len(perms)
+    np.testing.assert_allclose(acc, np.asarray(xs).mean(axis=0), atol=1e-10)
+
+
+def test_column_nnz_formula():
+    assert masks.column_nnz(300, 16, 4) == 75
+    assert masks.column_nnz(5, 7, 2) == 2
+    assert masks.column_nnz(3, 10, 2) == 1
+
+
+def test_small_d_regime():
+    # c/s >= d regime of Fig. 1(d)
+    q = masks.template_mask(3, 10, 2)
+    assert (q.sum(axis=1) == 2).all()
+    assert q[:, 6:].sum() == 0  # columns >= d*s are empty
+
+
+@given(st.integers(2, 12), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_rand_k_unbiased(k, seed):
+    d = 24
+    if k > d:
+        k = d
+    x = jax.random.normal(jax.random.key(seed), (d,))
+    keys = jax.random.split(jax.random.key(seed + 1), 600)
+    outs = jax.vmap(lambda kk: compression.rand_k(kk, x, k))(keys)
+    est = outs.mean(axis=0)
+    err = float(jnp.abs(est - x).max())
+    assert err < 1.0, err  # stochastic; loose bound
+
+
+def test_top_k():
+    x = jnp.asarray([1.0, -5.0, 2.0, 0.1])
+    out = compression.top_k(x, 2)
+    np.testing.assert_allclose(np.asarray(out), [0.0, -5.0, 2.0, 0.0])

@@ -1,0 +1,80 @@
+"""Generation/eval utilities + registry/cache structural consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve_utils
+from repro.configs import registry
+from repro.dist import model_api
+from repro.models.transformer import ModelConfig
+
+CFG = ModelConfig(
+    family="dense", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab=97, dtype=jnp.float32, remat=False,
+)
+
+
+def test_sample_token_greedy_and_temperature():
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [3.0, 0.0, -1.0]])
+    tok = serve_utils.sample_token(jax.random.key(0), logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(tok), [1, 0])
+    # top-k=1 equals greedy regardless of temperature
+    tok2 = serve_utils.sample_token(
+        jax.random.key(1), logits, temperature=2.0, top_k=1
+    )
+    np.testing.assert_array_equal(np.asarray(tok2), [1, 0])
+
+
+def test_top_p_restricts_support():
+    logits = jnp.asarray([[10.0, 9.5, -10.0, -10.0]])
+    toks = [
+        int(serve_utils.sample_token(
+            jax.random.key(i), logits, temperature=1.0, top_p=0.9
+        )[0])
+        for i in range(50)
+    ]
+    assert set(toks) <= {0, 1}
+
+
+def test_generate_shapes_and_determinism():
+    params = model_api.init(jax.random.key(0), CFG)
+    prompts = jax.random.randint(jax.random.key(1), (2, 5), 0, CFG.vocab)
+    out1, _ = serve_utils.generate(
+        params, CFG, prompts, gen_len=4, key=jax.random.key(7),
+        temperature=0.8, top_k=10,
+    )
+    out2, _ = serve_utils.generate(
+        params, CFG, prompts, gen_len=4, key=jax.random.key(7),
+        temperature=0.8, top_k=10,
+    )
+    assert out1.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < CFG.vocab
+
+
+def test_perplexity_finite_and_sane():
+    params = model_api.init(jax.random.key(0), CFG)
+    toks = jax.random.randint(jax.random.key(1), (2, 24), 0, CFG.vocab)
+    ppl = serve_utils.perplexity(params, CFG, toks[:, :-1], toks[:, 1:])
+    assert 1.0 < ppl < 10 * CFG.vocab
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_registry_cache_specs_match_model_cache(arch):
+    """input_specs' decode cache structure must exactly match the cache the
+    model actually builds (shape+dtype), for every architecture."""
+    cfg = registry.get_config(arch, "decode_32k")
+    B, S = 2, 64  # structural check at reduced batch/seq
+    spec = registry.cache_specs(cfg, B, S, jnp.bfloat16)
+    real = jax.eval_shape(
+        lambda: model_api.make_cache(cfg, B, S, kv_dtype=jnp.bfloat16)
+    )
+    spec_flat = jax.tree_util.tree_flatten_with_path(spec)[0]
+    real_flat = jax.tree_util.tree_flatten_with_path(real)[0]
+    assert len(spec_flat) == len(real_flat), arch
+    for (ps, s), (pr, r) in zip(spec_flat, real_flat):
+        assert str(ps) == str(pr), (arch, ps, pr)
+        assert s.shape == r.shape, (arch, ps, s.shape, r.shape)
+        assert s.dtype == r.dtype, (arch, ps, s.dtype, r.dtype)

@@ -1,0 +1,116 @@
+"""Data pipeline, optimizers, checkpointing, theory formulas."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.core import theory
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models.transformer import ModelConfig
+from repro.optim import adamw, clip_by_global_norm, global_norm, momentum, sgd
+
+
+def test_pipeline_shapes_and_determinism():
+    cfg = ModelConfig(vocab=64, d_model=32)
+    p1 = SyntheticTokenPipeline(DataConfig(seq_len=16, per_client_batch=3,
+                                           vocab=64, seed=7), cfg)
+    p2 = SyntheticTokenPipeline(DataConfig(seq_len=16, per_client_batch=3,
+                                           vocab=64, seed=7), cfg)
+    b1, b2 = p1.next_batch(), p2.next_batch()
+    assert b1["tokens"].shape == (1, 3, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        np.asarray(b1["tokens"][..., 1:]), np.asarray(b1["labels"][..., :-1])
+    )
+
+
+def test_pipeline_heterogeneity_knob():
+    cfg = ModelConfig(vocab=32, d_model=16)
+    iid = SyntheticTokenPipeline(
+        DataConfig(seq_len=8, vocab=32, heterogeneity=0.0, seed=1,
+                   n_clients=4), cfg)
+    het = SyntheticTokenPipeline(
+        DataConfig(seq_len=8, vocab=32, heterogeneity=1.0, seed=1,
+                   n_clients=4), cfg)
+    # iid: all client transition tables identical by construction
+    assert np.allclose(iid.trans.std(axis=0), 0.0)
+    assert het.trans.std(axis=0).max() > 0.0
+
+
+def _rosenbrockish(params):
+    return jnp.sum((params["a"] - 1.5) ** 2) + jnp.sum(params["b"] ** 2) * 4.0
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adamw"])
+def test_optimizers_minimize(opt_name):
+    opt = {"sgd": sgd(0.1), "momentum": momentum(0.05),
+           "adamw": adamw(0.1)}[opt_name]
+    params = {"a": jnp.zeros((4,)), "b": jnp.ones((3,))}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(_rosenbrockish)(params)
+        params, state = opt.update(g, state, params)
+    assert float(_rosenbrockish(params)) < 1e-3, opt_name
+
+
+def test_clip_by_global_norm():
+    tree = {"x": jnp.full((4,), 10.0)}
+    assert abs(float(global_norm(tree)) - 20.0) < 1e-5
+    clipped = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+    }
+    path = os.path.join(tmp_path, "step_3")
+    checkpoint.save(path, tree, step=3)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = checkpoint.restore(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+    assert checkpoint.latest_step(tmp_path) == 3
+
+
+def test_theory_formulas():
+    # chi bound in (1/2, 1]
+    assert 0.5 < theory.chi_max(1000, 2) <= 1.0
+    assert theory.chi_max(10, 10) == pytest.approx(10 * 9 / (10 * 9))
+    # tau < 1 for valid params
+    tau = theory.theorem1_rate(1e-4, 1.0, 1e4, 0.1, 0.5, 100, 4)
+    assert 0 < tau < 1
+    # recommended s (eq. 14)
+    assert theory.recommended_s(c=100, d=300, alpha=0.0) == 2
+    assert theory.recommended_s(c=1000, d=3, alpha=0.0) == 333
+    assert theory.recommended_s(c=100, d=300, alpha=0.5) == 50
+    # TAMUNA TotalCom beats GD by a wide margin in the paper's regime
+    kappa, d, n, c = 1e4, 300, 1000, 1000
+    s = theory.recommended_s(c, d, 0.0)
+    p = theory.recommended_p(n, s, kappa)
+    t_tamuna = theory.totalcom_complexity(kappa, n, c, s, d, p, 0.0)
+    t_gd = theory.gd_totalcom(kappa, d, 0.0)
+    assert t_tamuna < t_gd / 50
+    # and beats Scaffnew (CC acceleration on top of LT)
+    t_scaffnew = theory.scaffnew_totalcom(kappa, d, 0.0)
+    assert t_tamuna < t_scaffnew
+
+
+def test_tuned_params_satisfy_theorem1_conditions():
+    tp = theory.TunedParams.for_problem(
+        mu=1.0, L=1e4, n=1000, c=100, d=300, alpha=0.0
+    )
+    assert 0 < tp.gamma < 2.0 / 1e4 * (1 + 1e-4) * 2  # gamma < 2/L region
+    assert 0 < tp.p <= 1
+    assert 2 <= tp.s <= 100
+    assert 0 < tp.chi <= theory.chi_max(1000, tp.s) + 1e-12

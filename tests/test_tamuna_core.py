@@ -1,0 +1,106 @@
+"""Convergence tests for the paper-faithful federated core (Theorem 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, problems, tamuna, theory
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return problems.make_quadratic_problem(n=16, d=32, kappa=50)
+
+
+def test_linear_convergence_to_exact_solution(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8)
+    tr = tamuna.run(quad, cfg, num_rounds=2000, record_every=200)
+    assert tr["suboptimality"][-1] < 1e-9
+
+
+def test_empirical_rate_respects_theorem1(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8)
+    chi = cfg.eta / cfg.p
+    tau = theory.theorem1_rate(
+        cfg.gamma, quad.mu, quad.L, cfg.p, chi, quad.n, cfg.s
+    )
+    tr = tamuna.run(quad, cfg, num_rounds=1500, record_every=100)
+    ly, st = tr["lyapunov"], tr["local_steps"]
+    emp = (ly[-1] / ly[2]) ** (1.0 / (st[-1] - st[2]))
+    assert emp <= tau * 1.03, (emp, tau)
+
+
+def test_control_variate_sum_invariant(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=6)
+    tr = tamuna.run(quad, cfg, num_rounds=50)
+    h = tr["state"].h
+    assert float(jnp.abs(h.sum(axis=0)).max()) < 1e-8
+
+
+def test_control_variates_converge_to_grad_at_optimum(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=quad.n)
+    tr = tamuna.run(quad, cfg, num_rounds=2500, record_every=500)
+    h_err = float(jnp.abs(tr["state"].h - quad.h_star()).max())
+    assert h_err < 1e-4, h_err
+
+
+def test_partial_participation_levels(quad):
+    # converges with as few as 2 active clients (paper: any c >= 2)
+    for c in (2, 4, 16):
+        cfg = tamuna.TamunaConfig.tuned(quad, c=c)
+        tr = tamuna.run(quad, cfg, num_rounds=600, record_every=600)
+        assert tr["suboptimality"][-1] < 1.0, (c, tr["suboptimality"][-1])
+
+
+def test_sigma_noise_converges_to_neighborhood(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8, sigma=0.05)
+    tr = tamuna.run(quad, cfg, num_rounds=800, record_every=100)
+    tail = tr["suboptimality"][-4:]
+    assert tail.max() < 1e-2  # noise floor, not divergence
+    cfg0 = tamuna.TamunaConfig.tuned(quad, c=8)
+    tr0 = tamuna.run(quad, cfg0, num_rounds=800, record_every=100)
+    assert tr0["suboptimality"][-1] < tail.min()  # exact < noisy floor
+
+
+def test_no_compression_mode_is_valid(quad):
+    # s = c disables compression (paper Table 3); still converges
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8, s=8)
+    tr = tamuna.run(quad, cfg, num_rounds=500, record_every=500)
+    assert tr["suboptimality"][-1] < 1e-3
+
+
+def test_blocked_mask_variant(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8, blocked_mask=True)
+    tr = tamuna.run(quad, cfg, num_rounds=1200, record_every=400)
+    assert tr["suboptimality"][-1] < 1e-6
+
+
+def test_fixed_L_rule_of_thumb(quad):
+    # Remark 2: replace p by 1/L with fixed round lengths.  Periodic
+    # communication converges more slowly than geometric (the theory's
+    # randomness matters), but still linearly.
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8, geometric_L=False)
+    tr = tamuna.run(quad, cfg, num_rounds=3000, record_every=1000)
+    assert tr["suboptimality"][-1] < 1e-4
+
+
+def test_logreg_problem_converges():
+    prob = problems.make_logreg_problem(
+        n=16, d=40, samples_per_client=8, kappa=100.0, seed=1
+    )
+    assert prob.f_star is not None and prob.x_star is not None
+    # Newton solution is a stationary point
+    g = prob.grad(prob.x_star)
+    assert float(jnp.abs(g).max()) < 1e-8
+    cfg = tamuna.TamunaConfig.tuned(prob, c=8)
+    tr = tamuna.run(prob, cfg, num_rounds=1500, record_every=500)
+    assert tr["suboptimality"][-1] < 1e-8
+
+
+def test_communication_accounting(quad):
+    cfg = tamuna.TamunaConfig.tuned(quad, c=8)
+    tr = tamuna.run(quad, cfg, num_rounds=10)
+    per_round_up = tr["up_floats"][-1] / 10
+    assert per_round_up == max(1, -(-cfg.s * quad.d // cfg.c))
+    assert tr["down_floats"][-1] == 10 * quad.d
