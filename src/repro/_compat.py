@@ -1,0 +1,58 @@
+"""Forward-compatibility shims for older jax versions.
+
+The test-suite and the launch layer target the newer sharding surface
+(``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``).
+On containers pinned to an older jax (0.4.3x) those names do not exist;
+this module installs no-op equivalents so the same code runs on both.
+Installed from ``repro/__init__.py`` so any ``repro.*`` import (which all
+entry points and subprocess tests perform before building a mesh) is
+sufficient.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+
+def install() -> None:
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        from jax.experimental import mesh_utils
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types
+            return jax.sharding.Mesh(
+                mesh_utils.create_device_mesh(tuple(axis_shapes),
+                                              devices=devices),
+                tuple(axis_names),
+            )
+
+        jax.make_mesh = make_mesh
+    elif "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig = jax.make_mesh
+
+        @functools.wraps(_orig)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # Auto is the only type this codebase uses and it is the old
+            # default behaviour, so dropping the argument is faithful.
+            del axis_types
+            return _orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+
+install()

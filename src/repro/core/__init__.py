@@ -8,8 +8,26 @@ Layout:
   baselines.py    GD / FedAvg / Scaffold / Scaffnew / CompressedScaffnew /
                   DIANA / EF21 / 5GCS
   theory.py       Theorem 1/3 rates and Tables 1-2 complexity formulas
+
+Submodules are loaded lazily (PEP 562): ``problems`` (and everything that
+imports it) enables jax x64 at import — the convex reproduction tracks
+suboptimality to ~1e-12 — and the LM/dist stack must NOT inherit that just
+for importing ``masks`` or ``theory``.
 """
 
-from repro.core import baselines, compression, masks, problems, tamuna, theory
+import importlib
 
-__all__ = ["baselines", "compression", "masks", "problems", "tamuna", "theory"]
+_MODULES = ("baselines", "compression", "masks", "problems", "tamuna",
+            "theory")
+
+__all__ = list(_MODULES)
+
+
+def __getattr__(name):
+    if name in _MODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_MODULES))

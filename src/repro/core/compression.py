@@ -17,6 +17,13 @@ import jax.numpy as jnp
 
 from repro.core import masks
 
+# The convex reproduction (this module's only consumers: tamuna, baselines,
+# and their tests) tracks aggregation error to ~1e-10; keep the f64 flag on
+# here so importing the compression stack alone — without problems.py —
+# still gives f64 numerics.  The LM/dist stack imports masks/theory only
+# and stays out of x64 (see repro/core/__init__.py).
+jax.config.update("jax_enable_x64", True)
+
 __all__ = [
     "apply_mask",
     "aggregate_masked",

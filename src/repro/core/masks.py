@@ -40,6 +40,7 @@ __all__ = [
     "sample_permutation",
     "mask_from_permutation",
     "column_nnz",
+    "block_column_nnz",
     "owner_band_start",
 ]
 
@@ -125,6 +126,13 @@ def sample_mask(
 def column_nnz(d: int, c: int, s: int) -> int:
     """Worst-case uploaded floats per client: ``ceil(s d / c)`` (or 1)."""
     return max(1, -(-s * d // c))
+
+
+def block_column_nnz(d: int, c: int, s: int) -> int:
+    """Worst-case uploaded floats per client under the *blocked* template:
+    ``s`` chunks of ``ceil(d/c)`` coordinates (capped at ``d``) — slightly
+    above the cyclic template's ``ceil(s d / c)`` when ``d % c != 0``."""
+    return min(d, s * -(-d // c))
 
 
 def owner_band_start(k: jax.Array, d: int, c: int, s: int) -> jax.Array:

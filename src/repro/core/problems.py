@@ -36,6 +36,9 @@ class FiniteSumProblem:
 
     grad_all(x)       -> (n, d) per-client exact gradients at shared x
     grad_all_local(X) -> (n, d) per-client gradients at per-client models X(n,d)
+    grad_cohort(X, cohort) -> (c, d) gradients of clients ``cohort`` at
+                          their models X (c, d) — the O(c d) path a TAMUNA
+                          round actually needs (only the cohort works).
     """
 
     n: int
@@ -48,6 +51,7 @@ class FiniteSumProblem:
     f_star: Optional[float] = None
     name: str = "problem"
     meta: dict = field(default_factory=dict)
+    grad_cohort: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None
 
     @property
     def kappa(self) -> float:
@@ -65,6 +69,14 @@ class FiniteSumProblem:
     def h_star(self) -> jax.Array:
         """Per-client optimal control variates ``h_i* = grad f_i(x*)``."""
         return self.grad_all(self.x_star)
+
+    def cohort_grads(self, X: jax.Array, cohort: jax.Array) -> jax.Array:
+        """(c, d) gradients for the cohort only; falls back to the O(n d)
+        scatter-into-population path for problems without ``grad_cohort``."""
+        if self.grad_cohort is not None:
+            return self.grad_cohort(X, cohort)
+        Xn = jnp.zeros((self.n, self.d), X.dtype).at[cohort].set(X)
+        return self.grad_all_local(Xn)[cohort]
 
 
 def _logistic_loss(x, A, b, mu):
@@ -123,9 +135,13 @@ def make_logreg_problem(
     def grad_all_local(X):
         return jax.vmap(client_grad)(X, A_j, b_j)
 
+    @jax.jit
+    def grad_cohort(X, cohort):
+        return jax.vmap(client_grad)(X, A_j[cohort], b_j[cohort])
+
     prob = FiniteSumProblem(
         n=n, d=d, mu=float(mu), L=float(L), f=jax.jit(f),
-        grad_all_local=grad_all_local, name=name,
+        grad_all_local=grad_all_local, grad_cohort=grad_cohort, name=name,
         meta=dict(samples_per_client=m, kappa=kappa, seed=seed),
     )
     solve_exactly(prob, A_flat, b.reshape(-1), mu)
@@ -159,9 +175,13 @@ def make_quadratic_problem(
     def grad_all_local(X):
         return X * diag_j[None, :] - t_j
 
+    @jax.jit
+    def grad_cohort(X, cohort):
+        return X * diag_j[None, :] - t_j[cohort]
+
     prob = FiniteSumProblem(
         n=n, d=d, mu=mu, L=L, f=jax.jit(f),
-        grad_all_local=grad_all_local,
+        grad_all_local=grad_all_local, grad_cohort=grad_cohort,
         x_star=jnp.asarray(x_star), name=name, meta=dict(kappa=kappa),
     )
     prob.f_star = float(prob.f(prob.x_star))

@@ -69,10 +69,19 @@ class TamunaState(NamedTuple):
 
 def init(prob: FiniteSumProblem, x0: Optional[jax.Array] = None) -> TamunaState:
     d = prob.d
-    x_bar = jnp.zeros((d,)) if x0 is None else x0
+    # copy x0: run() donates state buffers into the scan driver and must not
+    # invalidate a caller-owned array
+    x_bar = jnp.zeros((d,)) if x0 is None else jnp.array(x0)
     zeros = jnp.zeros((prob.n, d))
-    z = jnp.zeros((), jnp.int64)
-    return TamunaState(x_bar, zeros, z, z, z, z)
+    # int32 counters regardless of jax_enable_x64 (jnp.int64 silently
+    # truncates to int32 without the flag); the float accounting
+    # accumulators are overflow-safe at LM-scale d where int32 is not.
+    # The core always runs with x64 active (problems.py enables it at
+    # import), so these are true float64 — exact integer accounting to
+    # 2^53.  Distinct buffers per field: run() donates the whole state.
+    zi = lambda: jnp.zeros((), jnp.int32)
+    zf = lambda: jnp.zeros(())  # default float: f64 under the x64 flag
+    return TamunaState(x_bar, zeros, zi(), zi(), zf(), zf())
 
 
 def _local_steps(
@@ -87,9 +96,10 @@ def _local_steps(
     """Run ``L`` local steps x <- x - gamma g + gamma h for the cohort."""
 
     def grads(X, gkey):
-        # Per-client gradient at per-client model; gather the cohort's rows.
-        Xn = jnp.zeros((prob.n, prob.d), X.dtype).at[cohort].set(X)
-        G = prob.grad_all_local(Xn)[cohort]
+        # Cohort-only gradients: O(c d) per local step.  (The previous
+        # scatter-into-(n, d)-and-gather path made every local step O(n d),
+        # defeating partial participation at large n.)
+        G = prob.cohort_grads(X, cohort)
         if cfg.sigma > 0.0:
             G = G + cfg.sigma * jax.random.normal(gkey, G.shape, G.dtype)
         return G
@@ -121,11 +131,11 @@ def round_step(
     if cfg.geometric_L:
         u = jax.random.uniform(k_L, (), minval=1e-12, maxval=1.0)
         L = jnp.minimum(
-            1 + jnp.floor(jnp.log(u) / jnp.log1p(-cfg.p)).astype(jnp.int64),
+            1 + jnp.floor(jnp.log(u) / jnp.log1p(-cfg.p)).astype(jnp.int32),
             cfg.max_L,
         )
     else:
-        L = jnp.asarray(max(1, round(1.0 / cfg.p)), jnp.int64)
+        L = jnp.asarray(max(1, round(1.0 / cfg.p)), jnp.int32)
 
     h_cohort = state.h[cohort]
     x0 = jnp.broadcast_to(state.x_bar, (cfg.c, prob.d))
@@ -151,14 +161,19 @@ def round_step(
     )
     h = state.h.at[cohort].add(delta)
 
-    up = compression.uplink_floats_permutation(prob.d, cfg.c, cfg.s)
+    up = (
+        masks.block_column_nnz(prob.d, cfg.c, cfg.s)
+        if cfg.blocked_mask
+        else compression.uplink_floats_permutation(prob.d, cfg.c, cfg.s)
+    )
     return TamunaState(
         x_bar=x_bar_new,
         h=h,
         round=state.round + 1,
         total_local_steps=state.total_local_steps + L,
-        up_floats=state.up_floats + up,
-        down_floats=state.down_floats + prob.d,
+        # weakly-typed python scalars: no downcast of the f64 accumulators
+        up_floats=state.up_floats + float(up),
+        down_floats=state.down_floats + float(prob.d),
     )
 
 
@@ -187,23 +202,46 @@ def run(
     record_every: int = 1,
     x0: Optional[jax.Array] = None,
 ) -> dict:
-    """Drive ``num_rounds`` rounds; return a trace dict for plotting/tests."""
+    """Drive ``num_rounds`` rounds; return a trace dict for plotting/tests.
+
+    Rounds between record points run as a single donated ``lax.scan`` — one
+    dispatch per trace entry instead of one per round, and no host sync
+    inside a chunk.  Record points (after round r for r % record_every == 0
+    and the final round) and the key sequence are identical to the old
+    per-round Python loop, so traces are reproducible across the rewrite.
+    """
     state = init(prob, x0)
-    step = jax.jit(partial(round_step, prob, cfg))
     key = jax.random.key(seed)
 
+    @partial(jax.jit, static_argnames=("length",), donate_argnums=(0,))
+    def run_chunk(state, key, length: int):
+        def body(carry, _):
+            st, k = carry
+            k, rk = jax.random.split(k)
+            return (round_step(prob, cfg, st, rk), k), None
+
+        (state, key), _ = jax.lax.scan(
+            body, (state, key), None, length=length
+        )
+        return state, key
+
+    record_pts = (
+        sorted(set(range(0, num_rounds, max(1, record_every)))
+               | {num_rounds - 1})
+        if num_rounds > 0 else []
+    )
     rounds, subopt, up, down, steps, lyap = [], [], [], [], [], []
-    for r in range(num_rounds):
-        key, rk = jax.random.split(key)
-        state = step(state, rk)
-        if r % record_every == 0 or r == num_rounds - 1:
-            rounds.append(r + 1)
-            subopt.append(float(prob.suboptimality(state.x_bar)))
-            up.append(int(state.up_floats))
-            down.append(int(state.down_floats))
-            steps.append(int(state.total_local_steps))
-            if prob.x_star is not None:
-                lyap.append(float(lyapunov(prob, cfg, state)))
+    prev = -1
+    for r in record_pts:
+        state, key = run_chunk(state, key, length=r - prev)
+        prev = r
+        rounds.append(r + 1)
+        subopt.append(float(prob.suboptimality(state.x_bar)))
+        up.append(int(state.up_floats))
+        down.append(int(state.down_floats))
+        steps.append(int(state.total_local_steps))
+        if prob.x_star is not None:
+            lyap.append(float(lyapunov(prob, cfg, state)))
     return dict(
         algo="tamuna",
         rounds=np.array(rounds),

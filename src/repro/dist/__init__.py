@@ -1,0 +1,12 @@
+"""Distributed TAMUNA engine: sharding rules, the TAMUNA-DP trainer, the
+reduce-scatter blocked uplink, and the family-dispatching model API.
+
+  sharding     mesh helpers + PartitionSpec derivation (clients = data axes)
+  tamuna_dp    DistTamunaConfig / init_state / local + comm step builders
+  block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
+  model_api    init / loss / prefill / make_cache / decode over the zoo
+"""
+
+from repro.dist import block_uplink, model_api, sharding, tamuna_dp
+
+__all__ = ["block_uplink", "model_api", "sharding", "tamuna_dp"]

@@ -1,0 +1,109 @@
+"""Blocked-template uplink: the reduce-scatter-shaped aggregation.
+
+The cyclic permutation template scatters each client's owned coordinates
+across the whole vector, which lowers to a full-width masked all-reduce.
+The *blocked* template (``masks.block_template_mask``) keeps the exactly-
+``s``-owners row property but gives every client ``s`` contiguous chunks,
+so the uplink becomes reduce-scatter shaped: chunk ``j`` is the sum of the
+``s`` owners' chunk-``j`` slices — ``s`` shifted adds over the client axis
+instead of an ``n``-wide masked sum, and no dense ``(n, d)`` mask is ever
+materialized in HBM (ownership is the closed form
+``(chunk - client - off) mod n < s``).
+
+The round permutation is restricted to cyclic shifts (``off``), which is
+exactly the subgroup of column permutations that preserves block
+contiguity; unbiasedness over the shift ensemble follows from the same
+row-property argument as the paper's Appendix A.1 (see DESIGN.md §3).
+
+Per-leaf coordinates are chunked in flat order, so with tensor parallelism
+the template is a per-TP-shard row reordering of the global one — still a
+valid exactly-``s``-owners template.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["block_rs_aggregate"]
+
+
+def _leaf_aggregate(
+    xl: jax.Array,  # (n, *param_shape)
+    hl: jax.Array,  # (n, *param_shape) control variates
+    off: jax.Array,  # int32 scalar: cyclic shift of the ownership bands
+    n: int,
+    s: int,
+    scale,  # eta / gamma
+) -> Tuple[jax.Array, jax.Array]:
+    rest = xl.shape[1:]
+    D = int(np.prod(rest))
+    chunk = -(-D // n)  # ceil; last chunk ragged
+    pad = n * chunk - D
+
+    xf = xl.reshape(n, D).astype(jnp.float32)
+    hf = hl.reshape(n, D).astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        hf = jnp.pad(hf, ((0, 0), (0, pad)))
+    xb = xf.reshape(n, n, chunk)  # (client, block, chunk)
+
+    j = jnp.arange(n, dtype=jnp.int32)
+    # out[j] = (1/s) sum_t x[(j - off - t) mod n, j]: s shifted diagonal
+    # reads -- the reduce-scatter shape (each owner contributes one slice)
+    acc = jnp.zeros((n, chunk), jnp.float32)
+    for t in range(s):
+        idx = (j - off - t) % n
+        acc = acc + xb[idx, j]
+    out = acc / s  # (block, chunk)
+
+    # ownership: client i owns blocks (i+off) .. (i+off+s-1) mod n
+    own = ((j[None, :] - j[:, None] - off) % n) < s  # (client, block)
+    delta = scale * own[:, :, None].astype(jnp.float32) * (out[None] - xb)
+    h_new = (hf.reshape(n, n, chunk) + delta).reshape(n, n * chunk)[:, :D]
+
+    flat = out.reshape(-1)[:D]
+    x_new = jnp.broadcast_to(flat[None], (n, D))
+    return (
+        x_new.astype(xl.dtype).reshape(xl.shape),
+        h_new.astype(hl.dtype).reshape(hl.shape),
+    )
+
+
+def block_rs_aggregate(
+    x: Any,
+    h: Any,
+    off: jax.Array,
+    n: int,
+    tcfg,
+    eta: float,
+    mesh: Optional[Any] = None,
+    *,
+    model_cfg=None,
+) -> Tuple[Any, Any]:
+    """Aggregate client-stacked pytrees under the blocked template.
+
+    Returns ``(x_new, h_new)``: every client row of ``x_new`` equals the
+    owner-mean server model; ``h_new`` applies the control-variate update on
+    owned blocks only, preserving ``sum_i h_i == 0`` exactly at the
+    coordinate level (the per-coordinate deltas sum to
+    ``s*x_bar - s*x_bar``).  Pure jnp over the stacked client axis, so under
+    a data-sharded mesh GSPMD lowers the shifted adds to reduce-scatter /
+    collective-permute traffic; ``mesh``/``model_cfg`` are accepted for API
+    symmetry and future shard_map specialization.
+    """
+    del mesh, model_cfg
+    scale = eta / tcfg.gamma
+    s = tcfg.s
+    xflat, treedef = jax.tree.flatten(x)
+    hflat = jax.tree.leaves(h)
+    pairs = [
+        _leaf_aggregate(xl, hl, off, n, s, scale)
+        for xl, hl in zip(xflat, hflat)
+    ]
+    x_new = jax.tree.unflatten(treedef, [a for a, _ in pairs])
+    h_new = jax.tree.unflatten(treedef, [b for _, b in pairs])
+    return x_new, h_new

@@ -1,0 +1,101 @@
+"""Family-dispatching model API: one surface over ``repro.models``.
+
+The dist engine, the serving drivers, and the dry-run all talk to the model
+zoo through these five functions, so a new family only has to plug in here:
+
+  init(key, cfg)                      -> params pytree
+  loss(params, cfg, *, tokens, labels, ...) -> (scalar loss, metrics)
+  prefill(params, cfg, *, tokens, ...)-> last-position logits (b, vocab)
+  make_cache(cfg, batch, max_seq)     -> decode cache pytree
+  decode(params, cfg, token, cache, pos, attend_fn=None)
+                                      -> (logits (b, vocab), new cache)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, layers
+from repro.models import transformer as tr
+from repro.models.transformer import ModelConfig
+
+Params = Dict[str, Any]
+
+__all__ = ["init", "loss", "prefill", "make_cache", "decode"]
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    if cfg.family == "encdec":
+        return encdec.init_encdec_params(key, cfg, cfg.n_encoder_layers)
+    return tr.init_params(key, cfg)
+
+
+def loss(
+    params: Params,
+    cfg: ModelConfig,
+    *,
+    tokens: jax.Array,
+    labels: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if cfg.family == "encdec":
+        if frames is None:
+            raise ValueError("encdec loss requires frames")
+        if prefix_embeds is not None:
+            raise ValueError("encdec does not consume prefix_embeds")
+        return encdec.loss_fn(params, cfg, frames, tokens, labels)
+    if frames is not None:
+        raise ValueError(f"family {cfg.family!r} does not consume frames")
+    return tr.loss_fn(params, cfg, tokens, labels, prefix_embeds)
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    *,
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence forward; returns the last position's logits — the
+    tensor a serving runtime needs to start decoding (the KV cache for the
+    decode loop is built by stepping ``decode``, exact for all families)."""
+    if cfg.family == "encdec":
+        enc = encdec.encode(params, cfg, frames)
+        h = encdec.decode_train(params, cfg, tokens, enc)
+        w = params["embed"].T
+    else:
+        h, _ = tr.forward(params, cfg, tokens, prefix_embeds=prefix_embeds)
+        w = tr.lm_head_weight(params, cfg)
+    last = h[:, -1]
+    logits = jax.lax.dot_general(
+        last.astype(jnp.float32), w.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )[:, : cfg.vocab]
+    return layers.softcap(logits, cfg.final_softcap)
+
+
+def make_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, kv_dtype=jnp.bfloat16
+) -> Params:
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_seq, cfg.n_frames, kv_dtype)
+    return tr.init_cache(cfg, batch, max_seq, kv_dtype)
+
+
+def decode(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,
+    cache: Params,
+    pos: jax.Array,
+    attend_fn=None,
+) -> Tuple[jax.Array, Params]:
+    if cfg.family == "encdec":
+        # enc-dec decode has no pluggable attend path (cross-KV precomputed)
+        return encdec.decode_step(params, cfg, token, cache, pos)
+    return tr.decode_step(params, cfg, token, cache, pos, attend_fn=attend_fn)

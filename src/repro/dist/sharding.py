@@ -1,0 +1,251 @@
+"""Mesh helpers and PartitionSpec derivation for the TAMUNA-DP engine.
+
+The engine runs on a ``("data", "model")`` mesh (optionally with a leading
+``"pod"`` axis for multi-pod runs).  Every non-``model`` axis hosts clients:
+client ``i`` of TAMUNA *is* data-shard ``i`` of the mesh, so the stacked
+client axis of the training state (leading dim ``n``) is sharded over the
+data axes and each parameter leaf is tensor-parallel over ``model``.
+
+All derivation here is *rule-based over pytree paths + shapes* so it covers
+the whole model zoo (dense / MoE / RWKV / Mamba-hybrid / enc-dec) without
+per-architecture tables.  Rules only ever propose a sharding when the dim is
+divisible by the mesh-axis size; otherwise the dim is left unconstrained
+(replicated hint) and GSPMD decides — correctness never depends on these
+hints, only collective volume does.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+__all__ = [
+    "MODEL_AXIS",
+    "dp_axis_names",
+    "dp_axes",
+    "n_clients",
+    "model_size",
+    "train_batch_pspec",
+    "params_pspecs",
+    "params_shardings",
+    "stacked_params_pspecs",
+    "cache_pspecs",
+    "prefill_input_pspecs",
+    "serve_input_pspecs",
+]
+
+
+# --------------------------------------------------------------------------
+# mesh helpers
+# --------------------------------------------------------------------------
+
+
+def dp_axis_names(mesh: Mesh) -> tuple:
+    """All client-hosting (non-model) axis names, mesh order preserved."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def dp_axes(mesh: Mesh):
+    """The PartitionSpec entry for the client axis: a single name or a
+    tuple of names (multi-pod: the client dim shards over pod x data)."""
+    names = dp_axis_names(mesh)
+    if not names:
+        return None
+    return names[0] if len(names) == 1 else names
+
+
+def n_clients(mesh: Mesh) -> int:
+    """Population size n = product of the client-hosting axis sizes."""
+    return int(np.prod([mesh.shape[a] for a in dp_axis_names(mesh)] or [1]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get(MODEL_AXIS, 1))
+
+
+def train_batch_pspec(mesh: Mesh) -> P:
+    """Per-client batches (n, b, ...): client dim over the data axes."""
+    return P(dp_axes(mesh))
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# pytrees whose leaves carry a leading stacked-layer axis that must never be
+# sharded over `model` (it is scanned over)
+_STACKED_KEYS = ("blocks", "enc_blocks", "dec_blocks")
+# weight names whose *output* feature dim is sharded (column parallel)
+_COL_PARALLEL = ("wq", "wk", "wv", "bq", "bk", "bv", "w_gate", "w_up",
+                 "lm_head", "prefix_proj", "router")
+# weight names whose *input* feature dim is sharded (row parallel: the
+# matching contraction of a column-parallel producer)
+_ROW_PARALLEL = ("wo", "w_down")
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _div(dim: int, m: int) -> bool:
+    return m > 1 and dim >= m and dim % m == 0
+
+
+def _leaf_pspec(
+    path_str: str,
+    shape: tuple,
+    cfg,
+    msize: int,
+    moe_expert_parallel: bool,
+) -> P:
+    """Model-parallel spec for one parameter leaf (no client axis)."""
+    spec = [None] * len(shape)
+    if msize <= 1 or not shape:
+        return P(*spec)
+    off = 1 if any(f"'{k}'" in path_str for k in _STACKED_KEYS) else 0
+    nd = len(shape) - off  # logical rank without the stacked-layer axis
+
+    def done():
+        return P(*spec)
+
+    # embeddings: vocab dim is padded to 128 so it always shards
+    if "'embed'" in path_str and nd == 2:
+        if _div(shape[off], msize):
+            spec[off] = MODEL_AXIS
+        return done()
+
+    # MoE expert stacks (E, d, f): expert-parallel for training, feature-
+    # parallel for serving (gather dispatch needs local experts)
+    if "'moe'" in path_str and nd == 3:
+        e_dim, last = off, off + 2
+        if moe_expert_parallel and _div(shape[e_dim], msize):
+            spec[e_dim] = MODEL_AXIS
+            return done()
+        f_dim = last if any(f"'{n}'" in path_str for n in ("w_gate", "w_up")) \
+            else off + 1
+        if _div(shape[f_dim], msize):
+            spec[f_dim] = MODEL_AXIS
+        return done()
+
+    name_hit_col = any(f"'{n}'" in path_str for n in _COL_PARALLEL)
+    name_hit_row = any(f"'{n}'" in path_str for n in _ROW_PARALLEL)
+    if name_hit_col and nd >= 1 and _div(shape[-1], msize):
+        spec[-1] = MODEL_AXIS
+        return done()
+    if name_hit_row and nd >= 2 and _div(shape[-2], msize):
+        spec[-2] = MODEL_AXIS
+        return done()
+
+    # generic fallback: norms/scalars replicated; matrices shard the last
+    # divisible feature dim
+    if nd >= 2:
+        for dim in (len(shape) - 1, len(shape) - 2):
+            if _div(shape[dim], msize):
+                spec[dim] = MODEL_AXIS
+                break
+    return done()
+
+
+def params_pspecs(
+    params: Any,
+    cfg,
+    mesh: Mesh,
+    moe_expert_parallel: bool = True,
+) -> Any:
+    """PartitionSpec tree for a (single-replica) parameter pytree."""
+    msize = model_size(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _leaf_pspec(_path_str(p), tuple(x.shape), cfg, msize,
+                    moe_expert_parallel)
+        for p, x in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def stacked_params_pspecs(
+    stacked: Any,
+    cfg,
+    mesh: Mesh,
+    moe_expert_parallel: bool = True,
+) -> Any:
+    """Specs for client-stacked parameter trees (leaves ``(n, ...)``):
+    client dim over the data axes, the rest per the parameter rules."""
+    msize = model_size(mesh)
+    dp = dp_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(stacked)
+    specs = [
+        P(dp, *_leaf_pspec(_path_str(p), tuple(x.shape[1:]), cfg, msize,
+                           moe_expert_parallel))
+        for p, x in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_shardings(
+    params: Any, cfg, mesh: Mesh, moe_expert_parallel: bool = True
+) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        params_pspecs(params, cfg, mesh, moe_expert_parallel),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# serving specs
+# --------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg, mesh: Mesh, batch: int) -> Dict[str, P]:
+    """Decode-cache specs: batch dim (always dim 1) over the data axes, KV
+    heads over ``model`` when divisible."""
+    from repro.dist import model_api  # local import; avoids a cycle
+
+    msize = model_size(mesh)
+    dp = dp_axes(mesh) if batch % max(1, _dp_size(mesh)) == 0 else None
+    struct = jax.eval_shape(lambda: model_api.make_cache(cfg, batch, 8))
+
+    def leaf(path, x):
+        spec = [None] * x.ndim
+        if x.ndim >= 2 and dp is not None:
+            spec[1] = dp
+        name = _path_str(path)
+        # (L, b, S, kvh, hd) KV tensors: shard the head dim if divisible
+        if x.ndim == 5 and any(f"'{k}'" in name for k in ("k", "v", "xk",
+                                                          "xv")):
+            if _div(x.shape[3], msize):
+                spec[3] = MODEL_AXIS
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(p, x) for p, x in flat]
+    )
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return n_clients(mesh)
+
+
+def prefill_input_pspecs(cfg, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    return {
+        "tokens": P(dp),
+        "labels": P(dp),
+        "frames": P(dp),
+        "prefix_embeds": P(dp),
+    }
+
+
+def serve_input_pspecs(cfg, mesh: Mesh, batch: int) -> Dict[str, Any]:
+    tok = P(dp_axes(mesh)) if batch % max(1, _dp_size(mesh)) == 0 else P()
+    return {
+        "cache": cache_pspecs(cfg, mesh, batch),
+        "token": tok,
+    }

@@ -1,0 +1,367 @@
+"""TAMUNA-DP: the distributed (mesh-sharded) round engine for LM training.
+
+Where ``repro.core.tamuna`` is the paper-faithful reference over flat
+vectors, this module runs the same algorithm over *arbitrary parameter
+pytrees* with the client population mapped onto the mesh's data axes
+(client i == data-shard i, see ``repro.dist.sharding``).  A round is
+
+  L x local  ``make_local_step``: per-client grads + local update.  No
+             cross-client collectives — the common case is all-local.
+  1 x comm   ``make_comm_step``: the only communication of the algorithm.
+             ``uplink="masked_psum"``: permutation-masked sum over the
+             client axis (each coordinate uploaded by exactly ``s`` of the
+             ``c`` cohort members, reconstructed as ``(1/s) * psum``).
+             ``uplink="block_rs"``: the contiguous-block template of
+             ``masks.block_template_mask`` — the reduce-scatter-shaped
+             variant (see ``block_uplink`` and DESIGN.md §3).
+
+State leaves are stacked per client: ``x``/``h`` leaves are ``(n, *param)``
+and shard over the data axes, so the masked sum lowers to an all-reduce
+(psum) over clients and the blocked variant to reduce-scatter-shaped
+collectives — communication scales with the cohort, never with tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import masks, theory
+from repro.dist import model_api, sharding
+from repro.models.transformer import ModelConfig
+from repro.optim import optimizers
+
+__all__ = [
+    "DistTamunaConfig",
+    "DistTamunaState",
+    "init_state",
+    "state_pspecs",
+    "make_local_step",
+    "make_comm_step",
+    "sample_round_length",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistTamunaConfig:
+    gamma: float  # local stepsize (AdamW lr when local_opt="adamw")
+    c: int  # cohort size (2 <= c <= n)
+    s: int  # sparsity index (2 <= s <= c); s == c disables compression
+    p: float  # inverse expected local steps per round
+    eta: Optional[float] = None  # control stepsize; None -> Remark 2 default
+    uplink: str = "masked_psum"  # "masked_psum" | "block_rs"
+    microbatches: int = 1  # gradient accumulation steps per local step
+    local_opt: str = "sgd"  # "sgd" (paper rule) | "adamw" (DESIGN.md §7)
+    use_kernel: bool = False  # fused Pallas local-step update (kernels/)
+
+    def __post_init__(self):
+        if not (2 <= self.s <= self.c):
+            raise ValueError(f"need 2 <= s <= c, got s={self.s} c={self.c}")
+        if self.uplink not in ("masked_psum", "block_rs"):
+            raise ValueError(f"unknown uplink {self.uplink!r}")
+        if self.local_opt not in ("sgd", "adamw"):
+            raise ValueError(f"unknown local_opt {self.local_opt!r}")
+        if self.use_kernel and self.local_opt != "sgd":
+            raise ValueError(
+                "use_kernel fuses the paper's SGD rule; it does not apply "
+                f"to local_opt={self.local_opt!r}"
+            )
+
+    def eta_(self, n: int) -> float:
+        """Control-variate stepsize: Remark 2's largest valid
+        ``eta = p * chi_max(n, s)`` — same rule as the reference core's
+        ``theory.TunedParams``."""
+        if self.eta is not None:
+            return self.eta
+        return theory.recommended_eta(self.p, max(n, 2), self.s)
+
+
+class DistTamunaState(NamedTuple):
+    x: Any  # client-stacked params: leaves (n, *param_shape)
+    h: Any  # control variates, f32, same structure; sum_i h_i == 0
+    opt: Any  # local-optimizer state (() for sgd)
+    round: jax.Array  # int32 scalar
+    up_floats: jax.Array  # f32 scalar: cumulative uplink floats per client
+    down_floats: jax.Array  # f32 scalar
+
+
+# --------------------------------------------------------------------------
+# init / sharding
+# --------------------------------------------------------------------------
+
+
+def init_state(
+    key: jax.Array, cfg: ModelConfig, mesh: Mesh, tcfg: DistTamunaConfig
+) -> DistTamunaState:
+    n = sharding.n_clients(mesh)
+    if tcfg.uplink == "block_rs" and tcfg.c != n:
+        raise ValueError(
+            f"block_rs uplink needs full participation (c == n == {n}), "
+            f"got c={tcfg.c}"
+        )
+    params = model_api.init(key, cfg)
+    x = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params
+    )
+    h = jax.tree.map(
+        lambda a: jnp.zeros((n,) + a.shape, jnp.float32), params
+    )
+    opt: Any = ()
+    if tcfg.local_opt == "adamw":
+        # elementwise moments live on the stacked leaves directly
+        opt = optimizers.adamw(tcfg.gamma).init(x)
+    return DistTamunaState(
+        x=x, h=h, opt=opt,
+        round=jnp.zeros((), jnp.int32),
+        up_floats=jnp.zeros((), jnp.float32),
+        down_floats=jnp.zeros((), jnp.float32),
+    )
+
+
+def state_pspecs(
+    state: DistTamunaState, cfg: ModelConfig, mesh: Mesh
+) -> DistTamunaState:
+    """PartitionSpec pytree matching ``state`` exactly (scalars -> P())."""
+    x_spec = sharding.stacked_params_pspecs(state.x, cfg, mesh)
+    h_spec = sharding.stacked_params_pspecs(state.h, cfg, mesh)
+    opt_spec: Any = ()
+    if isinstance(state.opt, optimizers.AdamState):
+        opt_spec = optimizers.AdamState(
+            mu=sharding.stacked_params_pspecs(state.opt.mu, cfg, mesh),
+            nu=sharding.stacked_params_pspecs(state.opt.nu, cfg, mesh),
+            count=P(),
+        )
+    return DistTamunaState(
+        x=x_spec, h=h_spec, opt=opt_spec,
+        round=P(), up_floats=P(), down_floats=P(),
+    )
+
+
+# --------------------------------------------------------------------------
+# local step
+# --------------------------------------------------------------------------
+
+
+def _client_grads(cfg: ModelConfig, x, batch, microbatches: int):
+    """Per-client losses (n,) and grads (stacked tree) with optional
+    gradient accumulation; exact mean over equal-size microbatches."""
+
+    def loss0(params, b):
+        return model_api.loss(params, cfg, **b)[0]
+
+    gfun = jax.vmap(jax.value_and_grad(loss0))
+
+    if microbatches == 1:
+        return gfun(x, batch)
+
+    M = microbatches
+
+    def split(a):
+        nb = a.shape[1]
+        assert nb % M == 0, (nb, M)
+        return jnp.swapaxes(
+            a.reshape((a.shape[0], M, nb // M) + a.shape[2:]), 0, 1
+        )
+
+    mbs = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        tot_l, tot_g = carry
+        l, g = gfun(x, mb)
+        return (tot_l + l, jax.tree.map(jnp.add, tot_g, g)), None
+
+    n = jax.tree.leaves(x)[0].shape[0]
+    init = (
+        jnp.zeros((n,), jnp.float32),
+        jax.tree.map(lambda a: jnp.zeros((n,) + a.shape[1:], jnp.float32),
+                     x),
+    )
+    (tot_l, tot_g), _ = jax.lax.scan(body, init, mbs)
+    inv = 1.0 / M
+    return tot_l * inv, jax.tree.map(lambda g: g * inv, tot_g)
+
+
+def make_local_step(cfg: ModelConfig, tcfg: DistTamunaConfig):
+    """Build ``fn(state, *, tokens, labels, ...) -> (state, metrics)``.
+
+    The paper's local iteration ``x <- x - gamma*(g - h)`` (optionally via
+    the fused Pallas kernel), or an AdamW step on the h-corrected gradient.
+    Zero cross-client communication: everything is client-elementwise.
+    """
+    gamma = tcfg.gamma
+    opt = optimizers.adamw(gamma) if tcfg.local_opt == "adamw" else None
+
+    def fn(
+        state: DistTamunaState,
+        *,
+        tokens: jax.Array,
+        labels: jax.Array,
+        prefix_embeds: Optional[jax.Array] = None,
+        frames: Optional[jax.Array] = None,
+    ) -> Tuple[DistTamunaState, Dict[str, jax.Array]]:
+        batch = {"tokens": tokens, "labels": labels}
+        if prefix_embeds is not None:
+            batch["prefix_embeds"] = prefix_embeds
+        if frames is not None:
+            batch["frames"] = frames
+
+        losses, grads = _client_grads(cfg, state.x, batch, tcfg.microbatches)
+
+        if tcfg.local_opt == "adamw":
+            eff = jax.tree.map(
+                lambda g, h: g.astype(jnp.float32) - h.astype(jnp.float32),
+                grads, state.h,
+            )
+            x_new, opt_new = opt.update(eff, state.opt, state.x)
+        elif tcfg.use_kernel:
+            from repro.kernels import ops as kops
+
+            x_new = jax.tree.map(
+                lambda x, g, h: kops.fused_local_step(x, g, h, gamma),
+                state.x, grads, state.h,
+            )
+            opt_new = state.opt
+        else:
+            x_new = jax.tree.map(
+                lambda x, g, h: (
+                    x.astype(jnp.float32)
+                    - gamma * (g.astype(jnp.float32) - h.astype(jnp.float32))
+                ).astype(x.dtype),
+                state.x, grads, state.h,
+            )
+            opt_new = state.opt
+
+        metrics = {"loss": losses.mean().astype(jnp.float32)}
+        return state._replace(x=x_new, opt=opt_new), metrics
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# comm step
+# --------------------------------------------------------------------------
+
+
+def _as_key(key: jax.Array) -> jax.Array:
+    """Accept typed PRNG keys or raw (2,) uint32 key data."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key
+    return jax.random.wrap_key_data(key)
+
+
+def _leaf_dim(a: jax.Array) -> int:
+    return int(np.prod(a.shape[1:]))
+
+
+def _mask_rows(perm: jax.Array, slot_of: jax.Array, member: jax.Array,
+               D: int, c: int, s: int):
+    """(n, D) ownership mask: client i owns coordinate k of this leaf iff
+    its cohort slot's (permuted) template column owns row k.  Reuses the
+    property-tested closed forms of ``masks.mask_from_permutation`` —
+    cohort slots gather their column, idle clients get all-zeros."""
+    q = masks.mask_from_permutation(perm, D, c, s).astype(bool)  # (D, c)
+    q_n = q.T[jnp.clip(slot_of, 0)]  # (n, D)
+    return q_n & member[:, None]
+
+
+def make_comm_step(cfg: ModelConfig, tcfg: DistTamunaConfig, mesh: Mesh):
+    """Build ``fn(state, key) -> state``: UpCom + DownCom of one round.
+
+    masked_psum: sum the masked client vectors over the data axes (an
+    all-reduce of the *sparse* contributions), reconstruct ``x_bar`` with
+    the exact ``1/s`` factor, update the cohort's control variates on the
+    masked coordinates only, and broadcast ``x_bar`` back down.
+    """
+    n = sharding.n_clients(mesh)
+    c, s = tcfg.c, tcfg.s
+    if c > n:
+        raise ValueError(f"cohort c={c} exceeds population n={n}")
+    eta = tcfg.eta_(n)
+    scale = eta / tcfg.gamma
+
+    if tcfg.uplink == "block_rs":
+        from repro.dist.block_uplink import block_rs_aggregate
+
+        if c != n:
+            # same invariant init_state enforces; guard the step builder too
+            # (checkpoints restore state without going through init_state)
+            raise ValueError(
+                f"block_rs uplink needs full participation (c == n == {n}),"
+                f" got c={c}"
+            )
+
+        def fn(state: DistTamunaState, key: jax.Array) -> DistTamunaState:
+            key = _as_key(key)
+            off = jax.random.randint(key, (), 0, n, jnp.int32)
+            xb, hb = block_rs_aggregate(
+                state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg
+            )
+            d = sum(_leaf_dim(a) for a in jax.tree.leaves(state.x))
+            up = float(sum(
+                masks.block_column_nnz(_leaf_dim(a), n, s)
+                for a in jax.tree.leaves(state.x)
+            ))
+            return state._replace(
+                x=xb, h=hb,
+                round=state.round + 1,
+                up_floats=state.up_floats + jnp.float32(up),
+                down_floats=state.down_floats + jnp.float32(d),
+            )
+
+        return fn
+
+    def fn(state: DistTamunaState, key: jax.Array) -> DistTamunaState:
+        key = _as_key(key)
+        k_cohort, k_perm = jax.random.split(key)
+        cohort = jax.random.choice(k_cohort, n, shape=(c,), replace=False)
+        perm = jax.random.permutation(k_perm, c)
+        slot_of = (
+            jnp.full((n,), -1, jnp.int32)
+            .at[cohort].set(jnp.arange(c, dtype=jnp.int32))
+        )
+        member = slot_of >= 0
+
+        def per_leaf(xl, hl):
+            D = _leaf_dim(xl)
+            q = _mask_rows(perm, slot_of, member, D, c, s)  # (n, D) bool
+            xf = xl.reshape(n, D).astype(jnp.float32)
+            qf = q.astype(jnp.float32)
+            # UpCom: masked psum over the client axis, exact 1/s rebuild
+            x_bar = (xf * qf).sum(axis=0) / s  # (D,)
+            # control variates: cohort only, masked coordinates only
+            h_new = hl.reshape(n, D) + scale * qf * (x_bar[None] - xf)
+            # DownCom: everyone gets the new server model
+            x_new = jnp.broadcast_to(x_bar[None], (n, D))
+            return (
+                x_new.astype(xl.dtype).reshape(xl.shape),
+                h_new.astype(hl.dtype).reshape(hl.shape),
+            )
+
+        xflat, treedef = jax.tree.flatten(state.x)
+        hflat = jax.tree.leaves(state.h)
+        pairs = [per_leaf(xl, hl) for xl, hl in zip(xflat, hflat)]
+        x_new = jax.tree.unflatten(treedef, [a for a, _ in pairs])
+        h_new = jax.tree.unflatten(treedef, [b for _, b in pairs])
+
+        d = sum(_leaf_dim(a) for a in xflat)
+        up = float(sum(masks.column_nnz(_leaf_dim(a), c, s) for a in xflat))
+        return state._replace(
+            x=x_new, h=h_new,
+            round=state.round + 1,
+            up_floats=state.up_floats + jnp.float32(up),
+            down_floats=state.down_floats + jnp.float32(d),
+        )
+
+    return fn
+
+
+def sample_round_length(rng: np.random.Generator, p: float,
+                        max_L: int = 100_000) -> int:
+    """Host-side ``L ~ Geometric(p)`` draw (each length compiles once)."""
+    return int(min(rng.geometric(p), max_L))

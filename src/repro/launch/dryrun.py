@@ -128,6 +128,9 @@ def run_one(
         t1 = time.time()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # older jax returns [dict] (one entry per program), newer a dict
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # XLA's cost_analysis counts while bodies ONCE (useless for scanned
         # layer stacks); hlo_analysis re-derives flops / bytes / collective

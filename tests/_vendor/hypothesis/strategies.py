@@ -1,0 +1,112 @@
+"""Strategy objects for the fallback hypothesis shim (see __init__.py).
+
+Each strategy implements ``example(rng, boundary=None)``; ``boundary``
+cycles 0..3 for the first few draws so min/max corners are always hit.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Optional, Sequence
+
+
+class SearchStrategy:
+    def example(self, rng: random.Random, boundary: Optional[int] = None):
+        raise NotImplementedError
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng, boundary=None):
+        for attempt in range(1000):
+            # only honor the boundary request on the first attempt; corner
+            # values often fail the predicate
+            v = self.base.example(rng, boundary if attempt == 0 else None)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 examples")
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng, boundary=None):
+        return self.fn(self.base.example(rng, boundary))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng, boundary=None):
+        if boundary == 0:
+            return self.lo
+        if boundary == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng, boundary=None):
+        if boundary == 0:
+            return self.lo
+        if boundary == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, strats: Sequence[SearchStrategy]):
+        self.strats = tuple(strats)
+
+    def example(self, rng, boundary=None):
+        return tuple(s.example(rng, boundary) for s in self.strats)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng, boundary=None):
+        if boundary == 0:
+            return self.elements[0]
+        if boundary == 1:
+            return self.elements[-1]
+        return rng.choice(self.elements)
+
+
+class _Booleans(_SampledFrom):
+    def __init__(self):
+        super().__init__([False, True])
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return _Tuples(strats)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()

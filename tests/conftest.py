@@ -1,6 +1,12 @@
-"""Shared fixtures.  NOTE: no XLA device-count forcing here — smoke tests and
-benches must see the real single CPU device; multi-device tests spawn
-subprocesses with their own XLA_FLAGS."""
+"""Shared fixtures.  NOTE: no XLA device-count forcing in THIS process —
+smoke tests and benches must see the real single CPU device; multi-device
+tests run through the ``subproc`` fixture, which is where the
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` default lives.
+
+Also installs the offline `hypothesis` fallback (tests/_vendor) when the
+real package is not installed, so the property-test modules collect and run
+on the container without pip access.
+"""
 
 import os
 import subprocess
@@ -13,8 +19,16 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+try:  # pragma: no cover - environment dependent
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(REPO, "tests", "_vendor"))
 
-def run_in_subprocess(code: str, devices: int = 8, timeout: int = 900):
+DEFAULT_DEVICES = int(os.environ.get("REPRO_TEST_DEVICES", "8"))
+
+
+def run_in_subprocess(code: str, devices: int = DEFAULT_DEVICES,
+                      timeout: int = 900):
     """Run python code in a fresh process with a forced host device count."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"

@@ -1,0 +1,149 @@
+"""Invariants the dist engine relies on but the seed suite never pinned:
+
+* blocked-template mask semantics (exactly-s-owners at ragged d, under
+  arbitrary column permutations and under the cyclic shifts the block_rs
+  uplink actually uses),
+* exact-at-consensus aggregation for the blocked template with d % c != 0,
+* ``block_rs_aggregate`` numerics on a single device (pytree generality,
+  sum_i h_i == 0, owner-mean against numpy),
+* int32/float counter dtypes of the reference core (no silent int64
+  truncation dependence).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression, masks, problems, tamuna
+
+ragged_dcs = st.tuples(
+    st.integers(3, 97),   # d
+    st.integers(2, 16),   # c
+    st.integers(2, 16),   # s
+).filter(lambda t: t[2] <= t[1] and t[0] % t[1] != 0)
+
+
+@given(ragged_dcs)
+@settings(max_examples=40, deadline=None)
+def test_block_template_exactly_s_owners_ragged(t):
+    d, c, s = t
+    q = masks.block_template_mask(d, c, s)
+    assert q.shape == (d, c)
+    assert (q.sum(axis=1) == s).all()
+    # the accounting helper is the exact worst-case column load
+    assert q.sum(axis=0).max() == masks.block_column_nnz(d, c, s)
+
+
+@given(ragged_dcs, st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_blocked_closed_form_matches_template_and_keeps_row_property(t, seed):
+    d, c, s = t
+    perm = masks.sample_permutation(jax.random.key(seed), c)
+    q = np.asarray(masks.mask_from_permutation(perm, d, c, s, blocked=True))
+    templ = masks.block_template_mask(d, c, s)
+    np.testing.assert_array_equal(q, templ[:, np.asarray(perm)])
+    assert (q.sum(axis=1) == s).all()  # permutation preserves owners-per-row
+
+
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_blocked_aggregation_exact_at_consensus_ragged(c, s, seed):
+    if s > c:
+        s = c
+    d = 5 * c + (c - 1)  # always ragged: d % c == c - 1 != 0
+    v = jax.random.normal(jax.random.key(seed), (d,))
+    xs = jnp.broadcast_to(v, (c, d))
+    q = masks.sample_mask(jax.random.key(seed + 1), d, c, s, blocked=True)
+    xbar = compression.aggregate_masked(xs, q, s)
+    np.testing.assert_allclose(np.asarray(xbar), np.asarray(v), rtol=1e-6)
+
+
+def test_block_rs_aggregate_pytree_single_device():
+    """Owner-mean + h-sum-zero for the dist blocked uplink, checked without
+    a mesh: block_rs_aggregate is pure jnp over the stacked client axis."""
+    from repro.dist import tamuna_dp
+    from repro.dist.block_uplink import block_rs_aggregate
+
+    n, s = 8, 3
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.1, c=n, s=s, p=0.5,
+                                      uplink="block_rs")
+    eta = tcfg.eta_(n)
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = {
+        "w": jax.random.normal(ks[0], (n, 13, 5), jnp.float32),  # ragged 65
+        "b": jax.random.normal(ks[1], (n, 3), jnp.float32),  # D < n
+    }
+    h = {
+        "w": jax.random.normal(ks[2], (n, 13, 5), jnp.float32),
+        "b": jax.random.normal(ks[3], (n, 3), jnp.float32),
+    }
+    # center h so sum_i h_i == 0 going in (the invariant to preserve)
+    h = jax.tree.map(lambda a: a - a.mean(axis=0, keepdims=True), h)
+    off = jnp.asarray(5, jnp.int32)
+
+    xb, hb = jax.jit(
+        lambda x, h: block_rs_aggregate(x, h, off, n, tcfg, eta, None)
+    )(x, h)
+
+    for name in ("w", "b"):
+        xl = np.asarray(x[name], np.float64).reshape(n, -1)
+        D = xl.shape[1]
+        chunk = -(-D // n)
+        blk = np.minimum(np.arange(D) // chunk, n - 1)
+        expect = np.zeros(D)
+        for j in range(n):
+            owners = [i for i in range(n) if ((j - i - 5) % n) < s]
+            sel = blk == j
+            expect[sel] = sum(xl[i, sel] for i in owners) / s
+        got = np.asarray(xb[name], np.float64).reshape(n, -1)
+        # every client row equals the aggregated server model
+        for i in range(n):
+            np.testing.assert_allclose(got[i], expect, rtol=1e-5, atol=1e-6)
+        hs = np.abs(np.asarray(hb[name], np.float64).sum(axis=0)).max()
+        assert hs < 1e-4, (name, hs)
+
+
+def test_reference_counters_int32_and_float_accumulators():
+    """init/round_step must not depend on jax_enable_x64 for counters: ints
+    are explicit int32, communication accounting is float (overflow-safe at
+    LM-scale d where int32 is not)."""
+    prob = problems.make_quadratic_problem(n=8, d=16, kappa=10)
+    cfg = tamuna.TamunaConfig.tuned(prob, c=4)
+    state = tamuna.init(prob)
+    assert state.round.dtype == jnp.int32
+    assert state.total_local_steps.dtype == jnp.int32
+    assert jnp.issubdtype(state.up_floats.dtype, jnp.floating)
+    assert jnp.issubdtype(state.down_floats.dtype, jnp.floating)
+
+    step = jax.jit(lambda st, k: tamuna.round_step(prob, cfg, st, k))
+    state = step(state, jax.random.key(0))
+    assert state.round.dtype == jnp.int32
+    assert state.total_local_steps.dtype == jnp.int32
+    assert jnp.issubdtype(state.up_floats.dtype, jnp.floating)
+    assert int(state.round) == 1
+    # accounting stays exactly integral in the float accumulator
+    assert float(state.up_floats) == masks.column_nnz(prob.d, cfg.c, cfg.s)
+    assert float(state.down_floats) == prob.d
+
+
+def test_run_trace_matches_per_round_reference():
+    """The chunked lax.scan driver must reproduce the old per-round Python
+    loop: same record points, same key sequence, same trajectory."""
+    prob = problems.make_quadratic_problem(n=8, d=12, kappa=20)
+    cfg = tamuna.TamunaConfig.tuned(prob, c=4)
+
+    tr = tamuna.run(prob, cfg, num_rounds=23, record_every=5, seed=3)
+    np.testing.assert_array_equal(tr["rounds"], [1, 6, 11, 16, 21, 23])
+
+    # hand-rolled reference loop (the pre-scan driver semantics)
+    state = tamuna.init(prob)
+    key = jax.random.key(3)
+    step = jax.jit(lambda st, k: tamuna.round_step(prob, cfg, st, k))
+    ref_sub = []
+    for r in range(23):
+        key, rk = jax.random.split(key)
+        state = step(state, rk)
+        if r % 5 == 0 or r == 22:
+            ref_sub.append(float(prob.suboptimality(state.x_bar)))
+    np.testing.assert_allclose(tr["suboptimality"], ref_sub, rtol=1e-12)
