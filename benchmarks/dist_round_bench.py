@@ -14,6 +14,10 @@ emitted as CSV rows via ``benchmarks/run.py``:
                the blocked reduce-scatter-shaped uplink, on a forced
                8-device host mesh (spawned in a subprocess so this process
                keeps the single real CPU device, like the test suite does).
+               Each uplink also gets a ``+fused_round_L4`` row timing one
+               whole engine round (4 scanned local steps with on-device
+               data + the comm step, donated; ``us_per_round``, not
+               comparable to the comm-only rows).
 """
 
 from __future__ import annotations
@@ -69,13 +73,17 @@ import json, sys, time
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.transformer import ModelConfig
-from repro.dist import sharding, tamuna_dp
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import rounds, sharding, tamuna_dp
 
 mesh = jax.make_mesh((8, 1), ("data", "model"))
 cfg = ModelConfig(family="dense", n_layers=2, d_model=128, n_heads=4,
                   n_kv_heads=2, d_ff=256, vocab=256, dtype=jnp.float32,
                   remat=False)
 n = sharding.n_clients(mesh)
+dcfg = DataConfig(seq_len=32, per_client_batch=2, vocab=cfg.vocab, seed=0)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
 rows = []
 for uplink in ("masked_psum", "block_rs"):
     tcfg = tamuna_dp.DistTamunaConfig(
@@ -98,6 +106,26 @@ for uplink in ("masked_psum", "block_rs"):
     d = sum(int(jnp.size(a)) // n for a in jax.tree.leaves(state.x))
     rows.append({"uplink": uplink, "us_per_comm": us, "n": n,
                  "s": tcfg.s, "d_per_client": d})
+    # the same comm step inside the fused round engine program (L=4
+    # scanned local steps with on-device data + comm, donated)
+    fused = jax.jit(rounds.make_fused_round(
+        cfg, tcfg, mesh, sample_batch=device_sampler(dcfg, cfg, mesh),
+        L=4), donate_argnums=(0,))
+    data = pipe.device_data()
+    state = jax.device_put(
+        tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg), sh)
+    for i in range(3):
+        state, _ = fused(state, jax.random.key_data(jax.random.key(i)),
+                         data)
+    jax.block_until_ready(state.round)
+    t0 = time.perf_counter()
+    for i in range(3, 13):
+        state, _ = fused(state, jax.random.key_data(jax.random.key(i)),
+                         data)
+    jax.block_until_ready(state.round)
+    rows.append({"uplink": uplink + "+fused_round_L4",
+                 "us_per_round": (time.perf_counter() - t0) / 10 * 1e6,
+                 "n": n, "s": tcfg.s, "d_per_client": d})
 print(json.dumps(rows))
 """
 
@@ -146,10 +174,15 @@ def run(paper_scale: bool = False):
 
     uplink = _bench_dist_uplink()
     for r in uplink:
+        # comm-only rows time one comm step; fused rows time a whole
+        # engine round (4 local fwd+bwd steps + comm) — different units,
+        # keyed apart so the artifact is not read as a comm regression
+        us = r.get("us_per_comm", r.get("us_per_round"))
+        what = "round(L=4 local + comm)" if "us_per_round" in r else "comm"
         rows.append({
             "name": f"dist_round/dist_uplink/{r['uplink']}",
-            "us_per_call": r["us_per_comm"],
-            "derived": (f"n={r['n']},s={r['s']},"
+            "us_per_call": us,
+            "derived": (f"{what},n={r['n']},s={r['s']},"
                         f"d_per_client={r['d_per_client']}"),
         })
 

@@ -49,6 +49,18 @@ def table(mesh: str = "pod16x16", art_dir: str = ART) -> List[dict]:
 
     out = []
     for (arch, shape), steps in sorted(by_pair.items()):
+        if "round" in steps:
+            # the fused scanned round the production trainer dispatches
+            r = steps["round"]
+            rl = r["roofline"]
+            out.append({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "step": "round(fused)",
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "useful_flops_ratio": rl["useful_flops_ratio"],
+            })
         if "local" in steps and "comm" in steps:
             am = amortize(steps["local"], steps["comm"])
             rec = {

@@ -21,7 +21,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,table1,table2,kernels,"
-                         "dist_round,roofline")
+                         "dist_round,round_engine,roofline")
     ap.add_argument("--paper-scale", action="store_true")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
@@ -96,6 +96,12 @@ def main(argv=None) -> int:
 
     rows = section("dist_round", lambda: __import__(
         "benchmarks.dist_round_bench", fromlist=["run"]).run())
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    rows = section("round_engine", lambda: __import__(
+        "benchmarks.round_engine_bench", fromlist=["run"]).run())
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])

@@ -1,8 +1,10 @@
 """End-to-end driver: pretrain a language model with TAMUNA-DP.
 
-Trains a reduced gemma2-style model for a few hundred local steps on the
-synthetic heterogeneous token pipeline over a (data=4, model=2) host mesh —
-the same step functions the production dry-run lowers for 2x16x16.
+Trains a reduced gemma2-style model on the synthetic heterogeneous token
+pipeline over a (data=4, model=2) host mesh — through the fused round
+engine (`repro.dist.rounds`): each round is one donated scanned program
+with on-device data generation, so steady-state training does zero
+host->device transfers.
 
   PYTHONPATH=src python examples/train_lm.py [--rounds 60] [--big]
 
@@ -31,13 +33,13 @@ def main():
     import dataclasses
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro import metrics
     from repro.configs import registry
-    from repro.data import DataConfig, SyntheticTokenPipeline
-    from repro.dist import tamuna_dp
+    from repro.data import DataConfig, SyntheticTokenPipeline, device_sampler
+    from repro.dist import rounds, tamuna_dp
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(4, 2)
@@ -67,20 +69,24 @@ def main():
     pipe = SyntheticTokenPipeline(
         DataConfig(seq_len=seq, per_client_batch=2, vocab=512), cfg, mesh
     )
-    local = jax.jit(tamuna_dp.make_local_step(cfg, tcfg))
-    comm = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh))
-
-    rng = np.random.default_rng(0)
-    steps = 0
-    for r in range(args.rounds):
-        L = tamuna_dp.sample_round_length(rng, tcfg.p, max_L=8)
-        for _ in range(L):
-            state, m = local(state, **pipe.next_batch())
-            steps += 1
-        state = comm(state, jax.random.key(1000 + r))
-        if r % 5 == 0 or r == args.rounds - 1:
-            print(f"round {r:4d}  local_steps {steps:5d}  "
-                  f"loss {float(m['loss']):.4f}")
+    round_fn = rounds.make_round_fn(
+        cfg, tcfg, mesh,
+        sample_batch=device_sampler(pipe.dcfg, cfg, mesh),
+        max_L=8,
+    )
+    state, last = rounds.run_rounds(
+        state,
+        round_fn=round_fn,
+        data=pipe.device_data(),
+        key=jax.random.key(1),
+        rounds=args.rounds,
+        rng=np.random.default_rng(0),
+        p=tcfg.p,
+        flush_every=5,
+        logger=metrics.MetricLogger(print_every=5),
+    )
+    print(f"round {last['round']:4d}  local_steps {last['local_steps']:5d}  "
+          f"loss {last['loss']:.4f}")
     print("done — loss should have dropped well below ln(vocab) ="
           f" {np.log(512):.2f}")
 

@@ -1,3 +1,13 @@
-from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticTokenPipeline,
+    device_sample_batch,
+    device_sampler,
+)
 
-__all__ = ["DataConfig", "SyntheticTokenPipeline"]
+__all__ = [
+    "DataConfig",
+    "SyntheticTokenPipeline",
+    "device_sample_batch",
+    "device_sampler",
+]

@@ -5,22 +5,37 @@ pipeline has the real structure — deterministic per-client shard keys
 (clients see DISJOINT, heterogeneous data: the paper's no-similarity
 regime), per-local-step batching, and device placement to the dp mesh axes.
 
-The token generator is a small order-2 Markov chain per client (distinct
-transition tables), which gives a learnable but heterogeneous distribution —
-loss curves actually go down, unlike uniform noise.
+The token generator is a small Markov chain per client (distinct transition
+tables), which gives a learnable but heterogeneous distribution — loss
+curves actually go down, unlike uniform noise.
+
+Two sampling paths share the same per-client transition tables:
+
+  host    ``next_batch()``: numpy chains advanced per client from
+          *per-client* ``Generator``s (client ``i``'s stream depends only on
+          ``(seed, i)`` — invariant to ``n_clients`` and generation order).
+  device  ``device_sample_batch(data, key, ...)``: a pure jittable sampler
+          over the device-resident cumulative tables — the chain advanced by
+          a vectorized ``lax.scan`` + ``searchsorted``, per-client streams
+          derived by ``fold_in(key, client)`` (again invariant to ``n``).
+          This is what the fused round engine (``repro.dist.rounds``) calls
+          inside its scan body, so steady-state training needs zero
+          host->device transfers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding
+from repro.dist.tamuna_dp import _as_key
 from repro.models.transformer import ModelConfig
 
 
@@ -32,6 +47,90 @@ class DataConfig:
     seed: int = 0
     heterogeneity: float = 1.0  # 0 = iid clients, 1 = fully distinct chains
     n_clients: Optional[int] = None  # default: from the mesh (1 if no mesh)
+
+
+def _client_rng(seed: int, client: int) -> np.random.Generator:
+    """Per-client host stream: depends only on (seed, client)."""
+    return np.random.default_rng(np.random.SeedSequence([seed, 977, client]))
+
+
+# --------------------------------------------------------------------------
+# pure device sampler
+# --------------------------------------------------------------------------
+
+
+def device_sample_batch(
+    data: Dict[str, jax.Array],
+    key: jax.Array,
+    *,
+    dcfg: DataConfig,
+    model_cfg: ModelConfig,
+    mesh: Optional[Mesh] = None,
+) -> Dict[str, jax.Array]:
+    """Sample one ``(n, per_client_batch, ...)`` batch entirely on device.
+
+    ``data`` holds the per-client *cumulative* transition tables
+    (``{"cum": (n, v, v) f32}``, see ``SyntheticTokenPipeline.device_data``)
+    so it can be threaded through a donated scan carry.  Client ``i``'s
+    stream is derived via ``fold_in(key, i)``: invariant to ``n``.
+    """
+    cum = data["cum"]
+    n, v = cum.shape[0], cum.shape[-1]
+    b, T = dcfg.per_client_batch, dcfg.seq_len
+    key = _as_key(key)
+    k_tok, k_pre, k_fr = jax.random.split(key, 3)
+    clients = jnp.arange(n)
+    cks = jax.vmap(lambda i: jax.random.fold_in(k_tok, i))(clients)
+
+    state0 = jax.vmap(
+        lambda k: jax.random.randint(
+            jax.random.fold_in(k, 0), (b,), 0, v, jnp.int32
+        )
+    )(cks)
+    rowix = clients[:, None]
+    searchsorted = jax.vmap(jax.vmap(
+        lambda row, u: jnp.searchsorted(row, u, side="right")
+    ))
+
+    def step(state, j):
+        kj = jax.vmap(lambda k: jax.random.fold_in(k, j))(cks)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (b,)))(kj)
+        rows = cum[rowix, state]  # (n, b, v) per-client cumulative rows
+        nxt = jnp.clip(searchsorted(rows, u), 0, v - 1).astype(jnp.int32)
+        return nxt, state
+
+    # emit s_0 .. s_T (T+1 states): tokens = s_{:-1}, labels = s_{1:}
+    _, seq = jax.lax.scan(step, state0, jnp.arange(1, T + 2))
+    toks = jnp.moveaxis(seq, 0, -1)  # (n, b, T+1)
+    if mesh is not None:
+        toks = jax.lax.with_sharding_constraint(
+            toks, NamedSharding(mesh, P(sharding.dp_axes(mesh), None, None))
+        )
+    batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    if model_cfg.prefix_len:
+        pks = jax.vmap(lambda i: jax.random.fold_in(k_pre, i))(clients)
+        pe = jax.vmap(
+            lambda k: jax.random.normal(
+                k, (b, model_cfg.prefix_len, model_cfg.d_model), jnp.float32
+            )
+        )(pks)
+        batch["prefix_embeds"] = pe.astype(model_cfg.dtype)
+    if model_cfg.family == "encdec":
+        fks = jax.vmap(lambda i: jax.random.fold_in(k_fr, i))(clients)
+        fr = jax.vmap(
+            lambda k: jax.random.normal(
+                k, (b, model_cfg.n_frames, model_cfg.d_model), jnp.float32
+            )
+        )(fks)
+        batch["frames"] = fr.astype(model_cfg.dtype)
+    return batch
+
+
+def device_sampler(dcfg: DataConfig, model_cfg: ModelConfig,
+                   mesh: Optional[Mesh] = None):
+    """The ``sample_batch(data, key)`` callable the round engine consumes."""
+    return partial(device_sample_batch, dcfg=dcfg, model_cfg=model_cfg,
+                   mesh=mesh)
 
 
 class SyntheticTokenPipeline:
@@ -49,28 +148,35 @@ class SyntheticTokenPipeline:
         v = min(dcfg.vocab, model_cfg.vocab)
         self.v = v
         # per-client bigram transition logits, interpolated toward a shared
-        # table by (1 - heterogeneity)
+        # table by (1 - heterogeneity).  Both tables are drawn in single
+        # sequential fills, so client i's table depends only on (seed, i),
+        # never on n.
         shared = rng.normal(size=(v, v)) * 2.0
         per = rng.normal(size=(self.n, v, v)) * 2.0
         mix = dcfg.heterogeneity
         logits = mix * per + (1 - mix) * shared[None]
         z = np.exp(logits - logits.max(axis=-1, keepdims=True))
         self.trans = (z / z.sum(axis=-1, keepdims=True)).astype(np.float64)
-        self.rng = rng
+        # per-client host streams: client i draws only from _rngs[i]
+        self._rngs = [_client_rng(dcfg.seed, i) for i in range(self.n)]
+        self._device_data: Optional[Dict[str, jax.Array]] = None
         self._sharding = (
             NamedSharding(mesh, sharding.train_batch_pspec(mesh))
             if mesh is not None else None
         )
 
+    # ---------------------------------------------------------------- host
+
     def _sample_chain(self, client: int, shape) -> np.ndarray:
         b, t = shape
+        rng = self._rngs[client]
         out = np.empty((b, t), np.int32)
-        state = self.rng.integers(0, self.v, size=b)
+        state = rng.integers(0, self.v, size=b)
         for j in range(t):
             out[:, j] = state
             probs = self.trans[client, state]
             cum = probs.cumsum(axis=-1)
-            u = self.rng.random((b, 1))
+            u = rng.random((b, 1))
             state = (u < cum).argmax(axis=-1)
         return out
 
@@ -85,16 +191,20 @@ class SyntheticTokenPipeline:
             "labels": jnp.asarray(toks[:, :, 1:]),
         }
         if self.cfg.prefix_len:
-            pe = self.rng.normal(
-                size=(self.n, d.per_client_batch, self.cfg.prefix_len,
-                      self.cfg.d_model)
-            ).astype(np.float32)
+            pe = np.stack([
+                self._rngs[i].normal(
+                    size=(d.per_client_batch, self.cfg.prefix_len,
+                          self.cfg.d_model)
+                ) for i in range(self.n)
+            ]).astype(np.float32)
             batch["prefix_embeds"] = jnp.asarray(pe, self.cfg.dtype)
         if self.cfg.family == "encdec":
-            fr = self.rng.normal(
-                size=(self.n, d.per_client_batch, self.cfg.n_frames,
-                      self.cfg.d_model)
-            ).astype(np.float32)
+            fr = np.stack([
+                self._rngs[i].normal(
+                    size=(d.per_client_batch, self.cfg.n_frames,
+                          self.cfg.d_model)
+                ) for i in range(self.n)
+            ]).astype(np.float32)
             batch["frames"] = jnp.asarray(fr, self.cfg.dtype)
         if self._sharding is not None:
             sh = {
@@ -106,6 +216,34 @@ class SyntheticTokenPipeline:
             }
             batch = {k: jax.device_put(v, sh[k]) for k, v in batch.items()}
         return batch
+
+    # -------------------------------------------------------------- device
+
+    def device_data(self) -> Dict[str, jax.Array]:
+        """Device-resident per-client cumulative transition tables, sharded
+        over the dp axes when a mesh is attached.  Threaded through the
+        round engine's donated carry (aliased, uploaded once)."""
+        if self._device_data is None:
+            cum = np.cumsum(self.trans, axis=-1).astype(np.float32)
+            arr = jnp.asarray(cum)
+            if self.mesh is not None:
+                arr = jax.device_put(
+                    arr,
+                    NamedSharding(
+                        self.mesh,
+                        P(sharding.dp_axes(self.mesh), None, None),
+                    ),
+                )
+            self._device_data = {"cum": arr}
+        return self._device_data
+
+    def sample_batch(self, key: jax.Array) -> Dict[str, jax.Array]:
+        """Stateless on-device sample (convenience wrapper around the pure
+        ``device_sample_batch``)."""
+        return device_sample_batch(
+            self.device_data(), key, dcfg=self.dcfg, model_cfg=self.cfg,
+            mesh=self.mesh,
+        )
 
     def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
         while True:

@@ -1,12 +1,14 @@
 """Distributed TAMUNA engine: sharding rules, the TAMUNA-DP trainer, the
-reduce-scatter blocked uplink, and the family-dispatching model API.
+fused round engine, the reduce-scatter blocked uplink, and the
+family-dispatching model API.
 
   sharding     mesh helpers + PartitionSpec derivation (clients = data axes)
   tamuna_dp    DistTamunaConfig / init_state / local + comm step builders
+  rounds       donated scanned round engine (make_round_fn / run_rounds)
   block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
   model_api    init / loss / prefill / make_cache / decode over the zoo
 """
 
-from repro.dist import block_uplink, model_api, sharding, tamuna_dp
+from repro.dist import block_uplink, model_api, rounds, sharding, tamuna_dp
 
-__all__ = ["block_uplink", "model_api", "sharding", "tamuna_dp"]
+__all__ = ["block_uplink", "model_api", "rounds", "sharding", "tamuna_dp"]

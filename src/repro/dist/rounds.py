@@ -1,0 +1,292 @@
+"""Fused round engine: the round, not the local step, is the unit of
+compiled execution.
+
+The seed driver dispatched one un-donated jit call per local step, blocked
+on a host-side sampler between steps, and synced the loss to the host every
+round.  Here a whole round runs as donated compiled programs:
+
+  * ``make_round_fn(cfg, tcfg, mesh)`` compiles one donated program per
+    round-length *bucket*: ``B`` local steps under ``jax.lax.scan`` followed
+    by the comm step behind ``lax.cond``.  A host-sampled geometric length
+    ``L`` is decomposed into descending powers of two
+    (``round_chunks``), every chunk but the last runs with the comm branch
+    off, so across any sequence of rounds at most ``log2(max_L) + 1``
+    distinct programs ever compile (the cache is inspectable as
+    ``round_fn.cache``).
+  * Data is sampled **on device** inside the scan body
+    (``repro.data.pipeline.device_sample_batch``) from PRNG keys folded out
+    of the scan carry: ``data_step_key(base, t)`` for local step ``t`` and
+    ``comm_round_key(base, round)`` for the round's comm step.  Steady-state
+    training performs zero host->device transfers.
+  * ``run_rounds`` drives multiple rounds with on-device metric
+    accumulation: per-round loss / L / comm-float traces are written with
+    ``.at[slot]`` updates inside the donated programs and drained to a
+    ``MetricLogger`` every ``flush_every`` rounds — the drain is the only
+    host sync.
+
+The key-derivation helpers are public so the per-step reference path (and
+the equivalence tests) can replay the exact same schedule.  See DESIGN.md
+§8.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import tamuna_dp
+from repro.dist.tamuna_dp import _as_key
+from repro.models.transformer import ModelConfig
+
+__all__ = [
+    "RoundCarry",
+    "round_chunks",
+    "data_step_key",
+    "comm_round_key",
+    "make_round_fn",
+    "make_fused_round",
+    "init_carry",
+    "run_rounds",
+]
+
+# Batch sampler contract: ``sample_batch(data, key) -> {"tokens": ..., ...}``
+# where ``data`` is a device-resident pytree passed alongside the donated
+# carry as a read-only argument (uploaded once, never baked into programs,
+# never donated — the caller's handle stays valid).
+SampleFn = Callable[[Any, jax.Array], Dict[str, jax.Array]]
+
+TRACE_KEYS = ("loss_sum", "steps", "up_floats", "down_floats")
+
+
+class RoundCarry(NamedTuple):
+    """Everything a round program owns; donated wholesale every call.  The
+    pipeline tables stay OUTSIDE the carry (a separate, read-only argument)
+    so donation never invalidates the caller's ``device_data()`` handle."""
+
+    state: tamuna_dp.DistTamunaState
+    t: jax.Array  # int32 scalar: total local steps taken so far
+    data_key: jax.Array  # (2,) uint32 base key-data for data sampling
+    comm_key: jax.Array  # (2,) uint32 base key-data for comm steps
+    traces: Dict[str, jax.Array]  # per-round device traces, slot-indexed
+
+
+def round_chunks(L: int, max_L: int = 16) -> list:
+    """Decompose a round length into descending power-of-two chunks.
+
+    ``sum(round_chunks(L)) == min(L, max_L)`` exactly, and the set of chunk
+    sizes that can ever appear is ``{1, 2, ..., 2^floor(log2(max_L))}`` —
+    the compile cache is bounded by ``log2(max_L) + 1`` programs.
+    """
+    L = max(1, min(int(L), int(max_L)))
+    return [1 << b for b in range(L.bit_length() - 1, -1, -1)
+            if (L >> b) & 1]
+
+
+def data_step_key(base: jax.Array, t) -> jax.Array:
+    """Key for the batch of global local-step ``t`` (typed PRNG key)."""
+    return jax.random.fold_in(_as_key(base), t)
+
+
+def comm_round_key(base: jax.Array, rnd) -> jax.Array:
+    """Key for the comm step ending round ``rnd`` (``state.round``)."""
+    return jax.random.fold_in(_as_key(base), rnd)
+
+
+def _zero_traces(flush_every: int) -> Dict[str, jax.Array]:
+    return {
+        "loss_sum": jnp.zeros((flush_every,), jnp.float32),
+        "steps": jnp.zeros((flush_every,), jnp.int32),
+        "up_floats": jnp.zeros((flush_every,), jnp.float32),
+        "down_floats": jnp.zeros((flush_every,), jnp.float32),
+    }
+
+
+def _scan_local(local, sample_batch: SampleFn, state, data, dkey, t, B: int):
+    """``B`` local steps under ``lax.scan``, batches sampled on device from
+    ``fold_in(dkey, t)``; returns (state, t, summed loss)."""
+
+    def body(inner, _):
+        st, tt, acc = inner
+        batch = sample_batch(data, jax.random.fold_in(dkey, tt))
+        st, m = local(st, **batch)
+        return (st, tt + 1, acc + m["loss"]), None
+
+    (state, t, loss_sum), _ = jax.lax.scan(
+        body, (state, t, jnp.float32(0.0)), None, length=B
+    )
+    return state, t, loss_sum
+
+
+def make_round_fn(
+    cfg: ModelConfig,
+    tcfg: tamuna_dp.DistTamunaConfig,
+    mesh,
+    *,
+    sample_batch: SampleFn,
+    max_L: int = 16,
+):
+    """Build ``round_fn(carry, data, L, slot) -> carry`` running one round.
+
+    ``data`` is the device-resident pipeline table pytree (read-only, never
+    donated); ``L`` is the (host-sampled) number of local steps; ``slot`` is
+    the trace row this round writes (``global_round % flush_every``).  The
+    callable exposes ``round_fn.cache`` (bucket -> compiled program) and
+    ``round_fn.max_L``.
+    """
+    local = tamuna_dp.make_local_step(cfg, tcfg)
+    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+
+    def chunk_fn(B: int, carry: RoundCarry, data, do_comm,
+                 slot) -> RoundCarry:
+        state, t, dk, ck, traces = carry
+        state, t, loss_sum = _scan_local(
+            local, sample_batch, state, data, _as_key(dk), t, B
+        )
+
+        def with_comm(st):
+            ckey = comm_round_key(ck, st.round)
+            return comm(st, jax.random.key_data(ckey))
+
+        state = jax.lax.cond(do_comm, with_comm, lambda st: st, state)
+        traces = {
+            "loss_sum": traces["loss_sum"].at[slot].add(loss_sum),
+            "steps": traces["steps"].at[slot].add(B),
+            "up_floats": traces["up_floats"].at[slot].set(state.up_floats),
+            "down_floats": traces["down_floats"].at[slot].set(
+                state.down_floats
+            ),
+        }
+        return RoundCarry(state, t, dk, ck, traces)
+
+    cache: Dict[int, Callable] = {}
+
+    def program(B: int):
+        if B not in cache:
+            cache[B] = jax.jit(partial(chunk_fn, B), donate_argnums=(0,))
+        return cache[B]
+
+    def round_fn(carry: RoundCarry, data, L: int, slot) -> RoundCarry:
+        chunks = round_chunks(L, max_L)
+        slot = jnp.asarray(slot, jnp.int32)
+        for i, B in enumerate(chunks):
+            do_comm = jnp.asarray(i == len(chunks) - 1)
+            carry = program(B)(carry, data, do_comm, slot)
+        return carry
+
+    round_fn.cache = cache
+    round_fn.max_L = max_L
+    return round_fn
+
+
+def make_fused_round(
+    cfg: ModelConfig,
+    tcfg: tamuna_dp.DistTamunaConfig,
+    mesh,
+    *,
+    sample_batch: SampleFn,
+    L: int,
+):
+    """Static-``L`` fused round ``fn(state, key_data, data) -> (state, loss)``
+    with an unconditional comm step — the shape the dry-run lowers so the
+    roofline artifacts see the scanned round, and the bench times."""
+    local = tamuna_dp.make_local_step(cfg, tcfg)
+    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+
+    def fn(state, key_data, data):
+        kd, kc = jax.random.split(_as_key(key_data))
+        state, _, loss_sum = _scan_local(
+            local, sample_batch, state, data, kd,
+            jnp.zeros((), jnp.int32), L,
+        )
+        ckey = comm_round_key(jax.random.key_data(kc), state.round)
+        state = comm(state, jax.random.key_data(ckey))
+        return state, loss_sum / L
+
+    return fn
+
+
+def init_carry(
+    state: tamuna_dp.DistTamunaState,
+    key: jax.Array,
+    flush_every: int,
+) -> RoundCarry:
+    kd, kc = jax.random.split(_as_key(key))
+    return RoundCarry(
+        state=state,
+        t=jnp.zeros((), jnp.int32),
+        data_key=jax.random.key_data(kd),
+        comm_key=jax.random.key_data(kc),
+        traces=_zero_traces(flush_every),
+    )
+
+
+def run_rounds(
+    state: tamuna_dp.DistTamunaState,
+    *,
+    round_fn,
+    data: Any,
+    key: jax.Array,
+    rounds: int,
+    rng,
+    p: float,
+    flush_every: int = 10,
+    logger=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    max_L: Optional[int] = None,
+) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
+    """Multi-round driver: geometric ``L`` per round (host ``rng``), fused
+    rounds on device, metrics drained every ``flush_every`` rounds.
+
+    Steady state does no per-local-step host->device transfer and no
+    per-round host sync; the only blocking points are the trace drain (once
+    per flush) and checkpoint saves.  Returns the final state and the last
+    drained per-round metrics row.
+    """
+    # never sample past the engine's bucket cap: round_fn silently clamps
+    # executed steps to its own max_L, so a larger caller cap would desync
+    # the host-side L from the executed count
+    engine_cap = getattr(round_fn, "max_L", None)
+    max_L = max_L or engine_cap or 16
+    if engine_cap:
+        max_L = min(max_L, engine_cap)
+    flush_every = max(1, min(flush_every, rounds))
+    carry = init_carry(state, key, flush_every)
+    pending = []  # global round indices awaiting drain
+    total_steps = 0
+    last: Dict[str, Any] = {}
+    for r in range(rounds):
+        L = tamuna_dp.sample_round_length(rng, p, max_L=max_L)
+        slot = len(pending)
+        carry = round_fn(carry, data, L, slot)
+        pending.append(r)
+        if len(pending) == flush_every or r == rounds - 1:
+            tr = jax.device_get(carry.traces)  # the only host sync
+            for i, gr in enumerate(pending):
+                executed = int(tr["steps"][i])  # device truth, not host L
+                total_steps += executed
+                last = {
+                    "round": gr,
+                    "L": executed,
+                    "loss": float(tr["loss_sum"][i]) / max(executed, 1),
+                    "local_steps": total_steps,
+                    "up_floats": float(tr["up_floats"][i]),
+                    "down_floats": float(tr["down_floats"][i]),
+                }
+                if logger is not None:
+                    logger.log(gr, last)
+            pending = []
+            carry = carry._replace(traces=_zero_traces(flush_every))
+        if (checkpoint_dir and checkpoint_every
+                and (r + 1) % checkpoint_every == 0):
+            from repro import checkpoint
+
+            checkpoint.save(
+                os.path.join(checkpoint_dir, f"step_{r + 1}"),
+                carry.state, r + 1,
+            )
+    return carry.state, last

@@ -155,7 +155,7 @@ def run_one(
             "step": step_name,
             "mesh": mesh_name,
             "chips": n_chips,
-            "uplink": uplink if step_name == "comm" else None,
+            "uplink": uplink if step_name in ("comm", "round") else None,
             "compile_s": round(t1 - t0, 2),
             "memory_analysis": {
                 "argument_bytes": getattr(mem, "argument_size_in_bytes", None),

@@ -4,12 +4,18 @@ for every (architecture x input-shape x mesh) combination.
 Used by the multi-pod dry-run, the trainers, and the integration tests, so
 the thing we dry-run is EXACTLY the thing we train/serve.
 
-Train shapes lower TWO functions (Algorithm 2's two iteration types):
+Train shapes lower THREE functions (Algorithm 2's two iteration types plus
+their fusion):
   local   one TAMUNA local step over the global batch — the common case,
           zero cross-client collectives,
   comm    the compressed-aggregation + control-variate round end — all of
-          the paper's communication lives here.
-Roofline amortizes: round = E[L] * local + comm.
+          the paper's communication lives here,
+  round   the fused round engine program (`repro.dist.rounds`): E[L] local
+          steps under `lax.scan` with on-device data sampling, then the
+          comm step — what the production trainer actually dispatches, so
+          the roofline artifacts see the scanned round, not a lone step.
+Roofline amortizes: round = E[L] * local + comm (and reports the fused
+round separately).
 """
 
 from __future__ import annotations
@@ -23,7 +29,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
-from repro.dist import model_api, sharding, tamuna_dp
+from repro.data import DataConfig, device_sampler
+from repro.dist import model_api, rounds, sharding, tamuna_dp
 from repro.models.transformer import ModelConfig
 
 
@@ -140,7 +147,28 @@ def build_train_steps(
         in_shardings=(state_shard, NamedSharding(mesh, P())),
         out_shardings=state_shard,
     )
-    return {"local": local, "comm": comm}
+
+    # fused round: E[L] = 1/p scanned local steps (data sampled on device
+    # from the per-client transition tables) + the comm step, one program
+    v = min(cfg.vocab, 512)
+    tok_len = T if cfg.family == "encdec" else T - cfg.prefix_len
+    dcfg = DataConfig(seq_len=tok_len, per_client_batch=bs, vocab=v,
+                      n_clients=n)
+    round_raw = rounds.make_fused_round(
+        cfg, tcfg, mesh,
+        sample_batch=device_sampler(dcfg, cfg, mesh),
+        L=max(1, int(round(1.0 / tcfg.p))),
+    )
+    round_ = Built(
+        name=f"{arch}:{shape_name}:round",
+        fn=round_raw,
+        in_specs=(state_struct, _sds((2,), jnp.uint32),
+                  {"cum": _sds((n, v, v), jnp.float32)}),
+        in_shardings=(state_shard, NamedSharding(mesh, P()),
+                      {"cum": NamedSharding(mesh, P(da, None, None))}),
+        out_shardings=(state_shard, None),
+    )
+    return {"local": local, "comm": comm, "round": round_}
 
 
 # --------------------------------------------------------------------------

@@ -2,8 +2,16 @@
 
 Runs real training (CPU host mesh by default — the same step functions the
 dry-run lowers for the production mesh).  Round structure follows
-Algorithm 1: ``L^(r) ~ Geometric(p)`` local steps (host-sampled, each length
-compiled once and cached) then a compressed communication step.
+Algorithm 1: ``L^(r) ~ Geometric(p)`` local steps then a compressed
+communication step.
+
+By default the round is ONE compiled unit: the fused round engine
+(``repro.dist.rounds``) scans the local steps with donated state, samples
+batches on device from scan-carried PRNG keys, runs the comm step in the
+same program, and accumulates metrics on device (drained every
+``--flush-every`` rounds).  ``--no-fuse`` keeps the legacy per-step path
+(one jit dispatch per local step, host-sampled batches) as an escape hatch
+— still with donated state buffers.
 
 Example (the (b) deliverable end-to-end driver):
   PYTHONPATH=src python -m repro.launch.train \
@@ -40,6 +48,14 @@ def main(argv=None) -> int:
     ap.add_argument("--log", default="")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="legacy per-step driver: one jit dispatch per "
+                         "local step, host-sampled batches")
+    ap.add_argument("--max-L", type=int, default=16,
+                    help="cap on the geometric round length")
+    ap.add_argument("--flush-every", type=int, default=10,
+                    help="fused path: drain device metric traces every "
+                         "this many rounds")
     args = ap.parse_args(argv)
 
     n_dev = args.data_parallel * args.model_parallel
@@ -53,8 +69,8 @@ def main(argv=None) -> int:
 
     from repro import checkpoint, metrics
     from repro.configs import registry
-    from repro.data import DataConfig, SyntheticTokenPipeline
-    from repro.dist import sharding, tamuna_dp
+    from repro.data import DataConfig, SyntheticTokenPipeline, device_sampler
+    from repro.dist import rounds, sharding, tamuna_dp
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(args.data_parallel, args.model_parallel)
@@ -87,33 +103,66 @@ def main(argv=None) -> int:
         cfg, mesh,
     )
 
-    local_step = jax.jit(tamuna_dp.make_local_step(cfg, tcfg))
-    comm_step = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh))
     logger = metrics.MetricLogger(args.log or None)
-
     rng = np.random.default_rng(args.seed)
-    key = jax.random.key(args.seed + 1)
     t0 = time.time()
-    total_steps = 0
-    for r in range(args.rounds):
-        L = tamuna_dp.sample_round_length(rng, tcfg.p, max_L=16)
-        for _ in range(L):
-            state, m = local_step(state, **pipe.next_batch())
-            total_steps += 1
-        key, ck = jax.random.split(key)
-        state = comm_step(state, jax.random.key_data(ck))
-        logger.log(r, {
-            "round": r, "L": L, "loss": m["loss"],
-            "local_steps": total_steps,
-        })
-        if (args.checkpoint_dir and args.checkpoint_every
-                and (r + 1) % args.checkpoint_every == 0):
-            checkpoint.save(
-                os.path.join(args.checkpoint_dir, f"step_{r+1}"), state, r + 1
-            )
+
+    if args.no_fuse:
+        # legacy per-step path: one dispatch per local step, host batches —
+        # but with the state buffers donated (the seed copied the full
+        # (n, *param) state in HBM every step)
+        local_step = jax.jit(
+            tamuna_dp.make_local_step(cfg, tcfg), donate_argnums=(0,)
+        )
+        comm_step = jax.jit(
+            tamuna_dp.make_comm_step(cfg, tcfg, mesh), donate_argnums=(0,)
+        )
+        key = jax.random.key(args.seed + 1)
+        total_steps = 0
+        final_loss = float("nan")
+        for r in range(args.rounds):
+            L = tamuna_dp.sample_round_length(rng, tcfg.p, max_L=args.max_L)
+            for _ in range(L):
+                state, m = local_step(state, **pipe.next_batch())
+                total_steps += 1
+            key, ck = jax.random.split(key)
+            state = comm_step(state, jax.random.key_data(ck))
+            final_loss = float(m["loss"])
+            logger.log(r, {
+                "round": r, "L": L, "loss": final_loss,
+                "local_steps": total_steps,
+            })
+            if (args.checkpoint_dir and args.checkpoint_every
+                    and (r + 1) % args.checkpoint_every == 0):
+                checkpoint.save(
+                    os.path.join(args.checkpoint_dir, f"step_{r+1}"),
+                    state, r + 1,
+                )
+    else:
+        round_fn = rounds.make_round_fn(
+            cfg, tcfg, mesh,
+            sample_batch=device_sampler(pipe.dcfg, cfg, mesh),
+            max_L=args.max_L,
+        )
+        state, last = rounds.run_rounds(
+            state,
+            round_fn=round_fn,
+            data=pipe.device_data(),
+            key=jax.random.key(args.seed + 1),
+            rounds=args.rounds,
+            rng=rng,
+            p=tcfg.p,
+            flush_every=args.flush_every,
+            logger=logger,
+            checkpoint_dir=args.checkpoint_dir or None,
+            checkpoint_every=args.checkpoint_every,
+        )
+        total_steps = last.get("local_steps", 0)
+        final_loss = last.get("loss", float("nan"))
+
     dt = time.time() - t0
     print(f"[train] {args.rounds} rounds / {total_steps} local steps "
-          f"in {dt:.1f}s; final loss {float(m['loss']):.4f}")
+          f"in {dt:.1f}s; final loss {final_loss:.4f}")
     return 0
 
 

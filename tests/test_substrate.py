@@ -1,5 +1,6 @@
-"""Data pipeline, optimizers, checkpointing, theory formulas."""
+"""Data pipeline, optimizers, checkpointing, metrics, theory formulas."""
 
+import csv
 import os
 
 import jax
@@ -9,7 +10,8 @@ import pytest
 
 from repro import checkpoint
 from repro.core import theory
-from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.data import DataConfig, SyntheticTokenPipeline, device_sample_batch
+from repro.metrics import MetricLogger
 from repro.models.transformer import ModelConfig
 from repro.optim import adamw, clip_by_global_norm, global_norm, momentum, sgd
 
@@ -28,6 +30,50 @@ def test_pipeline_shapes_and_determinism():
     np.testing.assert_array_equal(
         np.asarray(b1["tokens"][..., 1:]), np.asarray(b1["labels"][..., :-1])
     )
+
+
+def test_pipeline_client_stream_invariant_to_population():
+    """Client i's data stream (host and device paths) depends only on
+    (seed, i) — never on n_clients or generation order."""
+    cfg = ModelConfig(vocab=64, d_model=32)
+    mk = lambda n: SyntheticTokenPipeline(
+        DataConfig(seq_len=12, per_client_batch=2, vocab=64, seed=3,
+                   n_clients=n), cfg)
+    p4, p8 = mk(4), mk(8)
+    # transition tables: client i's chain is the same in both populations
+    np.testing.assert_allclose(p4.trans, p8.trans[:4])
+    # host path, two consecutive batches (streams advance per client)
+    for _ in range(2):
+        b4, b8 = p4.next_batch(), p8.next_batch()
+        np.testing.assert_array_equal(
+            np.asarray(b4["tokens"]), np.asarray(b8["tokens"][:4])
+        )
+    # device path: per-client fold-in keys are population-invariant too
+    key = jax.random.key(11)
+    d4 = device_sample_batch(p4.device_data(), key, dcfg=p4.dcfg,
+                             model_cfg=cfg)
+    d8 = device_sample_batch(p8.device_data(), key, dcfg=p8.dcfg,
+                             model_cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(d4["tokens"]),
+                                  np.asarray(d8["tokens"][:4]))
+
+
+def test_metric_logger_tolerates_evolving_keys(tmp_path):
+    """Later rows may introduce keys the first row did not have (the fused
+    engine logs up/down floats per round); the CSV widens its header."""
+    path = tmp_path / "m.csv"
+    lg = MetricLogger(str(path), print_every=10**9)
+    lg.log(0, {"loss": 1.25})
+    lg.log(1, {"loss": 0.5, "up_floats": 3.0})  # new key mid-stream
+    lg.log(2, {"up_floats": 4.0})  # missing key mid-stream
+    lg.close()
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    assert [r["step"] for r in rows] == ["0", "1", "2"]
+    assert rows[0]["up_floats"] == ""  # widened header backfills empty
+    assert float(rows[1]["up_floats"]) == 3.0
+    assert float(rows[1]["loss"]) == 0.5
+    assert rows[2]["loss"] == ""
 
 
 def test_pipeline_heterogeneity_knob():
