@@ -21,7 +21,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,table1,table2,kernels,"
-                         "dist_round,round_engine,roofline")
+                         "dist_round,round_engine,comm_step,roofline")
     ap.add_argument("--paper-scale", action="store_true")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
@@ -102,6 +102,12 @@ def main(argv=None) -> int:
 
     rows = section("round_engine", lambda: __import__(
         "benchmarks.round_engine_bench", fromlist=["run"]).run())
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    rows = section("comm_step", lambda: __import__(
+        "benchmarks.comm_step_bench", fromlist=["run"]).run())
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])

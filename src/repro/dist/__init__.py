@@ -5,10 +5,25 @@ family-dispatching model API.
   sharding     mesh helpers + PartitionSpec derivation (clients = data axes)
   tamuna_dp    DistTamunaConfig / init_state / local + comm step builders
   rounds       donated scanned round engine (make_round_fn / run_rounds)
+  comm_ws      flat comm workspace: the mask-free fused comm step (§9)
   block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
   model_api    init / loss / prefill / make_cache / decode over the zoo
 """
 
-from repro.dist import block_uplink, model_api, rounds, sharding, tamuna_dp
+from repro.dist import (
+    block_uplink,
+    comm_ws,
+    model_api,
+    rounds,
+    sharding,
+    tamuna_dp,
+)
 
-__all__ = ["block_uplink", "model_api", "rounds", "sharding", "tamuna_dp"]
+__all__ = [
+    "block_uplink",
+    "comm_ws",
+    "model_api",
+    "rounds",
+    "sharding",
+    "tamuna_dp",
+]

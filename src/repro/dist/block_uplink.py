@@ -18,6 +18,15 @@ row-property argument as the paper's Appendix A.1 (see DESIGN.md §3).
 Per-leaf coordinates are chunked in flat order, so with tensor parallelism
 the template is a per-TP-shard row reordering of the global one — still a
 valid exactly-``s``-owners template.
+
+``block_rs_aggregate`` routes through the mask-free fused paths of
+``comm_ws.blocked_comm`` by default: the ``(n, n, chunk)`` pad +
+advanced-indexing gather + materialized ownership delta of
+``_leaf_aggregate`` (this module's PR 1 implementation, kept below for the
+benchmark's prior-path row) becomes ``s`` rolled adds straight off the
+unpadded leaves plus one fused closed-form h-update pass — DESIGN.md §9.
+The ``impl="dense"`` ground truth is the materialized-mask blocked
+reference in ``comm_ws._dense_blocked_leaf``.
 """
 
 from __future__ import annotations
@@ -27,6 +36,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.dist import comm_ws
 
 __all__ = ["block_rs_aggregate"]
 
@@ -83,6 +94,9 @@ def block_rs_aggregate(
     mesh: Optional[Any] = None,
     *,
     model_cfg=None,
+    impl: str = "auto",
+    block: int = 4096,
+    meshed: Optional[bool] = None,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
@@ -94,16 +108,19 @@ def block_rs_aggregate(
     a data-sharded mesh GSPMD lowers the shifted adds to reduce-scatter /
     collective-permute traffic; ``mesh``/``model_cfg`` are accepted for API
     symmetry and future shard_map specialization.
+
+    ``impl`` selects the mask-free paths of ``comm_ws.blocked_comm``
+    (``"ws"``/``"pallas"``; ``"auto"`` resolves per backend) or the
+    materialized-mask dense reference (``"dense"``).  ``meshed`` defaults
+    to "a mesh was passed": with the client axis device-sharded the UpCom
+    must keep the d-sized psum shape (comm_ws module docstring), so call
+    sites that hand over their mesh get the right collective shape
+    without remembering the flag.
     """
-    del mesh, model_cfg
-    scale = eta / tcfg.gamma
-    s = tcfg.s
-    xflat, treedef = jax.tree.flatten(x)
-    hflat = jax.tree.leaves(h)
-    pairs = [
-        _leaf_aggregate(xl, hl, off, n, s, scale)
-        for xl, hl in zip(xflat, hflat)
-    ]
-    x_new = jax.tree.unflatten(treedef, [a for a, _ in pairs])
-    h_new = jax.tree.unflatten(treedef, [b for _, b in pairs])
-    return x_new, h_new
+    del model_cfg
+    if meshed is None:
+        meshed = mesh is not None
+    return comm_ws.blocked_comm(
+        x, h, off, n, tcfg.s, eta / tcfg.gamma, impl=impl, block=block,
+        meshed=meshed,
+    )

@@ -23,6 +23,11 @@ round.  Here a whole round runs as donated compiled programs:
     ``.at[slot]`` updates inside the donated programs and drained to a
     ``MetricLogger`` every ``flush_every`` rounds — the drain is the only
     host sync.
+  * Both uplinks route through the mask-free comm paths of
+    ``repro.dist.comm_ws`` (``tcfg.comm_impl``, default auto: sparse fused
+    uplink off-TPU, flat-workspace Pallas kernels on TPU — DESIGN.md §9),
+    so the fused round program's comm step never materializes a dense
+    ownership mask or scans all ``n`` client rows for the UpCom.
 
 The key-derivation helpers are public so the per-step reference path (and
 the equivalence tests) can replay the exact same schedule.  See DESIGN.md

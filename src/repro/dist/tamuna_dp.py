@@ -19,6 +19,13 @@ State leaves are stacked per client: ``x``/``h`` leaves are ``(n, *param)``
 and shard over the data axes, so the masked sum lowers to an all-reduce
 (psum) over clients and the blocked variant to reduce-scatter-shaped
 collectives — communication scales with the cohort, never with tokens.
+
+Both uplinks aggregate mask-free through ``repro.dist.comm_ws``: ownership
+comes from static closed-form band tables fused into the aggregation
+(``comm_impl="ws"``, meshed mode: the UpCom keeps the d-sized psum shape
+since clients are device-sharded here) or the packed-workspace Pallas
+kernels (``"pallas"``, TPU), with the per-leaf dense-mask reference
+retained as ``comm_impl="dense"`` (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -33,7 +40,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import masks, theory
-from repro.dist import model_api, sharding
+from repro.dist import comm_ws, model_api, sharding
 from repro.models.transformer import ModelConfig
 from repro.optim import optimizers
 
@@ -59,12 +66,18 @@ class DistTamunaConfig:
     microbatches: int = 1  # gradient accumulation steps per local step
     local_opt: str = "sgd"  # "sgd" (paper rule) | "adamw" (DESIGN.md §7)
     use_kernel: bool = False  # fused Pallas local-step update (kernels/)
+    comm_impl: str = "auto"  # "auto" | "dense" | "ws" | "pallas" (§9)
 
     def __post_init__(self):
         if not (2 <= self.s <= self.c):
             raise ValueError(f"need 2 <= s <= c, got s={self.s} c={self.c}")
         if self.uplink not in ("masked_psum", "block_rs"):
             raise ValueError(f"unknown uplink {self.uplink!r}")
+        if self.comm_impl not in comm_ws.COMM_IMPLS:
+            raise ValueError(
+                f"unknown comm_impl {self.comm_impl!r}; want one of "
+                f"{comm_ws.COMM_IMPLS}"
+            )
         if self.local_opt not in ("sgd", "adamw"):
             raise ValueError(f"unknown local_opt {self.local_opt!r}")
         if self.use_kernel and self.local_opt != "sgd":
@@ -255,28 +268,30 @@ def _as_key(key: jax.Array) -> jax.Array:
     return jax.random.wrap_key_data(key)
 
 
-def _leaf_dim(a: jax.Array) -> int:
-    return int(np.prod(a.shape[1:]))
-
-
-def _mask_rows(perm: jax.Array, slot_of: jax.Array, member: jax.Array,
-               D: int, c: int, s: int):
-    """(n, D) ownership mask: client i owns coordinate k of this leaf iff
-    its cohort slot's (permuted) template column owns row k.  Reuses the
-    property-tested closed forms of ``masks.mask_from_permutation`` —
-    cohort slots gather their column, idle clients get all-zeros."""
-    q = masks.mask_from_permutation(perm, D, c, s).astype(bool)  # (D, c)
-    q_n = q.T[jnp.clip(slot_of, 0)]  # (n, D)
-    return q_n & member[:, None]
-
-
-def make_comm_step(cfg: ModelConfig, tcfg: DistTamunaConfig, mesh: Mesh):
+def make_comm_step(
+    cfg: ModelConfig,
+    tcfg: DistTamunaConfig,
+    mesh: Mesh,
+    *,
+    impl: Optional[str] = None,
+    block: int = 4096,
+):
     """Build ``fn(state, key) -> state``: UpCom + DownCom of one round.
 
     masked_psum: sum the masked client vectors over the data axes (an
     all-reduce of the *sparse* contributions), reconstruct ``x_bar`` with
     the exact ``1/s`` factor, update the cohort's control variates on the
     masked coordinates only, and broadcast ``x_bar`` back down.
+
+    The aggregation math runs over the flat comm workspace
+    (``repro.dist.comm_ws``, DESIGN.md §9): ``impl`` (default
+    ``tcfg.comm_impl``) picks fused-jnp (``"ws"``), Pallas kernels
+    (``"pallas"``), or the per-leaf dense-mask reference (``"dense"``);
+    ``"auto"`` resolves per backend.  All impls consume the same key and
+    produce the same coordinates to float roundoff.
+
+    Uplink/downlink float accounting is a builder-time constant (the leaf
+    dims are static), not recomputed inside the traced step.
     """
     n = sharding.n_clients(mesh)
     c, s = tcfg.c, tcfg.s
@@ -284,6 +299,30 @@ def make_comm_step(cfg: ModelConfig, tcfg: DistTamunaConfig, mesh: Mesh):
         raise ValueError(f"cohort c={c} exceeds population n={n}")
     eta = tcfg.eta_(n)
     scale = eta / tcfg.gamma
+    impl = comm_ws.resolve_impl(impl or tcfg.comm_impl)
+
+    # builder-time communication accounting: per-leaf dims are static, so
+    # the traced fn only adds cached constants (the seed recomputed the
+    # python sum over leaves inside every trace)
+    params_struct = jax.eval_shape(
+        lambda: model_api.init(jax.random.key(0), cfg)
+    )
+    dims = [int(np.prod(a.shape)) for a in jax.tree.leaves(params_struct)]
+    down_total = jnp.float32(sum(dims))
+    if tcfg.uplink == "block_rs":
+        up_total = jnp.float32(
+            sum(masks.block_column_nnz(D, n, s) for D in dims)
+        )
+    else:
+        up_total = jnp.float32(sum(masks.column_nnz(D, c, s) for D in dims))
+
+    def bump(state, x_new, h_new):
+        return state._replace(
+            x=x_new, h=h_new,
+            round=state.round + 1,
+            up_floats=state.up_floats + up_total,
+            down_floats=state.down_floats + down_total,
+        )
 
     if tcfg.uplink == "block_rs":
         from repro.dist.block_uplink import block_rs_aggregate
@@ -300,19 +339,10 @@ def make_comm_step(cfg: ModelConfig, tcfg: DistTamunaConfig, mesh: Mesh):
             key = _as_key(key)
             off = jax.random.randint(key, (), 0, n, jnp.int32)
             xb, hb = block_rs_aggregate(
-                state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg
+                state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg,
+                impl=impl, block=block, meshed=True,
             )
-            d = sum(_leaf_dim(a) for a in jax.tree.leaves(state.x))
-            up = float(sum(
-                masks.block_column_nnz(_leaf_dim(a), n, s)
-                for a in jax.tree.leaves(state.x)
-            ))
-            return state._replace(
-                x=xb, h=hb,
-                round=state.round + 1,
-                up_floats=state.up_floats + jnp.float32(up),
-                down_floats=state.down_floats + jnp.float32(d),
-            )
+            return bump(state, xb, hb)
 
         return fn
 
@@ -325,38 +355,18 @@ def make_comm_step(cfg: ModelConfig, tcfg: DistTamunaConfig, mesh: Mesh):
             jnp.full((n,), -1, jnp.int32)
             .at[cohort].set(jnp.arange(c, dtype=jnp.int32))
         )
-        member = slot_of >= 0
-
-        def per_leaf(xl, hl):
-            D = _leaf_dim(xl)
-            q = _mask_rows(perm, slot_of, member, D, c, s)  # (n, D) bool
-            xf = xl.reshape(n, D).astype(jnp.float32)
-            qf = q.astype(jnp.float32)
-            # UpCom: masked psum over the client axis, exact 1/s rebuild
-            x_bar = (xf * qf).sum(axis=0) / s  # (D,)
-            # control variates: cohort only, masked coordinates only
-            h_new = hl.reshape(n, D) + scale * qf * (x_bar[None] - xf)
-            # DownCom: everyone gets the new server model
-            x_new = jnp.broadcast_to(x_bar[None], (n, D))
-            return (
-                x_new.astype(xl.dtype).reshape(xl.shape),
-                h_new.astype(hl.dtype).reshape(hl.shape),
-            )
-
-        xflat, treedef = jax.tree.flatten(state.x)
-        hflat = jax.tree.leaves(state.h)
-        pairs = [per_leaf(xl, hl) for xl, hl in zip(xflat, hflat)]
-        x_new = jax.tree.unflatten(treedef, [a for a, _ in pairs])
-        h_new = jax.tree.unflatten(treedef, [b for _, b in pairs])
-
-        d = sum(_leaf_dim(a) for a in xflat)
-        up = float(sum(masks.column_nnz(_leaf_dim(a), c, s) for a in xflat))
-        return state._replace(
-            x=x_new, h=h_new,
-            round=state.round + 1,
-            up_floats=state.up_floats + jnp.float32(up),
-            down_floats=state.down_floats + jnp.float32(d),
+        # the client's TEMPLATE column: perm[cohort slot], -1 when idle
+        slot = jnp.where(
+            slot_of >= 0, perm[jnp.clip(slot_of, 0)], -1
+        ).astype(jnp.int32)
+        # clients are sharded over the data axes here, so the uplink keeps
+        # the d-sized psum shape (comm_ws meshed mode); the sparse-gather
+        # uplink is for unsharded stacked state (bench, single-device sims)
+        x_new, h_new = comm_ws.cyclic_comm(
+            state.x, state.h, slot, c, s, scale, impl=impl, block=block,
+            meshed=True,
         )
+        return bump(state, x_new, h_new)
 
     return fn
 

@@ -1,6 +1,11 @@
 """Pallas TPU kernels for the framework's compute/bandwidth hot-spots.
 
-  compress.py     fused TAMUNA mask-generate-and-apply (C_i), VPU/bandwidth
+  compress.py     fused TAMUNA mask-generate-and-apply (C_i), VPU/bandwidth;
+                  owns the closed-form ownership predicate the whole comm
+                  path shares (``owned_from_band``)
+  uplink.py       the mask-free fused comm step over the flat workspace:
+                  masked_sum (UpCom + 1/s rebuild) and h_update (control
+                  variates + DownCom broadcast in one pass), DESIGN.md §9
   local_step.py   fused local step x - gamma*(g - h), 3 reads + 1 write
   decode_attn.py  flash-decode GQA attention over KV-cache blocks (MXU)
 

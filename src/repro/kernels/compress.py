@@ -6,37 +6,96 @@ paper Fig. 1) and multiplies in place.  VPU-only (no MXU): the kernel is
 bandwidth-bound by design — 1 read + 1 write per element instead of the
 3 reads + 1 write a materialized-mask path costs.
 
-Grid: 1-D over coordinate blocks; the client's mask column (``slot``) and
-the cohort/sparsity constants arrive via scalar prefetch (SMEM).
+``owned_from_band`` is the shared ownership predicate of the whole comm
+path: the uplink kernels (``kernels/uplink.py``) and the flat-workspace
+comm step (``dist/comm_ws.py``) evaluate the same closed form, so this
+module's mask generation IS the production comm step's mask generation.
+
+Operands may be flat ``(d,)`` vectors (1-D grid over coordinate blocks,
+``slot`` shaped ``(1,)``) or client-stacked ``(n, d)`` matrices (2-D grid
+with clients as the leading grid axis, ``slot`` shaped ``(n,)``).
+``interpret=None`` auto-detects the backend: compiled via Mosaic on TPU,
+interpreter elsewhere.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> interpret only off-TPU (Mosaic compile on real TPUs)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def owned_from_band(slot, band, m: int, s: int):
+    """Closed-form ownership: active slots in ``[0, m)`` own coordinate
+    ``k`` iff ``(slot + band[k]) mod m < s``.  With the cyclic band
+    ``band = (-s k) mod c`` this is exactly ``masks.mask_from_permutation``
+    row ownership; with the blocked band (chunk ids) it is the block_rs
+    closed form.  Shapes broadcast; never materialized outside a tile."""
+    return (slot >= 0) & (slot < m) & (((slot + band) % m) < s)
+
+
+def cyclic_band(k, c: int, s: int):
+    """The cyclic template's per-coordinate band: ``(-s k) mod c``."""
+    return (-(s * (k % c))) % c
+
+
 def _compress_kernel(slot_ref, x_ref, o_ref, *, c: int, s: int, block: int):
     i = pl.program_id(0)
-    slot = slot_ref[0]
     k = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) + i * block
-    owned = (((slot - s * (k % c)) % c) < s) & (slot < c)
+    owned = owned_from_band(slot_ref[0], cyclic_band(k, c, s), c, s)
+    x = x_ref[...]
+    o_ref[...] = jnp.where(owned, x, jnp.zeros((), x.dtype))
+
+
+def _compress2d_kernel(slot_ref, x_ref, o_ref, *, c: int, s: int,
+                       block: int):
+    j = pl.program_id(1)
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1) + j * block
+    owned = owned_from_band(slot_ref[0], cyclic_band(k, c, s), c, s)
     x = x_ref[...]
     o_ref[...] = jnp.where(owned, x, jnp.zeros((), x.dtype))
 
 
 def compress(
-    x: jax.Array,  # (d,) flat
-    slot: jax.Array,  # (1,) int32 mask column (>= c -> inactive, zeros)
+    x: jax.Array,  # (d,) flat or (n, d) client-stacked
+    slot: jax.Array,  # (1,)/(n,) int32 mask column(s); outside [0, c) -> 0s
     c: int,
     s: int,
     *,
     block: int = 4096,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    if x.ndim == 2:
+        n, d = x.shape
+        blk = min(block, d)
+        pad = (-d) % blk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)))
+        n_blocks = x.shape[1] // blk
+        out = pl.pallas_call(
+            functools.partial(_compress2d_kernel, c=c, s=s, block=blk),
+            grid=(n, n_blocks),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i, j: (i,)),  # this client's slot
+                pl.BlockSpec((1, blk), lambda i, j: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((1, blk), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(slot, x)
+        return out[:, :d] if pad else out
+
     d = x.shape[0]
     pad = (-d) % block
     if pad:

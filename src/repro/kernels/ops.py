@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import compress as _compress
 from repro.kernels import decode_attn as _decode_attn
 from repro.kernels import local_step as _local_step
+from repro.kernels import uplink as _uplink
 
 
 def _interpret() -> bool:
@@ -24,9 +25,28 @@ def _interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("c", "s", "block"))
 def compress(x, slot, c: int, s: int, block: int = 4096):
-    """C_i(x) for a flat vector; slot: (1,) int32 mask column."""
+    """C_i(x): (d,) with slot (1,), or client-stacked (n, d) with slot
+    (n,) — the 2-D form runs a grid over clients."""
     return _compress.compress(
         x, slot, c, s, block=block, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("m", "s", "block"))
+def uplink_masked_sum(x, slot, band, m: int, s: int, block: int = 4096):
+    """Mask-free UpCom over the (n, d) comm workspace, 1/s rebuild fused."""
+    return _uplink.masked_sum(
+        x, slot, band, m, s, block=block, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("m", "s", "scale", "block"))
+def uplink_h_update(x, h, x_bar, slot, band, m: int, s: int, scale: float,
+                    block: int = 4096):
+    """Fused control-variate update + DownCom broadcast, one pass."""
+    return _uplink.h_update(
+        x, h, x_bar, slot, band, m, s, scale, block=block,
+        interpret=_interpret(),
     )
 
 

@@ -25,6 +25,40 @@ def compress_ref(
     return jnp.where(owned, x, jnp.zeros((), x.dtype))
 
 
+def _owned_ref(slot, band, m: int, s: int):
+    sl = slot[:, None]
+    return (sl >= 0) & (sl < m) & (((sl + band[None, :]) % m) < s)
+
+
+def uplink_masked_sum_ref(
+    x: jax.Array,  # (n, d) f32 workspace
+    slot: jax.Array,  # (n,) int32
+    band: jax.Array,  # (d,) int32
+    m: int,
+    s: int,
+) -> jax.Array:
+    """Owner-masked client-axis sum with the exact 1/s rebuild."""
+    owned = _owned_ref(slot, band, m, s)
+    return jnp.where(owned, x, 0.0).sum(axis=0) / s
+
+
+def uplink_h_update_ref(
+    x: jax.Array,
+    h: jax.Array,
+    x_bar: jax.Array,
+    slot: jax.Array,
+    band: jax.Array,
+    m: int,
+    s: int,
+    scale: float,
+):
+    """Control-variate update on owned coordinates + DownCom broadcast."""
+    owned = _owned_ref(slot, band, m, s)
+    h_new = h + scale * jnp.where(owned, x_bar[None, :] - x, 0.0)
+    x_new = jnp.broadcast_to(x_bar[None, :], x.shape)
+    return h_new, x_new
+
+
 def fused_local_step_ref(
     x: jax.Array, g: jax.Array, h: jax.Array, gamma: float
 ) -> jax.Array:

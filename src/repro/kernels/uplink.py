@@ -1,0 +1,138 @@
+"""Pallas TPU kernels: the mask-free fused TAMUNA comm step.
+
+Both kernels run over the flat comm workspace (``dist/comm_ws.py``): the
+client-stacked state packed to an ``(n, d)`` f32 buffer, ownership encoded
+by a static per-coordinate ``band`` table and a per-client ``slot`` vector,
+evaluated per VMEM tile via ``compress.owned_from_band`` — no ``(n, d)``
+or ``(d, c)`` mask is ever materialized in HBM.
+
+  masked_sum  UpCom: per-tile ownership, masked client-axis sum, and the
+              exact ``1/s`` rebuild fused into one pass — 1 read of x and
+              a ``d``-sized write, vs the dense reference's mask write +
+              mask read + masked-product materialization.
+  h_update    the round's state update: reads x, h and the server model
+              x_bar once and writes BOTH h_new (control variates, owned
+              coordinates only) and the broadcast x_new in the same pass —
+              2 reads + 2 writes, the HBM floor for this update.
+
+Grid: 1-D over coordinate blocks; tiles are ``(n, block)`` — pick ``block``
+so ``n * block * 4B`` tiles fit VMEM (n=512 at the default block=4096 is
+8 MB).  ``interpret=None`` auto-detects the backend (Mosaic on TPU,
+interpreter elsewhere); CPU CI exercises exactly these bodies in interpret
+mode (tests/test_kernels.py), while the CPU production path uses the
+equivalent fused-jnp workspace math.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compress import owned_from_band, resolve_interpret
+
+__all__ = ["masked_sum", "h_update"]
+
+
+def _masked_sum_kernel(slot_ref, band_ref, x_ref, o_ref, *, m: int, s: int):
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    x = x_ref[...]
+    o_ref[...] = jnp.where(owned, x, 0.0).sum(axis=0) / s
+
+
+def _h_update_kernel(
+    slot_ref, band_ref, xbar_ref, x_ref, h_ref, h_out, x_out,
+    *, m: int, s: int, scale: float,
+):
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    x = x_ref[...]
+    x_bar = xbar_ref[...][None, :]
+    h_out[...] = h_ref[...] + scale * jnp.where(owned, x_bar - x, 0.0)
+    x_out[...] = jnp.broadcast_to(x_bar, x.shape)
+
+
+def _pad_cols(a: jax.Array, pad: int) -> jax.Array:
+    return jnp.pad(a, ((0, 0), (0, pad))) if pad else a
+
+
+def masked_sum(
+    x: jax.Array,  # (n, d) f32 workspace
+    slot: jax.Array,  # (n,) int32; outside [0, m) -> contributes nothing
+    band: jax.Array,  # (d,) int32 per-coordinate owner band
+    m: int,
+    s: int,
+    *,
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """UpCom fused with the 1/s rebuild: ``sum_owned(x, axis=0) / s``."""
+    n, d = x.shape
+    blk = min(block, d)
+    pad = (-d) % blk
+    x = _pad_cols(x, pad)
+    band = jnp.pad(band, (0, pad)) if pad else band
+    out = pl.pallas_call(
+        functools.partial(_masked_sum_kernel, m=m, s=s),
+        grid=(x.shape[1] // blk,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((n, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(slot, band, x)
+    return out[:d] if pad else out
+
+
+def h_update(
+    x: jax.Array,  # (n, d) f32 workspace
+    h: jax.Array,  # (n, d) f32 control variates
+    x_bar: jax.Array,  # (d,) f32 rebuilt server model
+    slot: jax.Array,  # (n,) int32
+    band: jax.Array,  # (d,) int32
+    m: int,
+    s: int,
+    scale: float,  # eta / gamma
+    *,
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One fused pass: ``h += scale * owned * (x_bar - x)`` and the DownCom
+    broadcast ``x_new = x_bar`` for every client row."""
+    n, d = x.shape
+    blk = min(block, d)
+    pad = (-d) % blk
+    x, h = _pad_cols(x, pad), _pad_cols(h, pad)
+    band = jnp.pad(band, (0, pad)) if pad else band
+    x_bar = jnp.pad(x_bar, (0, pad)) if pad else x_bar
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    mat = pl.BlockSpec((n, blk), lambda i: (0, i))
+    h_new, x_new = pl.pallas_call(
+        functools.partial(_h_update_kernel, m=m, s=s, scale=scale),
+        grid=(x.shape[1] // blk,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            vec,  # band
+            vec,  # x_bar
+            mat,  # x
+            mat,  # h
+        ],
+        out_specs=(mat, mat),
+        out_shape=(
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        ),
+        interpret=resolve_interpret(interpret),
+    )(slot, band, x_bar, x, h)
+    if pad:
+        h_new, x_new = h_new[:, :d], x_new[:, :d]
+    return h_new, x_new

@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.dist import comm_ws
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 
@@ -103,13 +104,15 @@ def run_one(
     shape_name: str,
     multi_pod: bool,
     uplink: str = "masked_psum",
+    comm_impl: str = "auto",
     out_dir: Optional[str] = None,
     verbose: bool = True,
 ) -> Dict[str, dict]:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
-    tcfg = steps_lib.default_tamuna_cfg(mesh, uplink=uplink)
+    tcfg = steps_lib.default_tamuna_cfg(mesh, uplink=uplink,
+                                        comm_impl=comm_impl)
     built = steps_lib.build(arch, shape_name, mesh, **(
         {"tcfg": tcfg} if registry.SHAPES[shape_name].kind == "train" else {}
     ))
@@ -156,6 +159,12 @@ def run_one(
             "mesh": mesh_name,
             "chips": n_chips,
             "uplink": uplink if step_name in ("comm", "round") else None,
+            # the impl that actually executes: make_comm_step runs meshed
+            # (clients are device-sharded), see comm_ws.effective_impl
+            "comm_impl": (
+                comm_ws.effective_impl(tcfg.comm_impl, meshed=True)
+                if step_name in ("comm", "round") else None
+            ),
             "compile_s": round(t1 - t0, 2),
             "memory_analysis": {
                 "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -216,6 +225,10 @@ def main(argv=None) -> int:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--uplink", default="masked_psum",
                     choices=["masked_psum", "block_rs"])
+    ap.add_argument("--comm-impl", default="auto",
+                    choices=list(comm_ws.COMM_IMPLS),
+                    help="comm-step aggregation path (DESIGN.md §9); auto "
+                         "= fused workspace off-TPU, Pallas kernels on TPU")
     ap.add_argument("--out-dir", default="benchmarks/artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args(argv)
@@ -251,7 +264,8 @@ def main(argv=None) -> int:
                     print(f"[dryrun] skip existing {a} {s} {mesh_name}")
                     continue
             try:
-                run_one(a, s, mp, uplink=args.uplink, out_dir=args.out_dir)
+                run_one(a, s, mp, uplink=args.uplink,
+                        comm_impl=args.comm_impl, out_dir=args.out_dir)
             except Exception:
                 traceback.print_exc()
                 failures.append((a, s, mesh_name))

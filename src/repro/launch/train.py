@@ -44,6 +44,13 @@ def main(argv=None) -> int:
     ap.add_argument("--sparsity", type=int, default=2)
     ap.add_argument("--uplink", default="masked_psum",
                     choices=["masked_psum", "block_rs"])
+    # literal list (= comm_ws.COMM_IMPLS): this module must not import
+    # repro/jax before main() sets XLA_FLAGS; DistTamunaConfig re-validates
+    ap.add_argument("--comm-impl", default="auto",
+                    choices=["auto", "dense", "ws", "pallas"],
+                    help="comm-step aggregation path (DESIGN.md §9): fused "
+                         "flat-workspace (ws/pallas) or the per-leaf "
+                         "dense-mask reference")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default="")
     ap.add_argument("--checkpoint-dir", default="")
@@ -84,7 +91,7 @@ def main(argv=None) -> int:
         c = n
     tcfg = tamuna_dp.DistTamunaConfig(
         gamma=args.gamma, c=c, s=min(args.sparsity, c), p=args.p,
-        uplink=args.uplink,
+        uplink=args.uplink, comm_impl=args.comm_impl,
     )
 
     state = tamuna_dp.init_state(jax.random.key(args.seed), cfg, mesh, tcfg)

@@ -1,0 +1,341 @@
+"""Flat comm workspace + fused uplink invariants (DESIGN.md §9):
+
+* pack/unpack round-trips the stacked state bit-exactly (incl. bf16),
+* the fused workspace paths (jnp ``ws`` and Pallas ``pallas``) match the
+  per-leaf dense-mask reference to <= 1e-6 for ragged d, idle clients
+  (c < n), s == c (no compression), tall-regime leaves, and both uplinks,
+* exactness at consensus (the paper's zero-error property) holds on the
+  fused paths,
+* ``make_comm_step`` impls agree end to end (state + float accounting) and
+  mid-``run_rounds`` for both uplinks,
+* no dense ``(n, d)`` / ``(d, c)`` boolean mask appears in the lowered
+  Pallas comm step (the dense reference is the positive control).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import comm_ws
+
+ncs = st.tuples(
+    st.integers(2, 9),  # n
+    st.integers(2, 9),  # c
+    st.integers(2, 9),  # s
+    st.integers(0, 2**16),  # seed
+).filter(lambda t: t[1] <= t[0] and t[2] <= t[1])
+
+
+def _tree(rng, n):
+    """Stacked tree with a reshaped leaf, ragged dims, a bf16 leaf, and a
+    tall-regime candidate (D=1 so D*s < c whenever s < c)."""
+    x = {
+        "w": jnp.asarray(rng.normal(size=(n, 13, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 1)), jnp.bfloat16),
+        "v": jnp.asarray(rng.normal(size=(n, 29)), jnp.float32),
+    }
+    h = {
+        k: jnp.asarray(rng.normal(size=a.shape), jnp.float32)
+        for k, a in x.items()
+    }
+    # center h so sum_i h_i == 0 going in (the invariant to preserve)
+    h = jax.tree.map(lambda a: a - a.mean(axis=0, keepdims=True), h)
+    return x, h
+
+
+def _slot(rng, n, c):
+    """Template column per client (perm of the cohort's slots, -1 idle)."""
+    cohort = rng.choice(n, size=c, replace=False)
+    out = np.full((n,), -1, np.int32)
+    out[cohort] = rng.permutation(c)
+    return jnp.asarray(out)
+
+
+def _maxerr(a, b):
+    return max(
+        float(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32)).max())
+        for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# --------------------------------------------------------------------------
+# pack / unpack
+# --------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip_bitexact():
+    rng = np.random.default_rng(0)
+    x, _ = _tree(rng, 5)
+    leaves = jax.tree.leaves(x)
+    spec = comm_ws.workspace_spec(leaves)
+    assert spec.d_total == sum(spec.dims)
+    assert spec.offsets == (0, 1, 30)  # sorted dict order: b(1), v(29), w(65)
+    ws = comm_ws.pack(leaves, spec)
+    assert ws.shape == (5, spec.d_total) and ws.dtype == jnp.float32
+    back = comm_ws.unpack(ws, spec)
+    for a, b in zip(leaves, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+# --------------------------------------------------------------------------
+# fused paths == dense-mask reference
+# --------------------------------------------------------------------------
+
+
+@given(ncs)
+@settings(max_examples=20, deadline=None)
+def test_cyclic_ws_and_pallas_match_dense(t):
+    n, c, s, seed = t
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    slot = _slot(rng, n, c)
+    xd, hd = comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl="dense")
+    for impl, meshed in (("ws", False), ("ws", True), ("pallas", False)):
+        xn, hn = comm_ws.cyclic_comm(
+            x, h, slot, c, s, 0.37, impl=impl, block=32, meshed=meshed
+        )
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed, n, c, s)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed, n, c, s)
+        # h-sum invariant survives the fused update
+        hs = max(
+            float(jnp.abs(a.sum(axis=0)).max())
+            for a in jax.tree.leaves(hn)
+        )
+        assert hs < 1e-5, (impl, hs)
+
+
+@given(ncs)
+@settings(max_examples=20, deadline=None)
+def test_blocked_ws_and_pallas_match_dense(t):
+    n, _, s, seed = t
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    off = jnp.asarray(int(rng.integers(0, n)), jnp.int32)
+    xd, hd = comm_ws.blocked_comm(x, h, off, n, s, 0.37, impl="dense")
+    for impl, meshed in (("ws", False), ("ws", True), ("pallas", False)):
+        xn, hn = comm_ws.blocked_comm(
+            x, h, off, n, s, 0.37, impl=impl, block=32, meshed=meshed
+        )
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed, n, s)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed, n, s)
+
+
+@given(st.integers(2, 8), st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_exact_at_consensus_all_impls(c, seed):
+    """All clients equal + h == 0: the comm step is a no-op on x (the
+    paper's zero-error-at-consensus property) on every impl, for s == c
+    (no compression) and s == 2 (max compression)."""
+    n = c
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(37,)).astype(np.float32)
+    x = {"p": jnp.broadcast_to(jnp.asarray(v)[None], (n, 37))}
+    h = {"p": jnp.zeros((n, 37), jnp.float32)}
+    slot = _slot(rng, n, c)
+    for s in (2, c):
+        for impl in ("dense", "ws", "pallas"):
+            xn, hn = comm_ws.cyclic_comm(
+                x, h, slot, c, s, 0.5, impl=impl, block=16
+            )
+            np.testing.assert_allclose(
+                np.asarray(xn["p"][0]), v, rtol=1e-6, atol=1e-6
+            )
+            assert float(jnp.abs(hn["p"]).max()) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# make_comm_step: impl equivalence, accounting, mid-run_rounds
+# --------------------------------------------------------------------------
+
+
+def test_comm_step_impls_agree_and_account_statically(subproc):
+    subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import dataclasses
+from repro.core import masks
+from repro.models.transformer import ModelConfig
+from repro.dist import sharding, tamuna_dp
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+for uplink in ("masked_psum", "block_rs"):
+    c = n if uplink == "block_rs" else 3
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
+                                      uplink=uplink)
+    state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+    # distinct per-client params so aggregation is non-trivial
+    state = state._replace(
+        x=jax.tree.map(
+            lambda a: a + 0.1 * jax.random.normal(
+                jax.random.key(hash(a.shape) % 97), a.shape, jnp.float32),
+            state.x),
+        h=jax.tree.map(
+            lambda a: 0.01 * jax.random.normal(
+                jax.random.key(hash(a.shape) % 89), a.shape, jnp.float32),
+            state.h))
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      tamuna_dp.state_pspecs(state, cfg, mesh),
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, sh)
+    key = jax.random.key(11)
+    outs = {}
+    for impl in ("dense", "ws", "pallas"):
+        t = dataclasses.replace(tcfg, comm_impl=impl)
+        outs[impl] = jax.jit(tamuna_dp.make_comm_step(cfg, t, mesh))(
+            state, key)
+    for impl in ("ws", "pallas"):
+        for name in ("x", "h"):
+            err = max(jax.tree.leaves(jax.tree.map(
+                lambda a, b: float(jnp.abs(
+                    a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+                getattr(outs["dense"], name), getattr(outs[impl], name))))
+            assert err <= 1e-6, (uplink, impl, name, err)
+    # hoisted accounting matches the per-leaf formulas exactly
+    dims = [int(np.prod(a.shape[1:])) for a in jax.tree.leaves(state.x)]
+    if uplink == "block_rs":
+        up = sum(masks.block_column_nnz(D, n, 2) for D in dims)
+    else:
+        up = sum(masks.column_nnz(D, c, 2) for D in dims)
+    for impl, st_out in outs.items():
+        assert float(st_out.up_floats) == float(up), (uplink, impl)
+        assert float(st_out.down_floats) == float(sum(dims))
+print("OK")
+""")
+
+
+def test_run_rounds_ws_matches_dense_both_uplinks(subproc):
+    subproc("""
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import rounds, sharding, tamuna_dp
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=n)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+sampler = device_sampler(dcfg, cfg, mesh)
+for uplink in ("masked_psum", "block_rs"):
+    c = n if uplink == "block_rs" else 3
+    finals = {}
+    for impl in ("dense", "ws"):
+        tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
+                                          uplink=uplink, comm_impl=impl)
+        state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          tamuna_dp.state_pspecs(state, cfg, mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+        state = jax.device_put(state, sh)
+        round_fn = rounds.make_round_fn(cfg, tcfg, mesh,
+                                        sample_batch=sampler, max_L=4)
+        finals[impl], last = rounds.run_rounds(
+            state, round_fn=round_fn, data=pipe.device_data(),
+            key=jax.random.key(5), rounds=3, rng=np.random.default_rng(7),
+            p=tcfg.p, flush_every=2)
+        assert np.isfinite(last["loss"])
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        finals["dense"], finals["ws"])))
+    assert err <= 1e-6, (uplink, err)
+print("OK")
+""", devices=4, timeout=1500)
+
+
+def test_no_dense_mask_in_lowered_pallas_comm_step():
+    """The Pallas kernel comm path must lower without any (n, d)- or
+    (d, c)-shaped boolean mask anywhere in the module (tile-sized
+    predicates only); the dense reference is the positive control (its
+    lowering does contain one)."""
+    n, c, s = 4, 3, 2
+    rng = np.random.default_rng(0)
+    x = {
+        "w": jnp.zeros((n, 16, 16), jnp.float32),  # D = 256
+        "v": jnp.zeros((n, 100), jnp.float32),
+    }
+    h = {k: jnp.zeros(a.shape, jnp.float32) for k, a in x.items()}
+    slot = _slot(rng, n, c)
+    dims = sorted({int(np.prod(a.shape[1:])) for a in jax.tree.leaves(x)})
+    BLOCK = 48  # sub-leaf tiles; not equal to any leaf dim
+    big = [D for D in dims if D > BLOCK]
+    assert big, dims
+    # every dense-mask shape the reference could materialize:
+    # (clients, D) ownership and (D, c) templates
+    bad = []
+    for D in big:
+        bad += [f"pred[{n},{D}]", f"pred[{D},{c}]", f"s8[{D},{c}]"]
+
+    def compiled(impl):
+        fn = jax.jit(
+            lambda x, h: comm_ws.cyclic_comm(
+                x, h, slot, c, s, 0.37, impl=impl, block=BLOCK
+            )
+        )
+        return fn.lower(x, h).compile()
+
+    pal = compiled("pallas").as_text()
+    for b in bad:
+        assert b not in pal, b
+    assert any(b in compiled("dense").as_text() for b in bad), \
+        "positive control"
+
+
+def test_make_comm_step_pallas_on_mesh_compiles_mask_safe(subproc):
+    """On a device-sharded mesh, comm_impl='pallas' must not hand GSPMD a
+    whole-array pallas_call (which would all-gather the workspace):
+    make_comm_step's meshed mode falls back to the psum-shaped fused path,
+    and the lowering contains no pallas/custom-call markers."""
+    subproc("""
+import dataclasses
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.transformer import ModelConfig
+from repro.dist import sharding, tamuna_dp
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=3, s=2, p=0.5,
+                                  comm_impl="pallas")
+state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                  tamuna_dp.state_pspecs(state, cfg, mesh),
+                  is_leaf=lambda x: isinstance(x, P))
+state = jax.device_put(state, sh)
+fn = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh))
+out = fn(state, jax.random.key(0))
+assert int(out.round) == 1
+a = fn.lower(state, jax.random.key(0)).compile().as_text()
+assert "pallas" not in a.lower()
+# and it agrees with the meshed 'ws' program numerically
+ws = dataclasses.replace(tcfg, comm_impl="ws")
+outw = jax.jit(tamuna_dp.make_comm_step(cfg, ws, mesh))(
+    state, jax.random.key(0))
+err = max(jax.tree.leaves(jax.tree.map(
+    lambda u, v: float(jnp.abs(
+        u.astype(jnp.float32) - v.astype(jnp.float32)).max()),
+    out.x, outw.x)))
+assert err == 0.0, err
+print("OK")
+""", devices=4)

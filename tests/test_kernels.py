@@ -52,6 +52,95 @@ def test_compress_property(c, s, d, seed):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
 
 
+@pytest.mark.parametrize("n,d", [(4, 257), (8, 1024), (3, 4097)])
+def test_compress_2d_matches_per_row(n, d):
+    """The (n, d) form with a grid over clients equals n 1-D calls."""
+    x = jax.random.normal(jax.random.key(n * d), (n, d))
+    c, s = 8, 3
+    slots = jnp.asarray([(3 * i) % (c + 2) for i in range(n)], jnp.int32)
+    out = ops.compress(x, slots, c, s, block=128)
+    for i in range(n):
+        exp = ref.compress_ref(x[i], slots[i], c, s)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(exp))
+
+
+# --------------------------------------------------------------------------
+# uplink kernels (the fused comm step, DESIGN.md §9): interpret smokes
+# --------------------------------------------------------------------------
+
+
+def _uplink_operands(n, d, m, seed):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    h = jax.random.normal(ks[1], (n, d), jnp.float32)
+    rng = np.random.default_rng(seed)
+    slot = np.full((n,), -1, np.int32)
+    active = rng.choice(n, size=min(m, n), replace=False)
+    slot[active] = rng.permutation(min(m, n))
+    band = rng.integers(0, m, size=d).astype(np.int32)
+    return x, h, jnp.asarray(slot), jnp.asarray(band)
+
+
+@pytest.mark.parametrize("n,d,m,s", [
+    (4, 257, 3, 2),     # ragged d, idle clients
+    (8, 1024, 8, 8),    # s == m (no compression), exact block tiling
+    (6, 4097, 5, 2),    # multi-block + ragged tail
+])
+def test_uplink_masked_sum_sweep(n, d, m, s):
+    x, _, slot, band = _uplink_operands(n, d, m, n * d)
+    out = ops.uplink_masked_sum(x, slot, band, m, s, block=256)
+    exp = ref.uplink_masked_sum_ref(x, slot, band, m, s)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n,d,m,s", [
+    (4, 257, 3, 2),
+    (8, 1024, 8, 8),
+    (6, 4097, 5, 2),
+])
+def test_uplink_h_update_sweep(n, d, m, s):
+    x, h, slot, band = _uplink_operands(n, d, m, n + d)
+    x_bar = ref.uplink_masked_sum_ref(x, slot, band, m, s)
+    h_new, x_new = ops.uplink_h_update(
+        x, h, x_bar, slot, band, m, s, 0.25, block=256
+    )
+    h_exp, x_exp = ref.uplink_h_update_ref(x, h, x_bar, slot, band, m, s,
+                                           0.25)
+    np.testing.assert_allclose(
+        np.asarray(h_new), np.asarray(h_exp), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_exp))
+
+
+@given(
+    st.integers(2, 10), st.integers(2, 12), st.integers(2, 12),
+    st.integers(1, 700), st.integers(0, 2**16),
+)
+@settings(max_examples=20, deadline=None)
+def test_uplink_kernels_property(n, m, s, d, seed):
+    if s > m:
+        s = m
+    x, h, slot, band = _uplink_operands(n, d, m, seed)
+    x_bar = ops.uplink_masked_sum(x, slot, band, m, s, block=128)
+    np.testing.assert_allclose(
+        np.asarray(x_bar),
+        np.asarray(ref.uplink_masked_sum_ref(x, slot, band, m, s)),
+        rtol=1e-6, atol=1e-6,
+    )
+    h_new, x_new = ops.uplink_h_update(
+        x, h, x_bar, slot, band, m, s, 0.5, block=128
+    )
+    h_exp, x_exp = ref.uplink_h_update_ref(
+        x, h, x_bar, slot, band, m, s, 0.5
+    )
+    np.testing.assert_allclose(
+        np.asarray(h_new), np.asarray(h_exp), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_exp))
+
+
 # --------------------------------------------------------------------------
 # fused local step
 # --------------------------------------------------------------------------
