@@ -1,19 +1,27 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
-dry-run artifacts.
+"""Render EXPERIMENTS.md markdown tables from benchmark artifacts.
 
+  # dry-run roofline / memory tables (needs benchmarks/artifacts/dryrun)
   PYTHONPATH=src:. python -m benchmarks.report > benchmarks/artifacts/roofline_table.md
+
+  # perf-trajectory table: every BENCH_*.json acceptance metric in one
+  # place, so a regression in any shipped benchmark is visible at a glance
+  PYTHONPATH=src:. python -m benchmarks.report --trajectory
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 
-from benchmarks import roofline
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
 
 
 def memory_table(mesh: str) -> str:
+    from benchmarks import roofline
+
     rows = []
     for path in sorted(glob.glob(os.path.join(
             roofline.ART, mesh, "*", "*", "*.json"))):
@@ -36,6 +44,8 @@ def memory_table(mesh: str) -> str:
 
 
 def roofline_table(mesh: str) -> str:
+    from benchmarks import roofline
+
     rows = roofline.table(mesh)
     out = [
         "| arch | shape | step | compute s | memory s | collective s |"
@@ -53,12 +63,99 @@ def roofline_table(mesh: str) -> str:
     return "\n".join(out)
 
 
-def main():
+# --------------------------------------------------------------------------
+# perf trajectory: one table over every BENCH_*.json acceptance metric
+# --------------------------------------------------------------------------
+
+
+def _load(name: str):
+    path = os.path.join(REPO, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def trajectory_rows() -> list:
+    """(artifact, metric, value, target, ok) for every shipped benchmark
+    artifact present in the repo root.  Missing artifacts are skipped, so
+    the table degrades gracefully on fresh checkouts."""
+    rows = []
+
+    def add(artifact, metric, value, target, higher_is_better=True):
+        ok = (value >= target) if higher_is_better else (value <= target)
+        cmp = ">=" if higher_is_better else "<="
+        rows.append((artifact, metric, value, f"{cmp} {target}", ok))
+
+    dr = _load("BENCH_dist_round.json")
+    if dr:
+        add("dist_round", "cohort round time ratio n512/n16",
+            dr["ratio_n512_over_n16"]["cohort"], 2.0,
+            higher_is_better=False)
+        # the seed's full-population path is the CONTRAST baseline: the
+        # point is that it scales badly, so "ok" means it still shows
+        # the O(n) growth the cohort path removed
+        add("dist_round", "full-population prior ratio n512/n16 "
+            "(contrast: the O(n) cost the cohort path removed)",
+            dr["ratio_n512_over_n16"]["full_population"], 2.0)
+
+    re_ = _load("BENCH_round_engine.json")
+    if re_:
+        add("round_engine", "fused+device-data speedup vs per-step",
+            re_["speedup_fused_vs_per_step"], 1.0)
+        add("round_engine", "distinct compiled programs",
+            re_["distinct_compilations"], re_["compile_cache_bound"],
+            higher_is_better=False)
+
+    cs = _load("BENCH_comm_step.json")
+    if cs:
+        acc = cs["acceptance"]
+        add("comm_step", "ws vs dense speedup, largest unsharded n",
+            cs["largest_config_speedup"], acc["largest_config_min"])
+        add("comm_step", "ws vs dense min speedup, any unsharded row",
+            cs["min_speedup_any_config"], acc["any_config_min"])
+        meshed = cs.get("meshed")
+        if meshed:
+            macc = meshed["acceptance"]
+            add("comm_step", "shard engine vs meshed-ws, best at largest n",
+                meshed["largest_n_best_speedup_vs_ws"],
+                macc["largest_n_best_min"])
+            add("comm_step", "shard engine vs meshed-ws, min any row",
+                meshed["min_speedup_vs_ws_any_row"], macc["any_row_min"])
+
+    return rows
+
+
+def trajectory_table() -> str:
+    rows = trajectory_rows()
+    out = [
+        "| artifact | metric | value | acceptance | ok |",
+        "|---|---|---|---|---|",
+    ]
+    for artifact, metric, value, target, ok in rows:
+        out.append(
+            f"| {artifact} | {metric} | {value:.3f} | {target} |"
+            f" {'yes' if ok else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trajectory", action="store_true",
+                    help="print only the BENCH_*.json trajectory table")
+    args = ap.parse_args(argv)
+    if args.trajectory:
+        print("\n## Perf trajectory — BENCH_*.json acceptance metrics\n")
+        print(trajectory_table())
+        return
     for mesh in ("pod16x16", "pod2x16x16"):
         print(f"\n## Roofline table — {mesh}\n")
         print(roofline_table(mesh))
     print("\n## Memory analysis — pod16x16 (per-device)\n")
     print(memory_table("pod16x16"))
+    print("\n## Perf trajectory — BENCH_*.json acceptance metrics\n")
+    print(trajectory_table())
 
 
 if __name__ == "__main__":

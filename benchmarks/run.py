@@ -6,11 +6,18 @@ convex-experiment reproductions, roofline compute-seconds for the dry-run
 table).  Full row dicts are dumped to benchmarks/artifacts/results.json.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...] [--paper-scale]
+
+``--smoke`` runs tiny-shape versions of the benches that support it (a
+``smoke=`` kwarg on their ``run``) and SKIPS the rest — a seconds-scale
+correctness pass over the bench code itself (wired into the test suite so
+bench modules cannot rot), never a perf measurement and never a
+BENCH_*.json write.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -23,6 +30,9 @@ def main(argv=None) -> int:
                     help="comma list: fig2,fig3,table1,table2,kernels,"
                          "dist_round,round_engine,comm_step,roofline")
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no artifact writes; skips benches "
+                         "without smoke support")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -38,18 +48,32 @@ def main(argv=None) -> int:
     def emit(name, us, derived):
         csv_rows.append((name, us, derived))
 
+    def smoke_call(run_fn, *fn_args):
+        """Thread smoke= into run() when supported; in smoke mode a bench
+        without smoke support is skipped (full-cost runs defeat the
+        point of a seconds-scale rot check)."""
+        if not args.smoke:
+            return run_fn(*fn_args)
+        if "smoke" in inspect.signature(run_fn).parameters:
+            return run_fn(*fn_args, smoke=True)
+        return None
+
     def section(key, fn):
         if only and key not in only:
             return
         t0 = time.time()
         rows = fn()
+        if rows is None:
+            print(f"# {key}: skipped (no --smoke support)",
+                  file=sys.stderr)
+            return
         all_rows[key] = rows
         print(f"# {key}: {len(rows)} rows in {time.time()-t0:.1f}s",
               file=sys.stderr)
         return rows
 
-    rows = section("fig2", lambda: __import__(
-        "benchmarks.paper_fig2", fromlist=["run"]).run(args.paper_scale))
+    rows = section("fig2", lambda: smoke_call(__import__(
+        "benchmarks.paper_fig2", fromlist=["run"]).run, args.paper_scale))
     if rows:
         for r in rows:
             emit(
@@ -58,8 +82,8 @@ def main(argv=None) -> int:
                 f"final_subopt={r['final_subopt']:.3e}",
             )
 
-    rows = section("fig3", lambda: __import__(
-        "benchmarks.paper_fig3", fromlist=["run"]).run(args.paper_scale))
+    rows = section("fig3", lambda: smoke_call(__import__(
+        "benchmarks.paper_fig3", fromlist=["run"]).run, args.paper_scale))
     if rows:
         for r in rows:
             emit(
@@ -68,8 +92,8 @@ def main(argv=None) -> int:
                 f"final_subopt={r['final_subopt']:.3e}",
             )
 
-    rows = section("table1", lambda: __import__(
-        "benchmarks.paper_table1", fromlist=["run"]).run())
+    rows = section("table1", lambda: smoke_call(__import__(
+        "benchmarks.paper_table1", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(
@@ -78,8 +102,8 @@ def main(argv=None) -> int:
                 f"theory={r['upcom_theory']:.3e}",
             )
 
-    rows = section("table2", lambda: __import__(
-        "benchmarks.paper_table2", fromlist=["run"]).run())
+    rows = section("table2", lambda: smoke_call(__import__(
+        "benchmarks.paper_table2", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(
@@ -88,31 +112,33 @@ def main(argv=None) -> int:
                 f"theory_a0={r['totalcom_theory_alpha0']:.3e}",
             )
 
-    rows = section("kernels", lambda: __import__(
-        "benchmarks.kernel_bench", fromlist=["run"]).run())
+    rows = section("kernels", lambda: smoke_call(__import__(
+        "benchmarks.kernel_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])
 
-    rows = section("dist_round", lambda: __import__(
-        "benchmarks.dist_round_bench", fromlist=["run"]).run())
+    rows = section("dist_round", lambda: smoke_call(__import__(
+        "benchmarks.dist_round_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])
 
-    rows = section("round_engine", lambda: __import__(
-        "benchmarks.round_engine_bench", fromlist=["run"]).run())
+    rows = section("round_engine", lambda: smoke_call(__import__(
+        "benchmarks.round_engine_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])
 
-    rows = section("comm_step", lambda: __import__(
-        "benchmarks.comm_step_bench", fromlist=["run"]).run())
+    rows = section("comm_step", lambda: smoke_call(__import__(
+        "benchmarks.comm_step_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])
 
     def _roofline():
+        if args.smoke:  # reads dry-run artifacts; nothing to smoke
+            return None
         from benchmarks import roofline
 
         try:
@@ -130,9 +156,11 @@ def main(argv=None) -> int:
     for name, us, derived in csv_rows:
         print(f"{name},{us},{derived}")
 
-    os.makedirs(os.path.join(here, "artifacts"), exist_ok=True)
-    with open(os.path.join(here, "artifacts", "results.json"), "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
+    if not args.smoke:  # smoke is a rot check: never touch artifacts
+        os.makedirs(os.path.join(here, "artifacts"), exist_ok=True)
+        with open(os.path.join(here, "artifacts", "results.json"),
+                  "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
     return 0
 
 

@@ -97,6 +97,8 @@ def block_rs_aggregate(
     impl: str = "auto",
     block: int = 4096,
     meshed: Optional[bool] = None,
+    pspecs=None,
+    shard_kernels: Optional[bool] = None,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
@@ -113,14 +115,18 @@ def block_rs_aggregate(
     (``"ws"``/``"pallas"``; ``"auto"`` resolves per backend) or the
     materialized-mask dense reference (``"dense"``).  ``meshed`` defaults
     to "a mesh was passed": with the client axis device-sharded the UpCom
-    must keep the d-sized psum shape (comm_ws module docstring), so call
+    must keep a d-sized collective (comm_ws module docstring), so call
     sites that hand over their mesh get the right collective shape
-    without remembering the flag.
+    without remembering the flag — psum-shaped fused partials on the
+    ``ws``/``dense`` paths, the shard-resident shard_map engine on
+    ``pallas`` (per-shard contiguous block gathers + one psum of the
+    block partials; ``pspecs``/``shard_kernels`` ride through).
     """
     del model_cfg
     if meshed is None:
         meshed = mesh is not None
     return comm_ws.blocked_comm(
         x, h, off, n, tcfg.s, eta / tcfg.gamma, impl=impl, block=block,
-        meshed=meshed,
+        meshed=meshed, mesh=mesh, pspecs=pspecs,
+        shard_kernels=shard_kernels,
     )

@@ -35,11 +35,9 @@ truth:
   predicate fused into the local partial sum, and the sparse gathers are
   reserved for unsharded stacked state (the bench, single-device sims).
 
-``impl="pallas"`` — the flat-workspace kernel path (TPU, unsharded
-state; meshed placements demote it to ``ws`` until the kernels are
-shard_map'd per shard).
-  All leaves packed once into a single dp-sharded ``(n, d_total)`` f32
-  buffer with a static leaf-offset table (``WorkspaceSpec``), then two
+``impl="pallas"`` — the workspace kernel path (TPU production).
+  Unsharded state: all leaves packed once into a single ``(n, d_total)``
+  f32 buffer with a static leaf-offset table (``WorkspaceSpec``), then two
   Pallas kernels (``repro.kernels.uplink``) do the whole comm math:
   ``masked_sum`` (per-VMEM-tile ownership fused with the ``1/s`` rebuild)
   and ``h_update`` (reads x, h, x_bar once; writes h_new AND the broadcast
@@ -49,6 +47,23 @@ shard_map'd per shard).
   interpreter unrolls the grid, and the pack itself costs a full
   read+write pass that XLA's leafwise fusion avoids — measured, see
   DESIGN.md §9 — which is why ``auto`` resolves to ``"ws"`` off-TPU).
+
+  ``meshed=True`` + a ``mesh`` handle: the **shard-resident engine**
+  (DESIGN.md §10).  The whole comm step runs inside ``shard_map`` over
+  the client-hosting (dp) mesh axes: each shard packs only its *local*
+  client rows into a per-shard workspace and runs the uplink kernels on
+  them (TPU; off-TPU the per-shard math is fused jnp — coarse per-block
+  chunk gathers for the blocked template, masked local partials for the
+  cyclic one), and the shards combine with d-sized ``psum``s of the
+  ``1/s``-folded partials — one for the packed kernel workspace, per
+  leaf on the jnp path — the reduce-scatter-shaped minimum, never an
+  ``(n, d)``-sized collective.  ``h_update``/DownCom then run per shard
+  on local rows reading the combined ``x_bar`` once.  Ownership bands for
+  model-sharded leaves are recomputed per shard from the global
+  coordinate index (``sharding.spec_dim_axes`` offsets), so tensor
+  parallelism keeps its d/model-sized partial.  This is the layer PR 3
+  deferred: ``effective_impl("pallas", meshed=True, mesh=...)`` no longer
+  demotes.
 
 One band table encodes BOTH templates:
 
@@ -104,15 +119,17 @@ def resolve_impl(impl: Optional[str]) -> str:
     return impl
 
 
-def effective_impl(impl: Optional[str], *, meshed: bool = False) -> str:
-    """The impl that will actually execute: with a device-sharded client
-    axis, the whole-array Pallas workspace call would make GSPMD
-    all-gather the state, so meshed placements demote ``pallas`` to the
-    psum-shaped ``ws`` path until the kernels are shard_map'd per shard.
-    The single source of truth for that rule — launch reporting uses it
-    too."""
+def effective_impl(impl: Optional[str], *, meshed: bool = False,
+                   mesh=None) -> str:
+    """The impl that will actually execute.  ``pallas`` on a meshed
+    placement runs the shard-resident engine (shard_map'd per-shard
+    kernels + one d-sized psum of the partials, DESIGN.md §10), which
+    needs the mesh handle for its axis names; a meshed call *without* a
+    mesh falls back to the psum-shaped ``ws`` path (the pre-shard_map
+    behaviour).  The single source of truth for that rule — launch
+    reporting uses it too (pass the mesh there)."""
     impl = resolve_impl(impl)
-    if impl == "pallas" and meshed:
+    if impl == "pallas" and meshed and mesh is None:
         return "ws"
     return impl
 
@@ -124,28 +141,40 @@ def effective_impl(impl: Optional[str], *, meshed: bool = False) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class WorkspaceSpec:
-    """Static leaf-offset table of a packed ``(n, d_total)`` workspace."""
+    """Static leaf-offset table of a packed ``(n, d_total)`` workspace.
+
+    Under the shard-resident engine the spec describes ONE shard's
+    resident block: ``n``/``dims``/``offsets`` are the shard-local row
+    count and flat-axis layout (built from the shard's local leaves inside
+    the ``shard_map`` body), while ``rows_total`` records the global
+    client-row count the blocks tile (``rows_total == n`` off-mesh)."""
 
     n: int
-    shapes: Tuple[tuple, ...]  # full stacked shapes (n, *param)
+    shapes: Tuple[tuple, ...]  # stacked shapes (n, *param), shard-local
     dtypes: Tuple[Any, ...]  # storage dtypes, restored by unpack
     dims: Tuple[int, ...]  # flattened per-leaf param dims D
     offsets: Tuple[int, ...]  # leaf start offsets in the flat axis
     d_total: int
+    rows_total: int = -1  # global client rows (== n when unsharded)
 
 
-def workspace_spec(leaves: Sequence[Any]) -> WorkspaceSpec:
-    """Offset table for a list of stacked leaves (arrays or structs)."""
+def workspace_spec(
+    leaves: Sequence[Any], rows_total: Optional[int] = None
+) -> WorkspaceSpec:
+    """Offset table for a list of stacked leaves (arrays or structs).
+    ``rows_total`` marks a shard-local spec with the global row count."""
     shapes = tuple(tuple(a.shape) for a in leaves)
     dims = tuple(int(np.prod(s[1:])) for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + dims)[:-1])
+    n = int(shapes[0][0]) if shapes else 0
     return WorkspaceSpec(
-        n=int(shapes[0][0]) if shapes else 0,
+        n=n,
         shapes=shapes,
         dtypes=tuple(a.dtype for a in leaves),
         dims=dims,
         offsets=offsets,
         d_total=int(sum(dims)),
+        rows_total=n if rows_total is None else int(rows_total),
     )
 
 
@@ -309,6 +338,304 @@ def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int):
     return x_bar, h_new, x_new
 
 
+# --------------------------------------------------------------------------
+# the shard-resident engine (impl="pallas", meshed=True — DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+
+def _use_shard_kernels(flag: Optional[bool]) -> bool:
+    """None -> Pallas kernels per shard on TPU, fused-jnp sparse gathers
+    elsewhere (interpret-mode kernels unroll the grid on CPU — a
+    correctness path the tests force, not the production one)."""
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
+
+
+def _leaf_trail_specs(xflat: Sequence[jax.Array], pspecs) -> List[tuple]:
+    """Per-leaf trailing-dim PartitionSpec entries (client entry dropped,
+    right-padded with None to the leaf rank).  ``pspecs=None`` means only
+    the client axis is split (generic stacked trees)."""
+    from jax.sharding import PartitionSpec as P
+
+    if pspecs is None:
+        return [(None,) * (a.ndim - 1) for a in xflat]
+    specs = jax.tree.leaves(pspecs, is_leaf=lambda sp: isinstance(sp, P))
+    out = []
+    for a, sp in zip(xflat, specs):
+        tr = tuple(sp)[1:]
+        out.append(tr + (None,) * (a.ndim - 1 - len(tr)))
+    return out
+
+
+def _shard_coords(local_trail: tuple, global_trail: tuple, entries: tuple,
+                  mesh):
+    """Global flat coordinate index ((d_local,) int32, row-major over the
+    GLOBAL trailing dims) of the executing shard's block of one leaf —
+    or None when the block IS the whole leaf (static tables apply).  The
+    per-dim offsets come from the mesh axis indices of the dims'
+    PartitionSpec entries, so model-parallel leaves get the right bands.
+    Only valid inside ``shard_map``."""
+    from repro.dist import sharding as _shr
+
+    if tuple(local_trail) == tuple(global_trail):
+        return None
+    strides, acc = [], 1
+    for g in reversed(global_trail):
+        strides.append(acc)
+        acc *= int(g)
+    strides.reverse()
+    k = None
+    for d, (loc, st, entry) in enumerate(
+            zip(local_trail, strides, entries)):
+        off = jnp.int32(0)
+        for name in _shr.spec_dim_axes(entry):
+            off = off * mesh.shape[name] + jax.lax.axis_index(name)
+        idx = (jax.lax.iota(jnp.int32, loc) + off * loc) * jnp.int32(st)
+        shape = [1] * len(local_trail)
+        shape[d] = loc
+        idx = idx.reshape(shape)
+        k = idx if k is None else k + idx
+    return jnp.broadcast_to(k, tuple(local_trail)).reshape(-1)
+
+
+def _shard_comm(
+    x: Any,
+    h: Any,
+    slot: jax.Array,  # (n,) int32 owner column per client; -1 = idle
+    m: int,  # template modulus: c (cyclic) or n (blocked)
+    s: int,
+    scale,
+    *,
+    template: str,  # "cyclic" | "blocked"
+    mesh,
+    pspecs,  # pytree of PartitionSpec matching x (None: client split only)
+    block: int,
+    use_kernels: Optional[bool],
+) -> Tuple[Any, Any]:
+    """The shard-resident comm step: one ``shard_map`` over the dp axes.
+
+    Per shard: UpCom partials over the LOCAL client rows only — Pallas
+    ``masked_sum`` on the per-shard workspace (TPU), or fused jnp off-TPU
+    (coarse whole-chunk gathers for the blocked template's contiguous
+    ownership, masked local-row sums for the cyclic one — see
+    ``local_partial`` for the measured why) — then the shards combine
+    with d-sized ``psum``s of the ``1/s``-folded partials (one for the
+    packed kernel workspace; per leaf on the jnp path — measured, see the
+    body comment), and ``h_update`` + the DownCom broadcast run per shard
+    on local rows.  No ``(n, d)``-sized collective appears at any point
+    (HLO-regression-tested); the client axis is padded to the dp extent
+    with idle rows when it does not divide."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding as _shr
+
+    xflat, treedef = jax.tree.flatten(x)
+    hflat = jax.tree.leaves(h)
+    n = int(xflat[0].shape[0])
+    dp_names = _shr.dp_axis_names(mesh)
+    dp = _shr.dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_names] or [1]))
+    kernels = _use_shard_kernels(use_kernels)
+    trail = _leaf_trail_specs(xflat, pspecs)
+
+    # column -> owner client row, built on the GLOBAL slot and replicated
+    # into every shard (tiny).  Cyclic: every template column in [0, c)
+    # has exactly one cohort owner.  Blocked: slot is a permutation of
+    # [0, n) over the true rows, and the owner of block j at shift t is
+    # the client whose slot equals (t - j) mod n.
+    client_of = (
+        jnp.zeros((m + 1,), jnp.int32)
+        .at[jnp.where(slot >= 0, slot, m)]
+        .set(jnp.arange(n, dtype=jnp.int32))[:m]
+    )
+
+    # pad the client axis to the dp extent: padded rows are idle (slot -1,
+    # zero state) — never owners, never owned — and sliced off after.
+    # jnp.pad, NOT jnp.concatenate: on this jax, GSPMD reshards a concat
+    # feeding a shard_map via a dynamic-update-slice + all-reduce over ALL
+    # mesh axes, writing each block once per model replica and
+    # double-counting the state (measured; pad lowers clean).
+    pad = (-n) % dp_total
+    if pad:
+        xflat = [
+            jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            for a in xflat
+        ]
+        hflat = [
+            jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+            for a in hflat
+        ]
+        slot = jnp.pad(slot, (0, pad), constant_values=-1)
+    rows = (n + pad) // dp_total
+
+    # global trailing dims per leaf (the inputs to shard_map are global;
+    # inside the body the blocks are these divided by the split factors)
+    gtrail = [tuple(int(d) for d in a.shape[1:]) for a in xflat]
+    gD = [int(np.prod(g)) if g else 1 for g in gtrail]
+    tall = [template == "cyclic" and D * s < m for D in gD]
+
+    leaf_specs = tuple(P(dp, *tr) for tr in trail)
+
+    def _wrapped_owned(sl2, band2):
+        """Kernel-convention ownership ``(slot + band) mod m < s`` as two
+        compares (no per-element integer divide), idle rows excluded."""
+        sb = sl2 + band2
+        return (sl2 >= 0) & (sl2 < m) & (
+            (sb < s) | ((sb >= m) & (sb < m + s))
+        )
+
+    def _leaf_band(i, k_arr):
+        """Per-coordinate kernel-convention band of leaf i's shard block:
+        static np table when the block is the whole leaf, recomputed from
+        the global coordinate index when model-sharded.  Shared by the
+        jnp ownership predicate AND the kernel operands — the single
+        source of the band formula per template."""
+        D = gD[i]
+        if template == "blocked":
+            if k_arr is None:
+                return jnp.asarray(_block_leaf_band_np(D, m))
+            return k_arr // (-(-D // m))
+        if k_arr is None:
+            return jnp.asarray(_cyclic_band_np((D,), m, s))
+        return (-(s * (k_arr % m))) % m
+
+    def _owned(i, k_arr, sl2):
+        """Local-row ownership predicate (n_loc, d_loc), branch-free: two
+        compares against the leaf band.  NOTE the off-mesh ws path's
+        repeat-expanded block predicate is NOT used here: ``jnp.repeat``
+        inside shard_map lowers pathologically on CPU (measured ~10x the
+        whole comm step; the band-compare form is flat)."""
+        D = gD[i]
+        if tall[i]:
+            kk = (jnp.asarray(np.arange(D, dtype=np.int32))
+                  if k_arr is None else k_arr)
+            return (sl2 >= 0) & (sl2 < D * s) & (sl2 % D == kk[None, :])
+        return _wrapped_owned(sl2, _leaf_band(i, k_arr)[None, :])
+
+    def body(xs, hs, sl, cof):
+        row0 = _shr.dp_shard_index(mesh) * rows
+        sl2 = sl[:, None]
+        coords = [
+            _shard_coords(tuple(a.shape[1:]), gtrail[i], trail[i], mesh)
+            for i, a in enumerate(xs)
+        ]
+        xfs = [a.reshape(rows, -1).astype(jnp.float32) for a in xs]
+
+        def local_partial(i):
+            """This shard's UpCom partial, 1/s folded in.
+
+            Blocked template on an unsharded leaf with more local rows
+            than shifts: ownership contiguity means block j's owners at
+            the s shifts are whole-chunk reads, so the partial is s
+            coarse (block, chunk) gathers over the LOCAL rows — O(s d)
+            reads vs the masked form's O(rows d), a measured 2x at
+            n=32 on the host mesh (at rows < s the masked form reads
+            less and wins, so the gate is static).  Everything else:
+            masked local-row sum with the fused ownership predicate —
+            per-element row-gathers lower pathologically inside shard_map
+            on CPU (measured 12x slower than the same gather outside),
+            and per shard the row count is tiny, so the masked form IS
+            the cheap one; on TPU the Pallas kernels cover these leaves
+            instead.
+            """
+            xf = xfs[i]
+            if (template == "blocked" and coords[i] is None
+                    and rows >= s):
+                D = gD[i]
+                chunk = -(-D // m)
+                nf, tailn = divmod(D, chunk)
+                xm = xf[:, :nf * chunk].reshape(rows, nf, chunk)
+                jf = np.arange(nf, dtype=np.int32)
+                accm = jnp.zeros((nf, chunk), jnp.float32)
+                acct = jnp.zeros((tailn,), jnp.float32)
+                for t in range(s):
+                    # owner of block j at shift t: the client whose slot
+                    # is (t - j) mod n — local rows contribute, the rest
+                    # land on their own shards
+                    own = cof[jnp.asarray((t - jf) % m)]
+                    loc = (own >= row0) & (own < row0 + rows)
+                    rr = jnp.clip(own - row0, 0, rows - 1)
+                    accm = accm + jnp.where(loc[:, None], xm[rr, jf], 0.0)
+                    if tailn:
+                        ot = cof[(t - nf) % m]
+                        lt = (ot >= row0) & (ot < row0 + rows)
+                        rt = jnp.clip(ot - row0, 0, rows - 1)
+                        acct = acct + jnp.where(lt, xf[rt, nf * chunk:], 0.0)
+                flat = (jnp.concatenate([accm.reshape(-1), acct])
+                        if tailn else accm.reshape(-1))
+                return flat / s
+            # predicate recomputed here AND in the finish (not cached):
+            # sharing it across the psum boundary forces XLA to
+            # materialize a (rows, d) pred buffer; recomputed, it stays
+            # two compares inside each fusion (what the ws path does)
+            return jnp.where(
+                _owned(i, coords[i], sl2), xf, 0.0
+            ).sum(axis=0) / s
+
+        def _psum(v):
+            return jax.lax.psum(v, dp_names) if dp_names else v
+
+        # Per-shard UpCom partials -> d-sized psums.  The kernel path's
+        # partial is the packed workspace's masked_sum output — already
+        # one flat vector, ONE psum.  The jnp leaves psum per leaf:
+        # concatenating them into a single flat psum measured ~5x slower
+        # on CPU (the concat write + per-leaf slice reads break XLA's
+        # leafwise fusion); per-leaf psums keep each leaf's partial,
+        # combine, and finish in one fused pipeline, and XLA's collective
+        # combiner can still merge the all-reduces on real backends.
+        out_x: List[Any] = [None] * len(xs)
+        out_h: List[Any] = [None] * len(xs)
+        covered = [i for i in range(len(xs)) if kernels and not tall[i]]
+        rest = [i for i in range(len(xs)) if i not in covered]
+        if covered:
+            from repro.kernels import uplink
+
+            spec = workspace_spec([xs[i] for i in covered],
+                                  rows_total=n + pad)
+            hspec = workspace_spec([hs[i] for i in covered],
+                                   rows_total=n + pad)
+            xw = pack([xs[i] for i in covered], spec)
+            hw = pack([hs[i] for i in covered], hspec)
+            band_parts = [_leaf_band(i, coords[i]) for i in covered]
+            band_ws = (band_parts[0] if len(band_parts) == 1
+                       else jnp.concatenate(band_parts))
+            xbar_ws = _psum(
+                uplink.masked_sum(xw, sl, band_ws, m, s, block=block)
+            )
+            h_new_ws, x_new_ws = uplink.h_update(
+                xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
+                block=block,
+            )
+            xs_un = unpack(x_new_ws, spec)
+            hs_un = unpack(h_new_ws, hspec)
+            for j, i in enumerate(covered):
+                out_x[i], out_h[i] = xs_un[j], hs_un[j]
+        for i in rest:
+            x_bar = _psum(local_partial(i))
+            out_x[i], out_h[i] = _finish_leaf(
+                xs[i], hs[i], xfs[i], x_bar, _owned(i, coords[i], sl2),
+                scale,
+            )
+        return tuple(out_x), tuple(out_h)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(leaf_specs, leaf_specs, P(dp), P()),
+        out_specs=(leaf_specs, leaf_specs),
+        check_rep=False,
+    )
+    xs_out, hs_out = fn(tuple(xflat), tuple(hflat), slot, client_of)
+    if pad:
+        xs_out = [a[:n] for a in xs_out]
+        hs_out = [a[:n] for a in hs_out]
+    return (
+        jax.tree.unflatten(treedef, list(xs_out)),
+        jax.tree.unflatten(treedef, list(hs_out)),
+    )
+
+
 def cyclic_comm(
     x: Any,
     h: Any,
@@ -320,14 +647,26 @@ def cyclic_comm(
     *,
     block: int = 4096,
     meshed: bool = False,
+    mesh=None,
+    pspecs=None,
+    shard_kernels: Optional[bool] = None,
 ) -> Tuple[Any, Any]:
     """masked_psum UpCom + h-update + DownCom for the cyclic template.
 
     Coordinate-identical to the per-leaf dense reference (``impl="dense"``)
     for every leaf and both Fig. 1 template regimes; see the module
-    docstring for the three implementations.
+    docstring for the three implementations.  ``meshed=True`` with a
+    ``mesh`` handle and ``impl="pallas"`` runs the shard-resident engine
+    (``pspecs``: the stacked state's PartitionSpecs, client split only
+    when None; ``shard_kernels``: force/suppress the per-shard Pallas
+    kernels, default per backend).
     """
-    impl = effective_impl(impl, meshed=meshed)
+    impl = effective_impl(impl, meshed=meshed, mesh=mesh)
+    if impl == "pallas" and meshed:
+        return _shard_comm(
+            x, h, slot, c, s, scale, template="cyclic", mesh=mesh,
+            pspecs=pspecs, block=block, use_kernels=shard_kernels,
+        )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
     dims = [int(np.prod(a.shape[1:])) for a in xflat]
@@ -418,6 +757,9 @@ def blocked_comm(
     *,
     block: int = 4096,
     meshed: bool = False,
+    mesh=None,
+    pspecs=None,
+    shard_kernels: Optional[bool] = None,
 ) -> Tuple[Any, Any]:
     """block_rs UpCom + h-update + DownCom for the blocked template.
 
@@ -425,9 +767,21 @@ def blocked_comm(
     materialized an ownership-sized delta; the sparse path gathers, per
     block column and shift ``t``, the one client row that owns it (``s``
     rolled adds, ``O(s d)`` reads) and fuses the h-update mask-free.
+    ``meshed=True`` + ``mesh`` + ``impl="pallas"``: the shard-resident
+    engine (see ``cyclic_comm``) — the contiguous per-block gathers run on
+    each shard's local rows and the block partials combine in one psum,
+    the true reduce-scatter decomposition of the blocked uplink.
     """
-    impl = effective_impl(impl, meshed=meshed)
+    impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     off = jnp.asarray(off, jnp.int32)
+    if impl == "pallas" and meshed:
+        # fold the shift into per-client slots ((slot + band) mod n < s
+        # <=> (band - i - off) mod n < s, the block_uplink closed form)
+        slot = (-(jnp.arange(n, dtype=jnp.int32) + off)) % n
+        return _shard_comm(
+            x, h, slot, n, s, scale, template="blocked", mesh=mesh,
+            pspecs=pspecs, block=block, use_kernels=shard_kernels,
+        )
     if impl == "dense":
         xflat, treedef = jax.tree.flatten(x)
         hflat = jax.tree.leaves(h)

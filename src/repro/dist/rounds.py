@@ -27,7 +27,12 @@ round.  Here a whole round runs as donated compiled programs:
     ``repro.dist.comm_ws`` (``tcfg.comm_impl``, default auto: sparse fused
     uplink off-TPU, flat-workspace Pallas kernels on TPU — DESIGN.md §9),
     so the fused round program's comm step never materializes a dense
-    ownership mask or scans all ``n`` client rows for the UpCom.
+    ownership mask or scans all ``n`` client rows for the UpCom.  With
+    ``comm_impl="pallas"`` the meshed comm step is the shard-resident
+    engine (§10): ``make_comm_step`` hands the mesh and the stacked state
+    specs to ``comm_ws``, which shard_maps the kernels over the dp axes
+    inside the same donated round program — per-shard uplinks, one
+    d-sized psum of the partials, behind the same ``lax.cond``.
 
 The key-derivation helpers are public so the per-step reference path (and
 the equivalence tests) can replay the exact same schedule.  See DESIGN.md

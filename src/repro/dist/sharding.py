@@ -28,6 +28,9 @@ __all__ = [
     "MODEL_AXIS",
     "dp_axis_names",
     "dp_axes",
+    "dp_shard_index",
+    "spec_dim_axes",
+    "spec_dim_factor",
     "n_clients",
     "model_size",
     "train_batch_pspec",
@@ -62,6 +65,31 @@ def dp_axes(mesh: Mesh):
 def n_clients(mesh: Mesh) -> int:
     """Population size n = product of the client-hosting axis sizes."""
     return int(np.prod([mesh.shape[a] for a in dp_axis_names(mesh)] or [1]))
+
+
+def dp_shard_index(mesh: Mesh):
+    """Linear client-shard id of the executing shard, row-major over the
+    dp axes — the order a ``P((a, b))`` client-dim split enumerates blocks.
+    Only valid inside ``shard_map`` over this mesh (uses ``axis_index``)."""
+    import jax.numpy as jnp
+
+    idx = jnp.int32(0)
+    for name in dp_axis_names(mesh):
+        idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
+    return idx
+
+
+def spec_dim_axes(entry) -> tuple:
+    """A PartitionSpec entry -> the tuple of mesh axis names it shards
+    over (empty for ``None``/unconstrained dims)."""
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def spec_dim_factor(entry, mesh: Mesh) -> int:
+    """How many ways a PartitionSpec entry splits its dim on ``mesh``."""
+    return int(np.prod([mesh.shape[a] for a in spec_dim_axes(entry)] or [1]))
 
 
 def model_size(mesh: Mesh) -> int:

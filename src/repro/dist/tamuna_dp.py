@@ -308,6 +308,14 @@ def make_comm_step(
         lambda: model_api.init(jax.random.key(0), cfg)
     )
     dims = [int(np.prod(a.shape)) for a in jax.tree.leaves(params_struct)]
+    # the stacked state's PartitionSpecs: the shard-resident pallas engine
+    # shard_maps with exactly these, so model-parallel leaves keep their
+    # shards (no resharding at the shard_map boundary)
+    stacked_struct = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((n,) + a.shape, a.dtype),
+        params_struct,
+    )
+    stacked_specs = sharding.stacked_params_pspecs(stacked_struct, cfg, mesh)
     down_total = jnp.float32(sum(dims))
     if tcfg.uplink == "block_rs":
         up_total = jnp.float32(
@@ -340,7 +348,7 @@ def make_comm_step(
             off = jax.random.randint(key, (), 0, n, jnp.int32)
             xb, hb = block_rs_aggregate(
                 state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg,
-                impl=impl, block=block, meshed=True,
+                impl=impl, block=block, meshed=True, pspecs=stacked_specs,
             )
             return bump(state, xb, hb)
 
@@ -359,12 +367,13 @@ def make_comm_step(
         slot = jnp.where(
             slot_of >= 0, perm[jnp.clip(slot_of, 0)], -1
         ).astype(jnp.int32)
-        # clients are sharded over the data axes here, so the uplink keeps
-        # the d-sized psum shape (comm_ws meshed mode); the sparse-gather
-        # uplink is for unsharded stacked state (bench, single-device sims)
+        # clients are sharded over the data axes here: comm_ws meshed mode
+        # — the psum-shaped fused partial (ws/dense) or the shard-resident
+        # engine (pallas: shard_map'd per-shard uplinks + one d-sized psum
+        # of the partials; the mesh handle and state specs ride along)
         x_new, h_new = comm_ws.cyclic_comm(
             state.x, state.h, slot, c, s, scale, impl=impl, block=block,
-            meshed=True,
+            meshed=True, mesh=mesh, pspecs=stacked_specs,
         )
         return bump(state, x_new, h_new)
 

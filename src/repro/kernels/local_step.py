@@ -4,15 +4,23 @@ A 3-operand AXPY executed tile-by-tile in VMEM with f32 accumulation and a
 single write-back in the storage dtype.  Unfused, XLA emits two intermediate
 HBM round-trips for mixed-dtype (bf16 params, f32 grads) updates; fused it
 is exactly 3 reads + 1 write — the HBM floor for this op.
+
+``interpret=None`` auto-detects the backend (Mosaic compile on TPU,
+interpreter elsewhere) — same policy as every other kernel in this package
+(``compress.resolve_interpret``); the seed hard-coded ``interpret=True``,
+which silently ran the interpreter on real TPUs.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.compress import resolve_interpret
 
 
 def _local_step_kernel(x_ref, g_ref, h_ref, o_ref, *, gamma: float):
@@ -29,7 +37,7 @@ def fused_local_step(
     gamma: float,
     *,
     block: int = 65536,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     shape, dtype = x.shape, x.dtype
     xf, gf, hf = (a.reshape(-1) for a in (x, g, h))
@@ -48,6 +56,6 @@ def fused_local_step(
         in_specs=[spec, spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(xf.shape, dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xf, gf, hf)
     return (out[:d] if pad else out).reshape(shape)

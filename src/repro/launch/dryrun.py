@@ -160,9 +160,12 @@ def run_one(
             "chips": n_chips,
             "uplink": uplink if step_name in ("comm", "round") else None,
             # the impl that actually executes: make_comm_step runs meshed
-            # (clients are device-sharded), see comm_ws.effective_impl
+            # (clients are device-sharded) WITH the mesh handle, so
+            # "pallas" resolves to the shard-resident engine (§10), not
+            # the pre-shard_map ws fallback — see comm_ws.effective_impl
             "comm_impl": (
-                comm_ws.effective_impl(tcfg.comm_impl, meshed=True)
+                comm_ws.effective_impl(tcfg.comm_impl, meshed=True,
+                                       mesh=mesh)
                 if step_name in ("comm", "round") else None
             ),
             "compile_s": round(t1 - t0, 2),

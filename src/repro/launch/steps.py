@@ -9,7 +9,12 @@ their fusion):
   local   one TAMUNA local step over the global batch — the common case,
           zero cross-client collectives,
   comm    the compressed-aggregation + control-variate round end — all of
-          the paper's communication lives here,
+          the paper's communication lives here.  The aggregation impl the
+          artifact records is the one that ACTUALLY executes on the mesh:
+          `comm_ws.effective_impl(tcfg.comm_impl, meshed=True, mesh=mesh)`
+          (with the mesh handle, `pallas` means the shard-resident
+          shard_map engine of DESIGN.md §10, not the pre-shard_map ws
+          fallback),
   round   the fused round engine program (`repro.dist.rounds`): E[L] local
           steps under `lax.scan` with on-device data sampling, then the
           comm step — what the production trainer actually dispatches, so

@@ -48,9 +48,11 @@ def main(argv=None) -> int:
     # repro/jax before main() sets XLA_FLAGS; DistTamunaConfig re-validates
     ap.add_argument("--comm-impl", default="auto",
                     choices=["auto", "dense", "ws", "pallas"],
-                    help="comm-step aggregation path (DESIGN.md §9): fused "
-                         "flat-workspace (ws/pallas) or the per-leaf "
-                         "dense-mask reference")
+                    help="comm-step aggregation path (DESIGN.md §9/§10): "
+                         "psum-shaped fused partials (ws), the "
+                         "shard-resident shard_map'd kernel engine "
+                         "(pallas; per-shard uplinks + one d-sized psum), "
+                         "or the per-leaf dense-mask reference (dense)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default="")
     ap.add_argument("--checkpoint-dir", default="")

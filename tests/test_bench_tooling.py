@@ -1,0 +1,53 @@
+"""Benchmark tooling cannot rot: ``benchmarks/run.py --smoke`` executes
+the comm-step bench end to end at tiny shapes (both subprocesses: the
+single-device sweep and the 2-device meshed sweep with the shard-resident
+engine) without touching the measured BENCH_*.json artifacts, and
+``benchmarks/report.py`` renders the perf-trajectory table over every
+artifact in the repo root."""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_run_smoke_comm_step_emits_rows_and_preserves_artifact(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_comm_step.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "comm_step"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # CSV rows from both placements, including the shard-engine column
+    assert "comm_step/n2/masked_psum/ws," in out, out[-2000:]
+    assert "comm_step_meshed/n2/masked_psum/shard," in out, out[-2000:]
+    assert "speedup_shard_vs_ws" in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
+def test_trajectory_table_aggregates_artifacts():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    table = report.trajectory_table()
+    # artifacts shipped in the repo root all appear with their acceptance
+    assert "dist_round" in table
+    assert "round_engine" in table
+    assert "comm_step" in table
+    assert "| acceptance |" in table.splitlines()[0].replace(
+        " ok |", " ok |")  # header shape
+    rows = report.trajectory_rows()
+    assert all(len(r) == 5 for r in rows)
+    # the table is what EXPERIMENTS links; a failing acceptance shows NO
+    assert all(isinstance(r[4], bool) for r in rows)

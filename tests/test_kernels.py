@@ -162,6 +162,30 @@ def test_local_step_sweep(dtype, shape):
     )
 
 
+def test_local_step_interpret_auto_detects_backend():
+    """The raw kernel's default is now per-backend auto-detection (the
+    seed hard-coded ``interpret=True``, which would have silently run the
+    interpreter on real TPUs): ``None`` resolves via the shared
+    ``compress.resolve_interpret`` policy, and the auto path is
+    bit-identical to forced interpret mode off-TPU."""
+    from repro.kernels import local_step
+    from repro.kernels.compress import resolve_interpret
+
+    assert resolve_interpret(None) == (jax.default_backend() != "tpu")
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = jax.random.normal(ks[0], (1000,), jnp.float32).astype(jnp.bfloat16)
+    g = jax.random.normal(ks[1], (1000,))
+    h = jax.random.normal(ks[2], (1000,))
+    auto = local_step.fused_local_step(x, g, h, 0.07, block=256)
+    forced = local_step.fused_local_step(
+        x, g, h, 0.07, block=256, interpret=True
+    )
+    assert auto.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(auto, np.float32), np.asarray(forced, np.float32)
+    )
+
+
 @given(st.integers(1, 3000), st.floats(1e-4, 1.0), st.integers(0, 2**16))
 @settings(max_examples=25, deadline=None)
 def test_local_step_property(d, gamma, seed):
