@@ -123,6 +123,14 @@ def trajectory_rows() -> list:
             add("comm_step", "shard engine vs meshed-ws, min any row",
                 meshed["min_speedup_vs_ws_any_row"], macc["any_row_min"])
 
+    el = _load("BENCH_elastic.json")
+    if el:
+        acc = el["acceptance"]
+        add("elastic", "cohort-gathered round vs all-rows at c=n/4",
+            el["speedup_at_quarter_cohort"], acc["quarter_cohort_min"])
+        add("elastic", "min speedup vs all-rows, any c < n row",
+            el["min_speedup_any_partial_row"], acc["any_partial_row_min"])
+
     return rows
 
 

@@ -28,7 +28,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,table1,table2,kernels,"
-                         "dist_round,round_engine,comm_step,roofline")
+                         "dist_round,round_engine,comm_step,elastic,"
+                         "roofline")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, no artifact writes; skips benches "
@@ -132,6 +133,12 @@ def main(argv=None) -> int:
 
     rows = section("comm_step", lambda: smoke_call(__import__(
         "benchmarks.comm_step_bench", fromlist=["run"]).run))
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    rows = section("elastic", lambda: smoke_call(__import__(
+        "benchmarks.elastic_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])

@@ -12,41 +12,75 @@ on simulated wall-clock time to target accuracy.  Convergence needs more
 rounds at small c, but each round is much faster — the crossover the paper
 predicts (complexity ~n/c rounds but per-round cost ~max over c draws).
 
-  PYTHONPATH=src python examples/availability_sim.py
+The wall-clock model draws the cohort and the per-client jitter ONCE PER
+ROUND (``wallclock_per_round``).  An earlier version drew once per *record
+point* (every ``record_every=10`` rounds) and multiplied a single max by
+the whole window's local steps, sampling the full-participation straggler
+tail 10x too rarely and understating exactly the crossover this example
+exists to show — regression-tested in tests/test_availability_sim.py.
+
+``--dist`` runs the same straggler story on the *dist engine*: a Markov
+up/down availability model plus inverse-latency weights drive non-uniform
+cohort sampling through ``repro.dist.cohort.CohortPlan`` into the elastic
+round engine (``rounds.run_rounds(plan=...)``, DESIGN.md §11), and the
+plan's own cohorts price the simulated wall clock.
+
+  PYTHONPATH=src python examples/availability_sim.py [--dist]
 """
 
+import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import problems, tamuna
+
+def straggler_base(n, rng, straggler_frac=0.1):
+    """Per-client base latency; ``straggler_frac`` of the fleet is 10x."""
+    base = rng.lognormal(mean=0.0, sigma=0.3, size=n)
+    base[rng.random(n) < straggler_frac] *= 10.0
+    return base
 
 
-def simulate(prob, c, seed=0, rounds=4000, straggler_frac=0.1):
+def wallclock_per_round(steps, n, c, base, rng, jitter_sigma=0.2,
+                        cohorts=None):
+    """Per-round wall-clock costs: round ``k`` waits for the slowest of
+    ITS OWN cohort draw with ITS OWN jitter, scaled by its local steps.
+
+    ``steps`` is the per-round local-step count; ``cohorts`` (optional,
+    per-round client-id arrays) replays an externally chosen schedule
+    (e.g. a ``CohortPlan``) instead of uniform draws.  Returns the
+    ``(rounds,)`` per-round times; the cumulative clock is their cumsum.
+    """
+    times = np.empty(len(steps))
+    for k, L in enumerate(steps):
+        cohort = (rng.choice(n, size=c, replace=False)
+                  if cohorts is None else np.asarray(cohorts[k]))
+        jitter = rng.lognormal(0.0, jitter_sigma, size=len(cohort))
+        times[k] = (base[cohort] * jitter).max() * max(int(L), 1)
+    return times
+
+
+def simulate(prob, c, seed=0, rounds=3000, straggler_frac=0.1):
+    from repro.core import tamuna
+
     rng = np.random.default_rng(seed)
-    # per-client base speed; 10% of the fleet are 10x stragglers
-    base = rng.lognormal(mean=0.0, sigma=0.3, size=prob.n)
-    base[rng.random(prob.n) < straggler_frac] *= 10.0
+    base = straggler_base(prob.n, rng, straggler_frac)
 
     cfg = tamuna.TamunaConfig.tuned(prob, c=c)
-    tr = tamuna.run(prob, cfg, num_rounds=rounds, record_every=10)
-
-    # wall-clock: each round waits for the slowest of a uniform cohort,
-    # with per-round jitter, scaled by the number of local steps
+    # record_every=1: the wall-clock model needs the PER-ROUND local-step
+    # counts, not window totals
+    tr = tamuna.run(prob, cfg, num_rounds=rounds, record_every=1)
     steps = np.diff(np.concatenate([[0], tr["local_steps"]]))
-    clock = []
-    t = 0.0
-    for k in range(len(tr["rounds"])):
-        cohort = rng.choice(prob.n, size=c, replace=False)
-        jitter = rng.lognormal(0.0, 0.2, size=c)
-        t += (base[cohort] * jitter).max() * max(steps[k], 1)
-        clock.append(t)
-    return tr, np.array(clock)
+    times = wallclock_per_round(steps, prob.n, c, base, rng)
+    return tr, np.cumsum(times)
 
 
-def main():
+def convex_main(rounds):
+    from repro.core import problems
+
     prob = problems.make_logreg_problem(
         n=64, d=256, samples_per_client=8, kappa=1000.0, seed=0
     )
@@ -54,7 +88,7 @@ def main():
     print(f"n={prob.n} kappa={prob.kappa:.0f} target={target:.2e}")
     print(f"{'c':>5} {'rounds':>8} {'UpCom floats':>13} {'sim wall-clock':>15}")
     for c in (prob.n, prob.n // 4, prob.n // 8):
-        tr, clock = simulate(prob, c)
+        tr, clock = simulate(prob, c, rounds=rounds)
         sub = tr["suboptimality"]
         idx = int(np.argmax(sub < target))
         if sub[idx] >= target:
@@ -65,6 +99,95 @@ def main():
     print("\nPP trades more rounds for much cheaper rounds: with 10% "
           "stragglers, waiting for the full fleet every round dominates "
           "the cost at c = n.")
+
+
+class _RowLogger:
+    """Collects per-round metric rows (the example needs per-round L)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def log(self, step, metrics):
+        self.rows.append(dict(metrics))
+
+
+def dist_main(rounds):
+    import jax
+
+    from repro.configs import registry
+    from repro.data import DataConfig, SyntheticTokenPipeline, device_sampler
+    from repro.dist import cohort as cohort_mod
+    from repro.dist import rounds as rounds_mod
+    from repro.dist import tamuna_dp
+    from repro.launch.mesh import make_host_mesh
+
+    # single-device mesh, n stacked client rows (the n-override
+    # placement): here the elastic engine's gather genuinely removes the
+    # idle clients' gradient work — with one client per device the
+    # default engine keeps the all-rows body instead (DESIGN.md §11)
+    mesh = make_host_mesh(1, 1)
+    n = 8
+    cfg = registry.get_reduced_config("gemma2-2b")
+    dcfg = DataConfig(seq_len=32, per_client_batch=2, vocab=512, seed=0,
+                      n_clients=n)
+    pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+
+    host = np.random.default_rng(0)
+    base = straggler_base(n, host, straggler_frac=0.25)
+    # stragglers also churn: slow clients fail often and recover slowly
+    slow = base > np.median(base)
+    avail = cohort_mod.MarkovAvailability(
+        p_fail=np.where(slow, 0.3, 0.05),
+        p_recover=np.where(slow, 0.3, 0.9),
+        seed=1,
+    )
+    print(f"dist engine: n={n} clients ({cfg.name}), {rounds} rounds, "
+          f"Markov availability + inverse-latency weighting\n")
+    print(f"{'c':>4} {'steps':>6} {'loss':>8} {'UpCom/client':>13} "
+          f"{'sim wall-clock':>15}")
+    for c in (n, n // 4):
+        tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.34)
+        plan = cohort_mod.CohortPlan(
+            seed=7, n=n, c=c, availability=avail, weights=1.0 / base
+        )
+        state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg,
+                                     n=n)
+        round_fn = rounds_mod.make_round_fn(
+            cfg, tcfg, mesh,
+            sample_batch=device_sampler(dcfg, cfg, mesh), max_L=8, n=n,
+        )
+        logger = _RowLogger()
+        state, last = rounds_mod.run_rounds(
+            state, round_fn=round_fn, data=pipe.device_data(),
+            key=jax.random.key(1), rounds=rounds,
+            rng=np.random.default_rng(c), p=tcfg.p,
+            flush_every=min(10, rounds), logger=logger, plan=plan,
+        )
+        steps = [row["L"] for row in logger.rows]
+        times = wallclock_per_round(
+            steps, n, c, base, np.random.default_rng(3),
+            cohorts=[plan.cohort(k) for k in range(len(steps))],
+        )
+        print(f"{c:>4} {last['local_steps']:>6} {last['loss']:>8.4f} "
+              f"{last['up_floats']:>13.3e} {times.sum():>15.1f}")
+    print("\nidle clients do no work in the elastic engine, and the plan "
+          "routes rounds away from slow/offline clients — the same "
+          "crossover as the convex story, now on the system engine.")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dist", action="store_true",
+                    help="run the straggler story on the dist round engine "
+                         "with an availability-driven cohort plan")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="rounds per setting (default: 3000 convex, "
+                         "12 dist)")
+    args = ap.parse_args()
+    if args.dist:
+        dist_main(args.rounds or 12)
+    else:
+        convex_main(args.rounds or 3000)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ __all__ = [
     "sample_mask",
     "sample_permutation",
     "mask_from_permutation",
+    "block_shift_permutation",
     "column_nnz",
     "block_column_nnz",
     "owner_band_start",
@@ -113,6 +114,22 @@ def mask_from_permutation(
     else:
         q = (cols < d * s) & ((cols % d) == k)
     return q.astype(jnp.int8)
+
+
+def block_shift_permutation(off, c: int, s: int) -> jax.Array:
+    """The column permutation realizing the dist engine's *shifted*
+    blocked ownership as a ``mask_from_permutation(..., blocked=True)``
+    column permutation of the block template.
+
+    The engine gives the client at cohort slot ``a`` the blocks
+    ``a + off .. a + off + s - 1 (mod c)`` (``(j - a - off) mod c < s``),
+    while the template's column ``p`` owns blocks ``p - s + 1 .. p``
+    (``(p - j) mod c < s``); they coincide for
+    ``p = (a + off + s - 1) mod c`` — a valid permutation of ``[c]``, so
+    the elastic blocked uplink inherits the template's exactly-``s``-owners
+    row property at every cohort size (property-tested in
+    tests/test_dist_invariants.py)."""
+    return (jnp.arange(c, dtype=jnp.int32) + off + s - 1) % c
 
 
 def sample_mask(

@@ -66,6 +66,7 @@ def device_sample_batch(
     dcfg: DataConfig,
     model_cfg: ModelConfig,
     mesh: Optional[Mesh] = None,
+    clients: Optional[jax.Array] = None,
 ) -> Dict[str, jax.Array]:
     """Sample one ``(n, per_client_batch, ...)`` batch entirely on device.
 
@@ -73,13 +74,22 @@ def device_sample_batch(
     (``{"cum": (n, v, v) f32}``, see ``SyntheticTokenPipeline.device_data``)
     so it can be threaded through a donated scan carry.  Client ``i``'s
     stream is derived via ``fold_in(key, i)``: invariant to ``n``.
+
+    ``clients`` restricts the batch to a ``(c,)`` subset of client ids
+    (the elastic engine's cohort, DESIGN.md §11): the result is
+    ``(c, b, ...)``, row ``a`` holding client ``clients[a]``'s stream —
+    the SAME tokens that client would see in a full batch (streams are
+    keyed by actual client id), so cohort-gathered and all-rows compute
+    consume identical per-client data.
     """
     cum = data["cum"]
     n, v = cum.shape[0], cum.shape[-1]
     b, T = dcfg.per_client_batch, dcfg.seq_len
     key = _as_key(key)
     k_tok, k_pre, k_fr = jax.random.split(key, 3)
-    clients = jnp.arange(n)
+    cohort = clients is not None
+    clients = jnp.arange(n) if clients is None else clients
+    n = clients.shape[0]
     cks = jax.vmap(lambda i: jax.random.fold_in(k_tok, i))(clients)
 
     state0 = jax.vmap(
@@ -102,7 +112,9 @@ def device_sample_batch(
     # emit s_0 .. s_T (T+1 states): tokens = s_{:-1}, labels = s_{1:}
     _, seq = jax.lax.scan(step, state0, jnp.arange(1, T + 2))
     toks = jnp.moveaxis(seq, 0, -1)  # (n, b, T+1)
-    if mesh is not None:
+    if mesh is not None and not cohort:
+        # cohort batches skip the dp constraint: c rarely divides the dp
+        # extent, and the gathered compute GSPMD places decides anyway
         toks = jax.lax.with_sharding_constraint(
             toks, NamedSharding(mesh, P(sharding.dp_axes(mesh), None, None))
         )
@@ -180,11 +192,17 @@ class SyntheticTokenPipeline:
             state = (u < cum).argmax(axis=-1)
         return out
 
-    def next_batch(self) -> Dict[str, jax.Array]:
+    def next_batch(self, clients=None) -> Dict[str, jax.Array]:
+        """One host-sampled batch.  ``clients`` restricts to a cohort (the
+        per-step trainer's elastic path): only those clients' streams
+        advance — idle clients consume nothing, matching the paper's
+        idle-clients-do-nothing semantics on the host path too."""
         d = self.dcfg
+        ids = (list(range(self.n)) if clients is None
+               else [int(i) for i in np.asarray(clients)])
         toks = np.stack([
             self._sample_chain(i, (d.per_client_batch, d.seq_len + 1))
-            for i in range(self.n)
+            for i in ids
         ])
         batch = {
             "tokens": jnp.asarray(toks[:, :, :-1]),
@@ -195,7 +213,7 @@ class SyntheticTokenPipeline:
                 self._rngs[i].normal(
                     size=(d.per_client_batch, self.cfg.prefix_len,
                           self.cfg.d_model)
-                ) for i in range(self.n)
+                ) for i in ids
             ]).astype(np.float32)
             batch["prefix_embeds"] = jnp.asarray(pe, self.cfg.dtype)
         if self.cfg.family == "encdec":
@@ -203,9 +221,11 @@ class SyntheticTokenPipeline:
                 self._rngs[i].normal(
                     size=(d.per_client_batch, self.cfg.n_frames,
                           self.cfg.d_model)
-                ) for i in range(self.n)
+                ) for i in ids
             ]).astype(np.float32)
             batch["frames"] = jnp.asarray(fr, self.cfg.dtype)
+        if clients is not None:
+            return batch  # cohort batches: GSPMD places the gathered rows
         if self._sharding is not None:
             sh = {
                 k: NamedSharding(self.mesh,

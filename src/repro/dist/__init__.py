@@ -3,7 +3,9 @@ fused round engine, the reduce-scatter blocked uplink, and the
 family-dispatching model API.
 
   sharding     mesh helpers + PartitionSpec derivation (clients = data axes)
-  tamuna_dp    DistTamunaConfig / init_state / local + comm step builders
+  tamuna_dp    DistTamunaConfig / init_state / local + comm step builders,
+               cohort gather/scatter (elastic PP, §11)
+  cohort       host-side cohort plans + availability models (§11)
   rounds       donated scanned round engine (make_round_fn / run_rounds)
   comm_ws      flat comm workspace: the mask-free fused comm step (§9)
   block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
@@ -12,6 +14,7 @@ family-dispatching model API.
 
 from repro.dist import (
     block_uplink,
+    cohort,
     comm_ws,
     model_api,
     rounds,
@@ -21,6 +24,7 @@ from repro.dist import (
 
 __all__ = [
     "block_uplink",
+    "cohort",
     "comm_ws",
     "model_api",
     "rounds",

@@ -99,17 +99,21 @@ def block_rs_aggregate(
     meshed: Optional[bool] = None,
     pspecs=None,
     shard_kernels: Optional[bool] = None,
+    c: Optional[int] = None,
+    slot_of: Optional[Any] = None,
+    down: Optional[Any] = None,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
-    Returns ``(x_new, h_new)``: every client row of ``x_new`` equals the
-    owner-mean server model; ``h_new`` applies the control-variate update on
-    owned blocks only, preserving ``sum_i h_i == 0`` exactly at the
-    coordinate level (the per-coordinate deltas sum to
-    ``s*x_bar - s*x_bar``).  Pure jnp over the stacked client axis, so under
-    a data-sharded mesh GSPMD lowers the shifted adds to reduce-scatter /
-    collective-permute traffic; ``mesh``/``model_cfg`` are accepted for API
-    symmetry and future shard_map specialization.
+    Returns ``(x_new, h_new)``: every DownCom'd client row of ``x_new``
+    equals the owner-mean server model; ``h_new`` applies the
+    control-variate update on owned blocks only, preserving
+    ``sum_i h_i == 0`` exactly at the coordinate level (the per-coordinate
+    deltas sum to ``s*x_bar - s*x_bar``).  Pure jnp over the stacked
+    client axis, so under a data-sharded mesh GSPMD lowers the shifted
+    adds to reduce-scatter / collective-permute traffic;
+    ``mesh``/``model_cfg`` are accepted for API symmetry and future
+    shard_map specialization.
 
     ``impl`` selects the mask-free paths of ``comm_ws.blocked_comm``
     (``"ws"``/``"pallas"``; ``"auto"`` resolves per backend) or the
@@ -121,12 +125,19 @@ def block_rs_aggregate(
     ``ws``/``dense`` paths, the shard-resident shard_map engine on
     ``pallas`` (per-shard contiguous block gathers + one psum of the
     block partials; ``pspecs``/``shard_kernels`` ride through).
+
+    ``c``/``slot_of``/``down`` are the elastic partial-participation
+    parameters (DESIGN.md §11): the ownership bands are laid over the
+    ``c`` cohort slots (``slot_of[i]`` in ``[0, c)``, -1 idle) and the
+    DownCom targets only the ``down`` rows.  Defaults = full
+    participation, the original template.
     """
     del model_cfg
     if meshed is None:
         meshed = mesh is not None
     return comm_ws.blocked_comm(
         x, h, off, n, tcfg.s, eta / tcfg.gamma, impl=impl, block=block,
+        c=c, slot_of=slot_of, down=down,
         meshed=meshed, mesh=mesh, pspecs=pspecs,
         shard_kernels=shard_kernels,
     )

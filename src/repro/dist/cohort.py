@@ -1,0 +1,151 @@
+"""Host-visible per-round cohort plans and client availability models.
+
+TAMUNA's partial participation samples a cohort of ``c`` of the ``n``
+clients every round.  The elastic round engine (DESIGN.md §11) needs the
+cohort *before* the round's local steps (it gathers exactly those rows),
+and the DownCom needs the *next* round's cohort (only joining clients
+download ``x_bar``), so cohort selection is a per-round **plan** shared by
+every layer — the round engine, the data pipeline (batches are sampled for
+cohort clients only), the trainers, and the replay/reference paths:
+
+  uniform   no plan object at all: the engine derives the round's cohort
+            *on device* from the round's comm key
+            (``tamuna_dp.round_cohort(comm_round_key(base, round), n, c)``)
+            — fold_in-keyed, replayable from ``(comm_key, round)`` alone,
+            zero host plumbing.
+
+  non-uniform  a :class:`CohortPlan` on the host: per-round Gumbel-top-c
+            selection over client log-weights, optionally gated by an
+            availability model (Bernoulli or Markov up/down streams).
+            Unavailable clients are only drafted when fewer than ``c``
+            clients are up (the paper requires exactly ``c`` participants
+            per round).  ``plan.cohort(r)`` is deterministic in
+            ``(seed, r)`` (the Markov chain advances lazily and is cached),
+            so a restored checkpoint replays the identical schedule:
+            ``run_rounds`` indexes the plan by the GLOBAL round counter
+            (``state.round``), not the loop index.
+
+All outputs are numpy (host-visible); ``run_rounds`` uploads the tiny
+``(c,)`` cohort / ``(n,)`` down-mask arrays per round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "BernoulliAvailability",
+    "MarkovAvailability",
+    "CohortPlan",
+]
+
+# weight floor for unavailable clients: small enough that an unavailable
+# client is only ever drafted when fewer than c clients are up, large
+# enough that the draft among unavailable clients is still a (seeded)
+# random choice rather than an argsort tie-break
+_DOWN_LOG_WEIGHT = -80.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliAvailability:
+    """Independent per-round availability: client ``i`` is up with
+    probability ``p_up[i]`` each round (no memory).  ``states(r)`` is a
+    pure function of ``(seed, r)``."""
+
+    p_up: np.ndarray  # (n,) in [0, 1]
+    seed: int = 0
+
+    def states(self, rnd: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 53, int(rnd)])
+        )
+        return rng.random(len(self.p_up)) < self.p_up
+
+
+class MarkovAvailability:
+    """Two-state up/down chain per client: ``P(up->down) = p_fail``,
+    ``P(down->up) = p_recover``.  Bursty outages (a client that just
+    failed tends to stay down), the standard straggler/churn model.
+
+    ``states(r)`` advances the chain lazily from round 0 and caches every
+    visited round, so access is random but the stream is the unique
+    deterministic trajectory of ``seed`` — replayable across restarts.
+    """
+
+    def __init__(self, p_fail, p_recover, n: Optional[int] = None,
+                 seed: int = 0):
+        p_fail = np.asarray(p_fail, np.float64)
+        p_recover = np.asarray(p_recover, np.float64)
+        if p_fail.ndim == 0:
+            assert n is not None, "scalar rates need an explicit n"
+            p_fail = np.full(n, float(p_fail))
+        if p_recover.ndim == 0:
+            p_recover = np.full(len(p_fail), float(p_recover))
+        self.p_fail, self.p_recover = p_fail, p_recover
+        self.n = len(p_fail)
+        self.seed = seed
+        self._states: Dict[int, np.ndarray] = {0: np.ones(self.n, bool)}
+        self._frontier = 0
+
+    def states(self, rnd: int) -> np.ndarray:
+        rnd = int(rnd)
+        while self._frontier < rnd:
+            r = self._frontier
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, 59, r])
+            )
+            up = self._states[r]
+            u = rng.random(self.n)
+            nxt = np.where(up, u >= self.p_fail, u < self.p_recover)
+            self._states[r + 1] = nxt
+            self._frontier = r + 1
+        return self._states[rnd]
+
+
+class CohortPlan:
+    """Replayable per-round cohort plan: Gumbel-top-``c`` over client
+    log-weights, availability-gated.
+
+    ``weights`` biases selection among *available* clients (e.g. inverse
+    latency so fast clients participate more — the non-uniform sampling
+    the availability scenarios drive).  ``cohort(r)`` returns the round's
+    sorted ``(c,)`` client ids; ``member_mask(r)`` its ``(n,)`` bool
+    membership (what the engine's DownCom targets for round ``r - 1``).
+    """
+
+    def __init__(self, seed: int, n: int, c: int, *,
+                 availability=None, weights=None):
+        if not (2 <= c <= n):
+            raise ValueError(f"need 2 <= c <= n, got c={c} n={n}")
+        self.seed, self.n, self.c = int(seed), int(n), int(c)
+        self.availability = availability
+        logw = np.zeros(n) if weights is None else np.log(
+            np.asarray(weights, np.float64)
+        )
+        self._logw = logw
+        self._cache: Dict[int, np.ndarray] = {}
+
+    def cohort(self, rnd: int) -> np.ndarray:
+        rnd = int(rnd)
+        got = self._cache.get(rnd)
+        if got is not None:
+            return got
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 211, rnd])
+        )
+        g = rng.gumbel(size=self.n) + self._logw
+        if self.availability is not None:
+            g = np.where(self.availability.states(rnd), g,
+                         g + _DOWN_LOG_WEIGHT)
+        top = np.argpartition(-g, self.c - 1)[:self.c]
+        out = np.sort(top).astype(np.int32)
+        self._cache[rnd] = out
+        return out
+
+    def member_mask(self, rnd: int) -> np.ndarray:
+        mask = np.zeros(self.n, bool)
+        mask[self.cohort(rnd)] = True
+        return mask

@@ -73,9 +73,17 @@ One band table encodes BOTH templates:
            ``masks.mask_from_permutation`` per leaf (both Fig. 1 regimes;
            the tall-and-thin regime ``D s < c`` keeps its own closed form
            on the ``ws`` path and falls back to dense under ``pallas``),
-  blocked  band[k] = k_leaf // ceil(D/n),  m = n,  ownership
-           ``(band[k] - i - off) mod n < s`` — identical to
-           ``block_uplink``'s closed form.
+  blocked  band[k] = k_leaf // ceil(D/m),  m = c (the COHORT size — ``n``
+           under full participation), ownership
+           ``(band[k] - slot_of[i] - off) mod c < s``: the contiguous
+           per-block bands laid over the round's c cohort *slots*, so the
+           reduce-scatter-shaped uplink works at any ``c <= n``
+           (DESIGN.md §11); idle clients (``slot_of = -1``) own nothing.
+
+Both templates take an optional ``down`` row mask: the DownCom writes
+``x_bar`` only to those rows (the NEXT round's cohort under elastic
+partial participation — idle clients' ``x`` passes through bit-exactly);
+``down=None`` broadcasts to every row, the full-participation behaviour.
 
 All functions are pure jnp over the stacked client axis (mesh-free and
 mesh-agnostic); callers pick ``meshed`` per placement, and ``impl`` per
@@ -249,27 +257,31 @@ def _block_band_np(dims: Tuple[int, ...], n: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
-def _dense_blocked_leaf(xl, hl, off, n: int, s: int, scale):
+def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None):
     """One leaf of the dense-mask blocked reference: materialized
-    ``(n, D)`` ownership (``(block(k) - i - off) mod n < s``), masked sum
-    over all n client rows, 1/s rebuild, masked h-update, broadcast."""
+    ``(n, D)`` ownership (``(slot_i + block(k)) mod m < s``, the shifted
+    blocked template over the ``m`` cohort slots — under full
+    participation ``slot_i = (-(i + off)) mod n`` recovers the original
+    ``(block(k) - i - off) mod n < s``; idle rows ``slot = -1`` own
+    nothing), masked sum over all client rows, 1/s rebuild, masked
+    h-update, DownCom."""
+    n = xl.shape[0]
     D = int(np.prod(xl.shape[1:]))
-    band = jnp.asarray(_block_leaf_band_np(D, n))[None, :]  # (1, D)
-    i_col = jnp.arange(n, dtype=jnp.int32)[:, None]
-    qf = (((band - i_col - off) % n) < s).astype(jnp.float32)
+    band = jnp.asarray(_block_leaf_band_np(D, m))[None, :]  # (1, D)
+    sl = slot[:, None]
+    qf = ((sl >= 0) & (((sl + band) % m) < s)).astype(jnp.float32)
     xf = xl.reshape(n, D).astype(jnp.float32)
     x_bar = (xf * qf).sum(axis=0) / s
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
-    x_new = jnp.broadcast_to(x_bar[None], (n, D))
     return (
-        x_new.astype(xl.dtype).reshape(xl.shape),
+        _downcom(xl, x_bar, down),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
 
-def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale):
+def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None):
     """One leaf of the reference masked_psum comm step: materialized
     ``(n, D)`` mask (both template regimes of paper Fig. 1), masked sum,
     1/s rebuild, masked h-update, broadcast.  The mask is derived from the
@@ -292,9 +304,8 @@ def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale):
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
-    x_new = jnp.broadcast_to(x_bar[None], (n, D))
     return (
-        x_new.astype(xl.dtype).reshape(xl.shape),
+        _downcom(xl, x_bar, down),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
@@ -310,30 +321,53 @@ def _wrapped_lt(diff, m: int, s: int):
     return ((diff >= 0) & (diff < s)) | (diff < s - m)
 
 
-def _finish_leaf(xl, hl, xf, x_bar, owned, scale):
-    """The fused h-update + DownCom broadcast shared by both uplinks:
-    reads x, h once, writes h_new and the broadcast x_new — ownership is
-    the branch-free predicate evaluated inside the fusion."""
+def _wrapped_owned(slot2, band, m: int, s: int):
+    """Kernel-convention ownership ``(slot + band) mod m < s`` as two
+    compares (no per-element integer divide), idle rows (``slot < 0``)
+    excluded.  ``slot2`` broadcasts against ``band``; both in ``[0, m)``."""
+    sb = slot2 + band
+    return (slot2 >= 0) & (slot2 < m) & (
+        (sb < s) | ((sb >= m) & (sb < m + s))
+    )
+
+
+def _downcom(xl, x_bar, down):
+    """DownCom of one leaf: ``down`` rows (all when None) receive
+    ``x_bar`` in storage dtype; every other row keeps its ``x``
+    bit-exactly (idle clients under elastic PP, DESIGN.md §11)."""
+    n = xl.shape[0]
+    D = x_bar.shape[0]
+    bar = x_bar.astype(xl.dtype)[None]
+    if down is None:
+        return jnp.broadcast_to(bar, (n, D)).reshape(xl.shape)
+    return jnp.where(
+        down[:, None], bar, xl.reshape(n, D)
+    ).reshape(xl.shape)
+
+
+def _finish_leaf(xl, hl, xf, x_bar, owned, scale, down=None):
+    """The fused h-update + DownCom shared by both uplinks: reads x, h
+    once, writes h_new and x_new — ownership is the branch-free predicate
+    evaluated inside the fusion, ``down`` the DownCom row mask."""
     n = xl.shape[0]
     D = xf.shape[1]
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * jnp.where(
         owned, x_bar[None] - xf, 0.0
     )
-    x_new = jnp.broadcast_to(
-        x_bar.astype(xl.dtype)[None], (n, D)
-    )
     return (
-        x_new.reshape(xl.shape),
+        _downcom(xl, x_bar, down),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
 
-def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int):
+def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int,
+                 down=None):
     from repro.kernels import uplink  # lazy: keep dist importable w/o pallas
 
     x_bar = uplink.masked_sum(xw, slot, band, m, s, block=block)
     h_new, x_new = uplink.h_update(
-        xw, hw, x_bar, slot, band, m, s, float(scale), block=block
+        xw, hw, x_bar, slot, band, m, s, float(scale), down=down,
+        block=block,
     )
     return x_bar, h_new, x_new
 
@@ -403,7 +437,7 @@ def _shard_comm(
     x: Any,
     h: Any,
     slot: jax.Array,  # (n,) int32 owner column per client; -1 = idle
-    m: int,  # template modulus: c (cyclic) or n (blocked)
+    m: int,  # template modulus: c (the cohort size; == n at full PP)
     s: int,
     scale,
     *,
@@ -412,6 +446,7 @@ def _shard_comm(
     pspecs,  # pytree of PartitionSpec matching x (None: client split only)
     block: int,
     use_kernels: Optional[bool],
+    down: Optional[jax.Array] = None,  # (n,) DownCom rows; None = all
 ) -> Tuple[Any, Any]:
     """The shard-resident comm step: one ``shard_map`` over the dp axes.
 
@@ -442,8 +477,8 @@ def _shard_comm(
     # column -> owner client row, built on the GLOBAL slot and replicated
     # into every shard (tiny).  Cyclic: every template column in [0, c)
     # has exactly one cohort owner.  Blocked: slot is a permutation of
-    # [0, n) over the true rows, and the owner of block j at shift t is
-    # the client whose slot equals (t - j) mod n.
+    # [0, c) over the COHORT rows (idle rows -1), and the owner of block
+    # j at shift t is the client whose slot equals (t - j) mod c.
     client_of = (
         jnp.zeros((m + 1,), jnp.int32)
         .at[jnp.where(slot >= 0, slot, m)]
@@ -457,6 +492,8 @@ def _shard_comm(
     # mesh axes, writing each block once per model replica and
     # double-counting the state (measured; pad lowers clean).
     pad = (-n) % dp_total
+    dwn = (jnp.ones((n,), bool) if down is None
+           else jnp.asarray(down).astype(bool))
     if pad:
         xflat = [
             jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
@@ -467,6 +504,7 @@ def _shard_comm(
             for a in hflat
         ]
         slot = jnp.pad(slot, (0, pad), constant_values=-1)
+        dwn = jnp.pad(dwn, (0, pad), constant_values=False)
     rows = (n + pad) // dp_total
 
     # global trailing dims per leaf (the inputs to shard_map are global;
@@ -476,14 +514,6 @@ def _shard_comm(
     tall = [template == "cyclic" and D * s < m for D in gD]
 
     leaf_specs = tuple(P(dp, *tr) for tr in trail)
-
-    def _wrapped_owned(sl2, band2):
-        """Kernel-convention ownership ``(slot + band) mod m < s`` as two
-        compares (no per-element integer divide), idle rows excluded."""
-        sb = sl2 + band2
-        return (sl2 >= 0) & (sl2 < m) & (
-            (sb < s) | ((sb >= m) & (sb < m + s))
-        )
 
     def _leaf_band(i, k_arr):
         """Per-coordinate kernel-convention band of leaf i's shard block:
@@ -511,9 +541,9 @@ def _shard_comm(
             kk = (jnp.asarray(np.arange(D, dtype=np.int32))
                   if k_arr is None else k_arr)
             return (sl2 >= 0) & (sl2 < D * s) & (sl2 % D == kk[None, :])
-        return _wrapped_owned(sl2, _leaf_band(i, k_arr)[None, :])
+        return _wrapped_owned(sl2, _leaf_band(i, k_arr)[None, :], m, s)
 
-    def body(xs, hs, sl, cof):
+    def body(xs, hs, sl, cof, dw):
         row0 = _shr.dp_shard_index(mesh) * rows
         sl2 = sl[:, None]
         coords = [
@@ -605,7 +635,7 @@ def _shard_comm(
             )
             h_new_ws, x_new_ws = uplink.h_update(
                 xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
-                block=block,
+                down=dw, block=block,
             )
             xs_un = unpack(x_new_ws, spec)
             hs_un = unpack(h_new_ws, hspec)
@@ -615,18 +645,18 @@ def _shard_comm(
             x_bar = _psum(local_partial(i))
             out_x[i], out_h[i] = _finish_leaf(
                 xs[i], hs[i], xfs[i], x_bar, _owned(i, coords[i], sl2),
-                scale,
+                scale, dw,
             )
         return tuple(out_x), tuple(out_h)
 
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(leaf_specs, leaf_specs, P(dp), P()),
+        in_specs=(leaf_specs, leaf_specs, P(dp), P(), P(dp)),
         out_specs=(leaf_specs, leaf_specs),
         check_rep=False,
     )
-    xs_out, hs_out = fn(tuple(xflat), tuple(hflat), slot, client_of)
+    xs_out, hs_out = fn(tuple(xflat), tuple(hflat), slot, client_of, dwn)
     if pad:
         xs_out = [a[:n] for a in xs_out]
         hs_out = [a[:n] for a in hs_out]
@@ -645,6 +675,7 @@ def cyclic_comm(
     scale,
     impl: str = "ws",
     *,
+    down: Optional[jax.Array] = None,
     block: int = 4096,
     meshed: bool = False,
     mesh=None,
@@ -655,17 +686,20 @@ def cyclic_comm(
 
     Coordinate-identical to the per-leaf dense reference (``impl="dense"``)
     for every leaf and both Fig. 1 template regimes; see the module
-    docstring for the three implementations.  ``meshed=True`` with a
-    ``mesh`` handle and ``impl="pallas"`` runs the shard-resident engine
-    (``pspecs``: the stacked state's PartitionSpecs, client split only
-    when None; ``shard_kernels``: force/suppress the per-shard Pallas
-    kernels, default per backend).
+    docstring for the three implementations.  ``down`` is the DownCom row
+    mask ((n,) bool; None broadcasts to every row) — the elastic engine
+    passes the NEXT round's cohort so idle rows stay untouched (§11).
+    ``meshed=True`` with a ``mesh`` handle and ``impl="pallas"`` runs the
+    shard-resident engine (``pspecs``: the stacked state's PartitionSpecs,
+    client split only when None; ``shard_kernels``: force/suppress the
+    per-shard Pallas kernels, default per backend).
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     if impl == "pallas" and meshed:
         return _shard_comm(
             x, h, slot, c, s, scale, template="cyclic", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
+            down=down,
         )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
@@ -708,7 +742,7 @@ def cyclic_comm(
                     jnp.take_along_axis(xf, rows, axis=0).sum(axis=0) / s
                 )
             out_x[i], out_h[i] = _finish_leaf(
-                xl, hl, xf, x_bar, owned, scale
+                xl, hl, xf, x_bar, owned, scale, down
             )
         return (
             jax.tree.unflatten(treedef, out_x),
@@ -723,7 +757,7 @@ def cyclic_comm(
 
     for i in fallback:
         out_x[i], out_h[i] = _dense_cyclic_leaf(
-            xflat[i], hflat[i], slot, c, s, scale
+            xflat[i], hflat[i], slot, c, s, scale, down
         )
 
     if covered:
@@ -733,7 +767,7 @@ def cyclic_comm(
         hw = pack([hflat[i] for i in covered], hspec)
         band = jnp.asarray(_cyclic_band_np(spec.dims, c, s))
         _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, c, s, scale, block
+            xw, hw, slot, band, c, s, scale, block, down=down
         )
         xs = unpack(x_new_ws, spec)
         hs = unpack(h_new_ws, hspec)
@@ -755,6 +789,9 @@ def blocked_comm(
     scale,
     impl: str = "ws",
     *,
+    c: Optional[int] = None,
+    slot_of: Optional[jax.Array] = None,
+    down: Optional[jax.Array] = None,
     block: int = 4096,
     meshed: bool = False,
     mesh=None,
@@ -767,6 +804,17 @@ def blocked_comm(
     materialized an ownership-sized delta; the sparse path gathers, per
     block column and shift ``t``, the one client row that owns it (``s``
     rolled adds, ``O(s d)`` reads) and fuses the h-update mask-free.
+
+    ``c``/``slot_of`` generalize the template to partial participation
+    (DESIGN.md §11): coordinates are chunked into ``c`` blocks (not
+    ``n``) and the contiguous ownership bands are laid over the round's
+    cohort *slots* — ``slot_of[i]`` is client ``i``'s slot in ``[0, c)``
+    (-1 idle) — so ownership is ``(block(k) - slot_of[i] - off) mod c <
+    s``: every coordinate still has exactly ``s`` owners, all of them
+    cohort members.  The defaults (``c=None``, ``slot_of=None``) are full
+    participation with identity slots, bit-identical to the original
+    template.  ``down`` is the DownCom row mask (see ``cyclic_comm``).
+
     ``meshed=True`` + ``mesh`` + ``impl="pallas"``: the shard-resident
     engine (see ``cyclic_comm``) — the contiguous per-block gathers run on
     each shard's local rows and the block partials combine in one psum,
@@ -774,19 +822,32 @@ def blocked_comm(
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     off = jnp.asarray(off, jnp.int32)
+    m = n if c is None else int(c)
+    # fold the shift into per-client slots ((slot + band) mod m < s
+    # <=> (band - slot_of - off) mod m < s, the block_uplink closed
+    # form; identity slot_of recovers the original (band - i - off))
+    if slot_of is None:
+        if m != n:
+            raise ValueError(
+                f"blocked_comm with c={m} < n={n} needs slot_of (the "
+                f"per-client cohort slots)"
+            )
+        slot = (-(jnp.arange(n, dtype=jnp.int32) + off)) % m
+    else:
+        slot = jnp.where(
+            slot_of >= 0, (-(slot_of + off)) % m, -1
+        ).astype(jnp.int32)
     if impl == "pallas" and meshed:
-        # fold the shift into per-client slots ((slot + band) mod n < s
-        # <=> (band - i - off) mod n < s, the block_uplink closed form)
-        slot = (-(jnp.arange(n, dtype=jnp.int32) + off)) % n
         return _shard_comm(
-            x, h, slot, n, s, scale, template="blocked", mesh=mesh,
+            x, h, slot, m, s, scale, template="blocked", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
+            down=down,
         )
     if impl == "dense":
         xflat, treedef = jax.tree.flatten(x)
         hflat = jax.tree.leaves(h)
         pairs = [
-            _dense_blocked_leaf(xl, hl, off, n, s, scale)
+            _dense_blocked_leaf(xl, hl, slot, m, s, scale, down)
             for xl, hl in zip(xflat, hflat)
         ]
         return (
@@ -803,12 +864,9 @@ def blocked_comm(
         hspec = workspace_spec(hflat)
         xw = pack(xflat, spec)
         hw = pack(hflat, hspec)
-        band = jnp.asarray(_block_band_np(spec.dims, n))
-        # fold the shift into the slot: (slot + band) % n < s  <=>
-        # (band - i - off) % n < s, the block_uplink closed form
-        slot = (-(jnp.arange(n, dtype=jnp.int32) + off)) % n
+        band = jnp.asarray(_block_band_np(spec.dims, m))
         _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, n, s, scale, block
+            xw, hw, slot, band, m, s, scale, block, down=down
         )
         return (
             jax.tree.unflatten(treedef, unpack(x_new_ws, spec)),
@@ -817,12 +875,21 @@ def blocked_comm(
 
     # impl == "ws": s rolled adds (contiguous per-block gathers, no pad)
     # + the fused h-update, leaf by leaf
-    i_col = jnp.arange(n, dtype=jnp.int32)[:, None]
+    client_of = None
+    if not meshed:
+        # block-slot -> owner client row (idle writes land in the dropped
+        # overflow slot; cohort slots are a permutation of [0, m))
+        client_of = (
+            jnp.zeros((m + 1,), jnp.int32)
+            .at[jnp.where(slot >= 0, slot, m)]
+            .set(jnp.arange(n, dtype=jnp.int32))[:m]
+        )
+    sl = slot[:, None]
     out_x: List[Any] = [None] * len(xflat)
     out_h: List[Any] = [None] * len(xflat)
     for i, (xl, hl) in enumerate(zip(xflat, hflat)):
         D = dims[i]
-        chunk = -(-D // n)
+        chunk = -(-D // m)
         nf, tail = divmod(D, chunk)  # full blocks + ragged tail block
         nb = nf + (1 if tail else 0)
         xf = xl.reshape(n, D).astype(jnp.float32)
@@ -830,7 +897,7 @@ def blocked_comm(
         # (n, nb) (tiny) and expand to coordinates with a repeat — beats
         # recomputing an (n, D) predicate (measured, DESIGN.md §9)
         jb = jnp.arange(nb, dtype=jnp.int32)[None, :]
-        own_nb = ((jb - i_col - off) % n) < s
+        own_nb = _wrapped_owned(sl, jb, m, s)
         owned = jnp.repeat(own_nb, chunk, axis=1)[:, :D]
         if meshed:
             # sharded client axis: keep the d-sized all-reduce shape (see
@@ -842,14 +909,17 @@ def blocked_comm(
             acc = jnp.zeros((nf, chunk), jnp.float32)
             acc_t = jnp.zeros((tail,), jnp.float32)
             for t in range(s):
-                # owner row of block j at shift t: (j - off - t) mod n --
-                # one contiguous chunk per block, the reduce-scatter shape
-                acc = acc + xm[(jf - off - t) % n, jf]
+                # owner row of block j at shift t: the client whose slot
+                # is (t - j) mod m — one contiguous chunk per block, the
+                # reduce-scatter shape
+                acc = acc + xm[client_of[(t - jf) % m], jf]
                 if tail:
-                    acc_t = acc_t + xf[(nf - off - t) % n, nf * chunk:]
+                    acc_t = acc_t + xf[client_of[(t - nf) % m],
+                                       nf * chunk:]
             x_bar = jnp.concatenate([acc.reshape(-1), acc_t]) / s \
                 if tail else acc.reshape(-1) / s
-        out_x[i], out_h[i] = _finish_leaf(xl, hl, xf, x_bar, owned, scale)
+        out_x[i], out_h[i] = _finish_leaf(xl, hl, xf, x_bar, owned, scale,
+                                          down)
     return (
         jax.tree.unflatten(treedef, out_x),
         jax.tree.unflatten(treedef, out_h),

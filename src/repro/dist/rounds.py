@@ -23,6 +23,15 @@ round.  Here a whole round runs as donated compiled programs:
     ``.at[slot]`` updates inside the donated programs and drained to a
     ``MetricLogger`` every ``flush_every`` rounds — the drain is the only
     host sync.
+  * **Elastic partial participation** (DESIGN.md §11): at ``c < n`` —
+    where cohort rows can vacate hardware (single-device client axis or
+    stacked clients; gated default, see ``make_round_fn``) — each chunk
+    gathers the round's cohort rows into a compact ``(c, ...)`` state,
+    runs its local steps there (O(c·L) compute and gradient memory —
+    idle clients do nothing), scatters back, and the comm step's DownCom
+    writes only the NEXT round's cohort.  Cohorts come from the round's
+    comm key on device (uniform) or a host ``CohortPlan``
+    (availability-driven, ``run_rounds(plan=...)``).
   * Both uplinks route through the mask-free comm paths of
     ``repro.dist.comm_ws`` (``tcfg.comm_impl``, default auto: sparse fused
     uplink off-TPU, flat-workspace Pallas kernels on TPU — DESIGN.md §9),
@@ -48,7 +57,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.dist import tamuna_dp
+from repro.dist import sharding, tamuna_dp
 from repro.dist.tamuna_dp import _as_key
 from repro.models.transformer import ModelConfig
 
@@ -57,11 +66,24 @@ __all__ = [
     "round_chunks",
     "data_step_key",
     "comm_round_key",
+    "default_elastic",
     "make_round_fn",
     "make_fused_round",
     "init_carry",
     "run_rounds",
 ]
+
+
+def default_elastic(n: int, c: int, dp_total: int) -> bool:
+    """Whether the engine gathers by default: only where cohort rows can
+    actually vacate hardware — a single-device client axis, or stacked
+    clients (``n > dp``) whose cohort divides the dp extent.  With one
+    client per device the compact ``(c, ...)`` state cannot shard over
+    dp: GSPMD replicates the cohort's gradient work onto every shard and
+    remats the gather (measured ~500x round bytes on the pod16x16
+    dry-run — DESIGN.md §11, EXPERIMENTS §Perf 9).  Shared by
+    ``make_round_fn``, ``make_fused_round``, and the per-step trainer."""
+    return c < n and (dp_total == 1 or (n > dp_total and c % dp_total == 0))
 
 # Batch sampler contract: ``sample_batch(data, key) -> {"tokens": ..., ...}``
 # where ``data`` is a device-resident pytree passed alongside the donated
@@ -115,13 +137,19 @@ def _zero_traces(flush_every: int) -> Dict[str, jax.Array]:
     }
 
 
-def _scan_local(local, sample_batch: SampleFn, state, data, dkey, t, B: int):
+def _scan_local(local, sample_batch: SampleFn, state, data, dkey, t, B: int,
+                clients=None):
     """``B`` local steps under ``lax.scan``, batches sampled on device from
-    ``fold_in(dkey, t)``; returns (state, t, summed loss)."""
+    ``fold_in(dkey, t)``; returns (state, t, summed loss).  ``clients``
+    restricts the sample to the round's cohort rows (the state is then the
+    compact ``(c, ...)`` gather and per-client streams stay keyed by the
+    ACTUAL client ids, invariant to who else participates)."""
 
     def body(inner, _):
         st, tt, acc = inner
-        batch = sample_batch(data, jax.random.fold_in(dkey, tt))
+        key = jax.random.fold_in(dkey, tt)
+        batch = (sample_batch(data, key) if clients is None
+                 else sample_batch(data, key, clients=clients))
         st, m = local(st, **batch)
         return (st, tt + 1, acc + m["loss"]), None
 
@@ -138,28 +166,83 @@ def make_round_fn(
     *,
     sample_batch: SampleFn,
     max_L: int = 16,
+    n: Optional[int] = None,
+    elastic: Optional[bool] = None,
 ):
-    """Build ``round_fn(carry, data, L, slot) -> carry`` running one round.
+    """Build ``round_fn(carry, data, L, slot, cohort=None, down=None) ->
+    carry`` running one round.
 
     ``data`` is the device-resident pipeline table pytree (read-only, never
     donated); ``L`` is the (host-sampled) number of local steps; ``slot`` is
     the trace row this round writes (``global_round % flush_every``).  The
-    callable exposes ``round_fn.cache`` (bucket -> compiled program) and
-    ``round_fn.max_L``.
-    """
-    local = tamuna_dp.make_local_step(cfg, tcfg)
-    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+    callable exposes ``round_fn.cache`` (bucket -> compiled program),
+    ``round_fn.max_L``, ``round_fn.n``, ``round_fn.c``, ``round_fn.elastic``.
 
-    def chunk_fn(B: int, carry: RoundCarry, data, do_comm,
-                 slot) -> RoundCarry:
+    **Elastic partial participation** (default whenever ``tcfg.c < n``,
+    DESIGN.md §11): every chunk gathers the round's ``c`` cohort rows into
+    a compact ``(c, ...)`` state, runs its local steps there (batches
+    sampled for cohort clients only), and scatters back — local compute
+    and gradient memory are O(c·L), idle clients do nothing.  The cohort
+    is derived on device from the round's comm key
+    (``tamuna_dp.round_cohort(comm_round_key(base, round), n, c)`` — every
+    chunk of a round sees the same ``state.round``, hence the same
+    cohort), unless the caller passes an explicit ``cohort`` (host plans:
+    ``repro.dist.cohort.CohortPlan`` for availability-driven sampling).
+    The comm step's DownCom then targets only the NEXT round's cohort
+    (``down``; device-derived symmetrically when None), so clients sitting
+    out a round are bitwise untouched.
+
+    The default only goes elastic where cohort rows can actually vacate
+    hardware: a single-device client axis, or stacked clients
+    (``n > dp``) whose cohort divides the dp extent.  With one client per
+    device (``n == dp``) the compact ``(c, ...)`` state cannot shard over
+    the dp axis — GSPMD replicates the cohort's gradient work onto every
+    shard and remats the gather (measured on the pod16x16 dry-run:
+    ~500x the round's memory traffic, EXPERIMENTS §Perf 9) — so those
+    placements keep the all-rows body, whose DownCom must broadcast
+    (every row trains, every row re-syncs to ``x_bar``).  ``elastic=``
+    overrides the default either way.
+    """
+    n = n or sharding.n_clients(mesh)
+    c = tcfg.c
+    if elastic is None:
+        elastic = default_elastic(n, c, sharding.n_clients(mesh))
+    local = tamuna_dp.make_local_step(cfg, tcfg)
+    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n)
+
+    def chunk_fn(B: int, carry: RoundCarry, data, do_comm, slot,
+                 cohort, down) -> RoundCarry:
         state, t, dk, ck, traces = carry
-        state, t, loss_sum = _scan_local(
-            local, sample_batch, state, data, _as_key(dk), t, B
-        )
+        if elastic:
+            if cohort is None:
+                cohort = tamuna_dp.round_cohort(
+                    comm_round_key(ck, state.round), n, c
+                )
+            if down is None:
+                down = tamuna_dp.member_mask(
+                    tamuna_dp.round_cohort(
+                        comm_round_key(ck, state.round + 1), n, c
+                    ), n,
+                )
+            compact = tamuna_dp.gather_cohort(state, cohort)
+            compact, t, loss_sum = _scan_local(
+                local, sample_batch, compact, data, _as_key(dk), t, B,
+                clients=cohort,
+            )
+            state = tamuna_dp.scatter_cohort(state, compact, cohort)
+        else:
+            # all-rows body: every row trains, so every row must re-sync
+            # to x_bar at comm time — a masked DownCom would leave
+            # non-cohort rows on their (discarded) local trajectories
+            down = None
+            state, t, loss_sum = _scan_local(
+                local, sample_batch, state, data, _as_key(dk), t, B
+            )
 
         def with_comm(st):
             ckey = comm_round_key(ck, st.round)
-            return comm(st, jax.random.key_data(ckey))
+            return comm(st, jax.random.key_data(ckey), cohort=cohort,
+                        down=down)
 
         state = jax.lax.cond(do_comm, with_comm, lambda st: st, state)
         traces = {
@@ -172,23 +255,34 @@ def make_round_fn(
         }
         return RoundCarry(state, t, dk, ck, traces)
 
-    cache: Dict[int, Callable] = {}
+    cache: Dict[Any, Callable] = {}
 
-    def program(B: int):
-        if B not in cache:
-            cache[B] = jax.jit(partial(chunk_fn, B), donate_argnums=(0,))
-        return cache[B]
+    def program(B: int, with_plan: bool):
+        key = (B, with_plan)
+        if key not in cache:
+            cache[key] = jax.jit(partial(chunk_fn, B), donate_argnums=(0,))
+        return cache[key]
 
-    def round_fn(carry: RoundCarry, data, L: int, slot) -> RoundCarry:
+    def round_fn(carry: RoundCarry, data, L: int, slot,
+                 cohort=None, down=None) -> RoundCarry:
         chunks = round_chunks(L, max_L)
         slot = jnp.asarray(slot, jnp.int32)
+        with_plan = cohort is not None
+        if with_plan and down is None:
+            # a host plan must pin the DownCom too: without it the engine
+            # would derive a (different) uniform next cohort on device
+            raise ValueError("explicit cohort needs an explicit down mask")
         for i, B in enumerate(chunks):
             do_comm = jnp.asarray(i == len(chunks) - 1)
-            carry = program(B)(carry, data, do_comm, slot)
+            carry = program(B, with_plan)(carry, data, do_comm, slot,
+                                          cohort, down)
         return carry
 
     round_fn.cache = cache
     round_fn.max_L = max_L
+    round_fn.n = n
+    round_fn.c = c
+    round_fn.elastic = elastic
     return round_fn
 
 
@@ -199,21 +293,51 @@ def make_fused_round(
     *,
     sample_batch: SampleFn,
     L: int,
+    n: Optional[int] = None,
+    elastic: Optional[bool] = None,
 ):
     """Static-``L`` fused round ``fn(state, key_data, data) -> (state, loss)``
     with an unconditional comm step — the shape the dry-run lowers so the
-    roofline artifacts see the scanned round, and the bench times."""
+    roofline artifacts see the scanned round, and the bench times.  At
+    ``c < n`` this is the elastic round (cohort gather -> O(c·L) local
+    compute -> scatter -> comm; ``elastic=False`` forces the all-rows
+    contrast), with the cohort derived in-program from the comm key, so
+    the lowered HLO's gradient FLOPs scale with ``c`` — the artifact the
+    idle-clients-do-no-work regression checks.  Default elasticity is
+    ``default_elastic`` (gathering is a pessimization when cohort rows
+    cannot vacate hardware)."""
+    n = n or sharding.n_clients(mesh)
+    c = tcfg.c
+    if elastic is None:
+        elastic = default_elastic(n, c, sharding.n_clients(mesh))
     local = tamuna_dp.make_local_step(cfg, tcfg)
-    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n)
 
     def fn(state, key_data, data):
         kd, kc = jax.random.split(_as_key(key_data))
-        state, _, loss_sum = _scan_local(
-            local, sample_batch, state, data, kd,
-            jnp.zeros((), jnp.int32), L,
-        )
+        t0 = jnp.zeros((), jnp.int32)
         ckey = comm_round_key(jax.random.key_data(kc), state.round)
-        state = comm(state, jax.random.key_data(ckey))
+        if elastic:
+            cohort = tamuna_dp.round_cohort(ckey, n, c)
+            compact = tamuna_dp.gather_cohort(state, cohort)
+            compact, _, loss_sum = _scan_local(
+                local, sample_batch, compact, data, kd, t0, L,
+                clients=cohort,
+            )
+            state = tamuna_dp.scatter_cohort(state, compact, cohort)
+            # DownCom broadcasts here (down=None): each call of this
+            # static round derives cohorts from ITS OWN key, so a mask
+            # aimed at "this key's next cohort" would not match the
+            # cohort the NEXT call actually draws — a client could then
+            # enter a round without ever receiving x_bar.  The chunked
+            # engine (make_round_fn) can target the true next cohort
+            # because its comm key base is fixed in the carry.
+            state = comm(state, jax.random.key_data(ckey), cohort=cohort)
+        else:
+            state, _, loss_sum = _scan_local(
+                local, sample_batch, state, data, kd, t0, L,
+            )
+            state = comm(state, jax.random.key_data(ckey))
         return state, loss_sum / L
 
     return fn
@@ -248,6 +372,7 @@ def run_rounds(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 0,
     max_L: Optional[int] = None,
+    plan=None,
 ) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
     """Multi-round driver: geometric ``L`` per round (host ``rng``), fused
     rounds on device, metrics drained every ``flush_every`` rounds.
@@ -256,6 +381,14 @@ def run_rounds(
     per-round host sync; the only blocking points are the trace drain (once
     per flush) and checkpoint saves.  Returns the final state and the last
     drained per-round metrics row.
+
+    ``plan`` (a ``repro.dist.cohort.CohortPlan``) drives *non-uniform*
+    cohort sampling — availability models, latency weighting — from the
+    host: the plan is indexed by the GLOBAL round counter (``state.round``
+    at entry plus the loop index), so a restored checkpoint replays the
+    identical schedule; per round it uploads the tiny ``(c,)`` cohort and
+    ``(n,)`` DownCom mask.  ``plan=None`` (the default) keeps cohort
+    selection on device, derived from the comm key (uniform).
     """
     # never sample past the engine's bucket cap: round_fn silently clamps
     # executed steps to its own max_L, so a larger caller cap would desync
@@ -265,6 +398,7 @@ def run_rounds(
     if engine_cap:
         max_L = min(max_L, engine_cap)
     flush_every = max(1, min(flush_every, rounds))
+    start_round = int(state.round) if plan is not None else 0
     carry = init_carry(state, key, flush_every)
     pending = []  # global round indices awaiting drain
     total_steps = 0
@@ -272,7 +406,15 @@ def run_rounds(
     for r in range(rounds):
         L = tamuna_dp.sample_round_length(rng, p, max_L=max_L)
         slot = len(pending)
-        carry = round_fn(carry, data, L, slot)
+        if plan is not None:
+            g = start_round + r
+            carry = round_fn(
+                carry, data, L, slot,
+                cohort=jnp.asarray(plan.cohort(g), jnp.int32),
+                down=jnp.asarray(plan.member_mask(g + 1)),
+            )
+        else:
+            carry = round_fn(carry, data, L, slot)
         pending.append(r)
         if len(pending) == flush_every or r == rounds - 1:
             tr = jax.device_get(carry.traces)  # the only host sync

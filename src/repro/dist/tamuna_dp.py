@@ -26,6 +26,12 @@ comes from static closed-form band tables fused into the aggregation
 since clients are device-sharded here) or the packed-workspace Pallas
 kernels (``"pallas"``, TPU), with the per-leaf dense-mask reference
 retained as ``comm_impl="dense"`` (DESIGN.md §9).
+
+Partial participation is *elastic* (DESIGN.md §11): ``round_cohort``
+derives the round's cohort from the comm key, ``gather_cohort`` /
+``scatter_cohort`` give the round engine O(c·L) local compute, both
+uplinks run at any ``c <= n`` (the blocked bands lie over cohort slots),
+and the comm step's DownCom can target just the next round's cohort.
 """
 
 from __future__ import annotations
@@ -49,6 +55,10 @@ __all__ = [
     "DistTamunaState",
     "init_state",
     "state_pspecs",
+    "round_cohort",
+    "member_mask",
+    "gather_cohort",
+    "scatter_cohort",
     "make_local_step",
     "make_comm_step",
     "sample_round_length",
@@ -110,14 +120,16 @@ class DistTamunaState(NamedTuple):
 
 
 def init_state(
-    key: jax.Array, cfg: ModelConfig, mesh: Mesh, tcfg: DistTamunaConfig
+    key: jax.Array, cfg: ModelConfig, mesh: Mesh, tcfg: DistTamunaConfig,
+    n: Optional[int] = None,
 ) -> DistTamunaState:
-    n = sharding.n_clients(mesh)
-    if tcfg.uplink == "block_rs" and tcfg.c != n:
-        raise ValueError(
-            f"block_rs uplink needs full participation (c == n == {n}), "
-            f"got c={tcfg.c}"
-        )
+    """Client-stacked initial state.  ``n`` overrides the mesh-derived
+    population (``sharding.n_clients``) for placements that stack more
+    clients than devices — the client axis then holds ``n / dp`` rows per
+    shard (single-device simulators pass a 1x1 mesh and any ``n``)."""
+    n = n or sharding.n_clients(mesh)
+    if tcfg.c > n:
+        raise ValueError(f"cohort c={tcfg.c} exceeds population n={n}")
     params = model_api.init(key, cfg)
     x = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params
@@ -268,6 +280,74 @@ def _as_key(key: jax.Array) -> jax.Array:
     return jax.random.wrap_key_data(key)
 
 
+# --------------------------------------------------------------------------
+# cohort plan (elastic partial participation, DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+
+def round_cohort(key: jax.Array, n: int, c: int) -> jax.Array:
+    """The round's sorted ``(c,)`` cohort, derived from the round's COMM
+    key (the same key ``make_comm_step`` consumes): uniform without
+    replacement.  The single source of truth for who participates — the
+    round engine gathers these rows for local compute, the data pipeline
+    samples batches for them, and ``make_comm_step`` (given ``cohort=None``)
+    re-derives the identical set, so every layer agrees by construction.
+    Replayable from ``(comm_key_base, round)`` alone via
+    ``rounds.comm_round_key``.  Non-uniform (availability-driven) plans
+    come from the host instead: ``repro.dist.cohort.CohortPlan``."""
+    k_cohort, _ = jax.random.split(_as_key(key))
+    return jnp.sort(
+        jax.random.choice(k_cohort, n, shape=(c,), replace=False)
+    ).astype(jnp.int32)
+
+
+def member_mask(cohort: jax.Array, n: int) -> jax.Array:
+    """``(n,)`` bool membership of a ``(c,)`` cohort index array."""
+    return jnp.zeros((n,), bool).at[cohort].set(True)
+
+
+def gather_cohort(state: DistTamunaState,
+                  cohort: jax.Array) -> DistTamunaState:
+    """Gather the cohort's rows of x / h / opt moments into a compact
+    ``(c, ...)``-stacked state (scalars shared).  Local compute on the
+    result is O(c), not O(n) — idle clients do nothing, the paper's PP
+    semantics."""
+    take = lambda a: jnp.take(a, cohort, axis=0)
+    opt: Any = state.opt
+    if isinstance(opt, optimizers.AdamState):
+        opt = optimizers.AdamState(
+            mu=jax.tree.map(take, opt.mu),
+            nu=jax.tree.map(take, opt.nu),
+            count=opt.count,
+        )
+    return state._replace(
+        x=jax.tree.map(take, state.x),
+        h=jax.tree.map(take, state.h),
+        opt=opt,
+    )
+
+
+def scatter_cohort(state: DistTamunaState, compact: DistTamunaState,
+                   cohort: jax.Array) -> DistTamunaState:
+    """Scatter a compact cohort state back into the full ``(n, ...)``
+    rows (the inverse of ``gather_cohort``); idle rows pass through
+    untouched.  Under donation the ``.at[].set`` updates write only the
+    cohort rows in place."""
+    put = lambda full, part: full.at[cohort].set(part)
+    opt: Any = state.opt
+    if isinstance(opt, optimizers.AdamState):
+        opt = optimizers.AdamState(
+            mu=jax.tree.map(put, opt.mu, compact.opt.mu),
+            nu=jax.tree.map(put, opt.nu, compact.opt.nu),
+            count=compact.opt.count,
+        )
+    return state._replace(
+        x=jax.tree.map(put, state.x, compact.x),
+        h=jax.tree.map(put, state.h, compact.h),
+        opt=opt,
+    )
+
+
 def make_comm_step(
     cfg: ModelConfig,
     tcfg: DistTamunaConfig,
@@ -275,13 +355,28 @@ def make_comm_step(
     *,
     impl: Optional[str] = None,
     block: int = 4096,
+    n: Optional[int] = None,
 ):
-    """Build ``fn(state, key) -> state``: UpCom + DownCom of one round.
+    """Build ``fn(state, key, cohort=None, down=None) -> state``: UpCom +
+    DownCom of one round.
 
     masked_psum: sum the masked client vectors over the data axes (an
     all-reduce of the *sparse* contributions), reconstruct ``x_bar`` with
     the exact ``1/s`` factor, update the cohort's control variates on the
-    masked coordinates only, and broadcast ``x_bar`` back down.
+    masked coordinates only, and DownCom ``x_bar`` back down.
+
+    block_rs: the contiguous-block template, now at any ``c <= n``
+    (DESIGN.md §11): coordinates chunk into ``c`` blocks whose shifted
+    ownership bands lie over the cohort's slots — still reduce-scatter
+    shaped, still exactly ``s`` owners per coordinate, all of them
+    participants.
+
+    ``cohort`` is the round's ``(c,)`` client set; ``None`` derives it
+    from ``key`` via ``round_cohort`` (the same derivation the elastic
+    round engine uses, so engine and standalone callers agree).  ``down``
+    is the DownCom row mask — the elastic engine passes the NEXT round's
+    cohort (only joining clients download, the paper's DownCom); ``None``
+    broadcasts ``x_bar`` to every row (full-participation behaviour).
 
     The aggregation math runs over the flat comm workspace
     (``repro.dist.comm_ws``, DESIGN.md §9): ``impl`` (default
@@ -293,7 +388,7 @@ def make_comm_step(
     Uplink/downlink float accounting is a builder-time constant (the leaf
     dims are static), not recomputed inside the traced step.
     """
-    n = sharding.n_clients(mesh)
+    n = n or sharding.n_clients(mesh)
     c, s = tcfg.c, tcfg.s
     if c > n:
         raise ValueError(f"cohort c={c} exceeds population n={n}")
@@ -303,7 +398,10 @@ def make_comm_step(
 
     # builder-time communication accounting: per-leaf dims are static, so
     # the traced fn only adds cached constants (the seed recomputed the
-    # python sum over leaves inside every trace)
+    # python sum over leaves inside every trace).  Both uplinks count the
+    # COHORT's template: the blocked bands lie over the c cohort slots, so
+    # a client uploads s chunks of ceil(D/c) — the seed's n-based constant
+    # under-counted per-client floats whenever c < n.
     params_struct = jax.eval_shape(
         lambda: model_api.init(jax.random.key(0), cfg)
     )
@@ -319,7 +417,7 @@ def make_comm_step(
     down_total = jnp.float32(sum(dims))
     if tcfg.uplink == "block_rs":
         up_total = jnp.float32(
-            sum(masks.block_column_nnz(D, n, s) for D in dims)
+            sum(masks.block_column_nnz(D, c, s) for D in dims)
         )
     else:
         up_total = jnp.float32(sum(masks.column_nnz(D, c, s) for D in dims))
@@ -332,37 +430,41 @@ def make_comm_step(
             down_floats=state.down_floats + down_total,
         )
 
+    def slot_of_(cohort):
+        return (
+            jnp.full((n,), -1, jnp.int32)
+            .at[cohort].set(jnp.arange(c, dtype=jnp.int32))
+        )
+
     if tcfg.uplink == "block_rs":
         from repro.dist.block_uplink import block_rs_aggregate
 
-        if c != n:
-            # same invariant init_state enforces; guard the step builder too
-            # (checkpoints restore state without going through init_state)
-            raise ValueError(
-                f"block_rs uplink needs full participation (c == n == {n}),"
-                f" got c={c}"
-            )
-
-        def fn(state: DistTamunaState, key: jax.Array) -> DistTamunaState:
+        def fn(state: DistTamunaState, key: jax.Array,
+               cohort: Optional[jax.Array] = None,
+               down: Optional[jax.Array] = None) -> DistTamunaState:
             key = _as_key(key)
-            off = jax.random.randint(key, (), 0, n, jnp.int32)
+            _, k_off = jax.random.split(key)
+            if cohort is None:
+                cohort = round_cohort(key, n, c)
+            off = jax.random.randint(k_off, (), 0, c, jnp.int32)
             xb, hb = block_rs_aggregate(
                 state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg,
                 impl=impl, block=block, meshed=True, pspecs=stacked_specs,
+                c=c, slot_of=slot_of_(cohort), down=down,
             )
             return bump(state, xb, hb)
 
         return fn
 
-    def fn(state: DistTamunaState, key: jax.Array) -> DistTamunaState:
+    def fn(state: DistTamunaState, key: jax.Array,
+           cohort: Optional[jax.Array] = None,
+           down: Optional[jax.Array] = None) -> DistTamunaState:
         key = _as_key(key)
-        k_cohort, k_perm = jax.random.split(key)
-        cohort = jax.random.choice(k_cohort, n, shape=(c,), replace=False)
+        _, k_perm = jax.random.split(key)
+        if cohort is None:
+            cohort = round_cohort(key, n, c)
         perm = jax.random.permutation(k_perm, c)
-        slot_of = (
-            jnp.full((n,), -1, jnp.int32)
-            .at[cohort].set(jnp.arange(c, dtype=jnp.int32))
-        )
+        slot_of = slot_of_(cohort)
         # the client's TEMPLATE column: perm[cohort slot], -1 when idle
         slot = jnp.where(
             slot_of >= 0, perm[jnp.clip(slot_of, 0)], -1
@@ -373,7 +475,7 @@ def make_comm_step(
         # of the partials; the mesh handle and state specs ride along)
         x_new, h_new = comm_ws.cyclic_comm(
             state.x, state.h, slot, c, s, scale, impl=impl, block=block,
-            meshed=True, mesh=mesh, pspecs=stacked_specs,
+            down=down, meshed=True, mesh=mesh, pspecs=stacked_specs,
         )
         return bump(state, x_new, h_new)
 

@@ -42,10 +42,11 @@ def uplink_masked_sum(x, slot, band, m: int, s: int, block: int = 4096):
 
 @partial(jax.jit, static_argnames=("m", "s", "scale", "block"))
 def uplink_h_update(x, h, x_bar, slot, band, m: int, s: int, scale: float,
-                    block: int = 4096):
-    """Fused control-variate update + DownCom broadcast, one pass."""
+                    down=None, block: int = 4096):
+    """Fused control-variate update + DownCom, one pass.  ``down`` selects
+    the rows that receive ``x_bar`` (all rows when None)."""
     return _uplink.h_update(
-        x, h, x_bar, slot, band, m, s, scale, block=block,
+        x, h, x_bar, slot, band, m, s, scale, down=down, block=block,
         interpret=_interpret(),
     )
 

@@ -51,11 +51,15 @@ def uplink_h_update_ref(
     m: int,
     s: int,
     scale: float,
+    down: Optional[jax.Array] = None,  # (n,) DownCom rows; None = all
 ):
-    """Control-variate update on owned coordinates + DownCom broadcast."""
+    """Control-variate update on owned coordinates + DownCom (``down``
+    rows get ``x_bar``; all rows when None)."""
     owned = _owned_ref(slot, band, m, s)
     h_new = h + scale * jnp.where(owned, x_bar[None, :] - x, 0.0)
     x_new = jnp.broadcast_to(x_bar[None, :], x.shape)
+    if down is not None:
+        x_new = jnp.where(down.astype(bool)[:, None], x_new, x)
     return h_new, x_new
 
 

@@ -12,8 +12,12 @@ or ``(d, c)`` mask is ever materialized in HBM.
               mask read + masked-product materialization.
   h_update    the round's state update: reads x, h and the server model
               x_bar once and writes BOTH h_new (control variates, owned
-              coordinates only) and the broadcast x_new in the same pass —
-              2 reads + 2 writes, the HBM floor for this update.
+              coordinates only) and the DownCom'd x_new in the same pass —
+              2 reads + 2 writes, the HBM floor for this update.  The
+              per-client ``down`` vector selects which rows receive the
+              ``x_bar`` broadcast: under elastic partial participation
+              (DESIGN.md §11) only the NEXT round's cohort downloads, so
+              idle clients' rows pass through bit-exactly.
 
 Grid: 1-D over coordinate blocks; tiles are ``(n, block)`` — pick ``block``
 so ``n * block * 4B`` tiles fit VMEM (n=512 at the default block=4096 is
@@ -46,7 +50,7 @@ def _masked_sum_kernel(slot_ref, band_ref, x_ref, o_ref, *, m: int, s: int):
 
 
 def _h_update_kernel(
-    slot_ref, band_ref, xbar_ref, x_ref, h_ref, h_out, x_out,
+    slot_ref, down_ref, band_ref, xbar_ref, x_ref, h_ref, h_out, x_out,
     *, m: int, s: int, scale: float,
 ):
     owned = owned_from_band(
@@ -55,7 +59,8 @@ def _h_update_kernel(
     x = x_ref[...]
     x_bar = xbar_ref[...][None, :]
     h_out[...] = h_ref[...] + scale * jnp.where(owned, x_bar - x, 0.0)
-    x_out[...] = jnp.broadcast_to(x_bar, x.shape)
+    down = down_ref[...][:, None] != 0
+    x_out[...] = jnp.where(down, jnp.broadcast_to(x_bar, x.shape), x)
 
 
 def _pad_cols(a: jax.Array, pad: int) -> jax.Array:
@@ -103,24 +108,30 @@ def h_update(
     s: int,
     scale: float,  # eta / gamma
     *,
+    down: Optional[jax.Array] = None,  # (n,) int32/bool DownCom targets
     block: int = 4096,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """One fused pass: ``h += scale * owned * (x_bar - x)`` and the DownCom
-    broadcast ``x_new = x_bar`` for every client row."""
+    ``x_new = x_bar`` on the ``down`` rows (every row when ``down=None``);
+    rows outside ``down`` keep their ``x`` bit-exactly."""
     n, d = x.shape
     blk = min(block, d)
     pad = (-d) % blk
     x, h = _pad_cols(x, pad), _pad_cols(h, pad)
     band = jnp.pad(band, (0, pad)) if pad else band
     x_bar = jnp.pad(x_bar, (0, pad)) if pad else x_bar
+    down = (jnp.ones((n,), jnp.int32) if down is None
+            else down.astype(jnp.int32))
     vec = pl.BlockSpec((blk,), lambda i: (i,))
     mat = pl.BlockSpec((n, blk), lambda i: (0, i))
+    row = pl.BlockSpec((n,), lambda i: (0,))
     h_new, x_new = pl.pallas_call(
         functools.partial(_h_update_kernel, m=m, s=s, scale=scale),
         grid=(x.shape[1] // blk,),
         in_specs=[
-            pl.BlockSpec((n,), lambda i: (0,)),
+            row,  # slot
+            row,  # down
             vec,  # band
             vec,  # x_bar
             mat,  # x
@@ -132,7 +143,7 @@ def h_update(
             jax.ShapeDtypeStruct(x.shape, jnp.float32),
         ),
         interpret=resolve_interpret(interpret),
-    )(slot, band, x_bar, x, h)
+    )(slot, down, band, x_bar, x, h)
     if pad:
         h_new, x_new = h_new[:, :d], x_new[:, :d]
     return h_new, x_new

@@ -76,7 +76,10 @@ def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
                        s: int = 4,
                        comm_impl: str = "auto") -> tamuna_dp.DistTamunaConfig:
     n = sharding.n_clients(mesh)
-    c = n if uplink == "block_rs" else max(2, (3 * n) // 4)
+    # both uplinks run partial participation (the blocked bands lie over
+    # the cohort slots, DESIGN.md §11), so the dry-run lowers the elastic
+    # round for block_rs too
+    c = max(2, (3 * n) // 4)
     return tamuna_dp.DistTamunaConfig(
         gamma=0.02, c=c, s=min(s, c), p=0.25, uplink=uplink,
         microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1")),

@@ -41,6 +41,9 @@ def main(argv=None) -> int:
     ap.add_argument("--gamma", type=float, default=0.05)
     ap.add_argument("--p", type=float, default=0.34)
     ap.add_argument("--cohort", type=int, default=0, help="0 = 3n/4")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="population n (0 = one client per data shard); "
+                         "n > dp stacks n/dp client rows per shard")
     ap.add_argument("--sparsity", type=int, default=2)
     ap.add_argument("--uplink", default="masked_psum",
                     choices=["masked_psum", "block_rs"])
@@ -87,16 +90,17 @@ def main(argv=None) -> int:
         registry.get_reduced_config(args.arch)
         if args.reduced else registry.get_config(args.arch)
     )
-    n = sharding.n_clients(mesh)
+    n = args.clients or sharding.n_clients(mesh)
+    # partial participation works on BOTH uplinks now (the blocked bands
+    # lie over the cohort slots, DESIGN.md §11) — no c = n forcing
     c = args.cohort or max(2, (3 * n) // 4)
-    if args.uplink == "block_rs":
-        c = n
     tcfg = tamuna_dp.DistTamunaConfig(
         gamma=args.gamma, c=c, s=min(args.sparsity, c), p=args.p,
         uplink=args.uplink, comm_impl=args.comm_impl,
     )
 
-    state = tamuna_dp.init_state(jax.random.key(args.seed), cfg, mesh, tcfg)
+    state = tamuna_dp.init_state(jax.random.key(args.seed), cfg, mesh,
+                                 tcfg, n=n)
     specs = tamuna_dp.state_pspecs(state, cfg, mesh)
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
@@ -107,7 +111,7 @@ def main(argv=None) -> int:
     pipe = SyntheticTokenPipeline(
         DataConfig(
             seq_len=args.seq_len, per_client_batch=args.per_client_batch,
-            vocab=min(cfg.vocab, 512), seed=args.seed,
+            vocab=min(cfg.vocab, 512), seed=args.seed, n_clients=n,
         ),
         cfg, mesh,
     )
@@ -119,23 +123,54 @@ def main(argv=None) -> int:
     if args.no_fuse:
         # legacy per-step path: one dispatch per local step, host batches —
         # but with the state buffers donated (the seed copied the full
-        # (n, *param) state in HBM every step)
+        # (n, *param) state in HBM every step).  Cohort-aware too: at
+        # c < n only the cohort's rows are gathered, trained, and
+        # scattered back (idle clients do nothing; the DownCom broadcasts
+        # here — the per-step escape hatch keeps the simpler eager form).
         local_step = jax.jit(
             tamuna_dp.make_local_step(cfg, tcfg), donate_argnums=(0,)
         )
         comm_step = jax.jit(
-            tamuna_dp.make_comm_step(cfg, tcfg, mesh), donate_argnums=(0,)
+            tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n),
+            donate_argnums=(0,),
         )
         key = jax.random.key(args.seed + 1)
         total_steps = 0
         final_loss = float("nan")
+        # same elasticity gate as the fused engine: gather only where
+        # cohort rows can vacate hardware
+        elastic = rounds.default_elastic(
+            n, tcfg.c, sharding.n_clients(mesh)
+        )
         for r in range(args.rounds):
             L = tamuna_dp.sample_round_length(rng, tcfg.p, max_L=args.max_L)
-            for _ in range(L):
-                state, m = local_step(state, **pipe.next_batch())
-                total_steps += 1
             key, ck = jax.random.split(key)
-            state = comm_step(state, jax.random.key_data(ck))
+            cohort = (tamuna_dp.round_cohort(ck, n, tcfg.c)
+                      if elastic else None)
+            work = (tamuna_dp.gather_cohort(state, cohort)
+                    if elastic else state)
+            for _ in range(L):
+                batch = pipe.next_batch(
+                    clients=np.asarray(cohort) if elastic else None
+                )
+                work, m = local_step(work, **batch)
+                total_steps += 1
+            if elastic:
+                # the gather SHARED the scalar leaves (round / float
+                # accumulators / opt.count) with `state`, and the first
+                # donated local_step deleted those buffers — rebuild them
+                # from `work`, whose leaves are live donated-jit outputs
+                # (local steps never change their values)
+                state = tamuna_dp.scatter_cohort(
+                    state, work, cohort
+                )._replace(
+                    round=work.round, up_floats=work.up_floats,
+                    down_floats=work.down_floats,
+                )
+            else:
+                state = work
+            state = comm_step(state, jax.random.key_data(ck),
+                              cohort=cohort)
             final_loss = float(m["loss"])
             logger.log(r, {
                 "round": r, "L": L, "loss": final_loss,
@@ -151,7 +186,7 @@ def main(argv=None) -> int:
         round_fn = rounds.make_round_fn(
             cfg, tcfg, mesh,
             sample_batch=device_sampler(pipe.dcfg, cfg, mesh),
-            max_L=args.max_L,
+            max_L=args.max_L, n=n,
         )
         state, last = rounds.run_rounds(
             state,

@@ -1,0 +1,86 @@
+"""Regression tests for examples/availability_sim.py's wall-clock model.
+
+The bug being pinned: the original loop drew ONE cohort + jitter per
+*record point* (every ``record_every=10`` rounds) and multiplied that
+single max by the whole window's local steps — sampling the
+full-participation straggler tail 10x too rarely and understating the
+crossover the example exists to show.  The fixed model draws per round.
+"""
+
+import importlib.util
+import os
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_example():
+    spec = importlib.util.spec_from_file_location(
+        "availability_sim",
+        os.path.join(REPO, "examples", "availability_sim.py"),
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_wallclock_draws_per_round_not_per_window():
+    sim = _load_example()
+    n, rounds = 10, 200
+    base = np.ones(n)
+    base[0] = 100.0  # one massive straggler
+    steps = np.ones(rounds, int)
+
+    # full participation: EVERY round must wait for the straggler —
+    # possible only if every round gets its own cohort draw (the windowed
+    # bug priced at most rounds/record_every draws)
+    t_full = sim.wallclock_per_round(
+        steps, n, n, base, np.random.default_rng(0)
+    )
+    assert len(t_full) == rounds
+    assert (t_full > 50.0).all()
+
+    # c = 2: the straggler lands in ~C(n-1,1)/C(n,2) = 2/n of the rounds;
+    # a per-window sampler at record_every=10 could hit it at most
+    # rounds/10 = 20 times, so a count well above that pins per-round
+    # draws (deterministic under the fixed seed)
+    t_pp = sim.wallclock_per_round(
+        steps, n, 2, base, np.random.default_rng(0)
+    )
+    hits = int((t_pp > 50.0).sum())
+    assert 25 <= hits <= 70, hits
+
+    # deterministic replay
+    again = sim.wallclock_per_round(
+        steps, n, 2, base, np.random.default_rng(0)
+    )
+    np.testing.assert_array_equal(t_pp, again)
+
+    # and the crossover direction the example prints: per-round cost of
+    # the full fleet dominates the cohort's
+    assert t_full.sum() > 5 * t_pp.sum()
+
+
+def test_wallclock_replays_external_cohorts():
+    sim = _load_example()
+    n, rounds = 8, 50
+    base = np.arange(1.0, n + 1.0)
+    steps = np.full(rounds, 3)
+    cohorts = [np.array([0, 1]) for _ in range(rounds)]  # fastest clients
+    t = sim.wallclock_per_round(
+        steps, n, 2, base, np.random.default_rng(1), cohorts=cohorts
+    )
+    # bounded by the slowest replayed cohort member * jitter * steps
+    assert (t <= base[1] * 3 * 3.0).all()
+    assert len(t) == rounds
+
+
+def test_straggler_base_shape_and_tail():
+    sim = _load_example()
+    base = sim.straggler_base(1000, np.random.default_rng(0),
+                              straggler_frac=0.1)
+    assert base.shape == (1000,)
+    frac = (base > 5.0).mean()
+    assert 0.05 < frac < 0.2, frac

@@ -1,9 +1,9 @@
 """Benchmark tooling cannot rot: ``benchmarks/run.py --smoke`` executes
 the comm-step bench end to end at tiny shapes (both subprocesses: the
 single-device sweep and the 2-device meshed sweep with the shard-resident
-engine) without touching the measured BENCH_*.json artifacts, and
-``benchmarks/report.py`` renders the perf-trajectory table over every
-artifact in the repo root."""
+engine) and the elastic cohort-gather bench, without touching the
+measured BENCH_*.json artifacts, and ``benchmarks/report.py`` renders the
+perf-trajectory table over every artifact in the repo root."""
 
 import os
 import sys
@@ -30,6 +30,31 @@ assert rc == 0
     assert "comm_step/n2/masked_psum/ws," in out, out[-2000:]
     assert "comm_step_meshed/n2/masked_psum/shard," in out, out[-2000:]
     assert "speedup_shard_vs_ws" in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
+def test_run_smoke_elastic_emits_rows_and_preserves_artifact(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_elastic.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "elastic"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # both variants and the acceptance column, for both uplinks, at a
+    # partial cohort (n=4, c=2 in smoke mode)
+    assert "elastic/n4/c2/masked_psum/gather," in out, out[-2000:]
+    assert "elastic/n4/c2/block_rs/allrows," in out, out[-2000:]
+    assert "speedup_gather_vs_allrows" in out
     for p, mtime in before.items():
         assert os.path.getmtime(p) == mtime, \
             f"--smoke must not overwrite the measured artifact {p}"

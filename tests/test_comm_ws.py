@@ -208,8 +208,14 @@ cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
                   n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32,
                   remat=False)
 n = sharding.n_clients(mesh)
-for uplink in ("masked_psum", "block_rs"):
-    c = n if uplink == "block_rs" else 3
+# block_rs twice: full participation AND c < n — the elastic blocked
+# template must count COHORT columns (s chunks of ceil(D/c)), not the
+# seed's n-based constant (ISSUE 5 satellite: at c=3 < n=4 the per-client
+# uplink is ~n/c larger per leaf, so the wrong constant is far outside
+# float roundoff and this test pins the fix)
+for uplink, c in (("masked_psum", 3), ("block_rs", None),
+                  ("block_rs", 3), ("masked_psum", None)):
+    c = n if c is None else c
     tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
                                       uplink=uplink)
     state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
@@ -240,10 +246,11 @@ for uplink in ("masked_psum", "block_rs"):
                     a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
                 getattr(outs["dense"], name), getattr(outs[impl], name))))
             assert err <= 1e-6, (uplink, impl, name, err)
-    # hoisted accounting matches the per-leaf formulas exactly
+    # hoisted accounting matches the per-leaf formulas exactly — on the
+    # COHORT size for both uplinks (blocked chunks are ceil(D/c))
     dims = [int(np.prod(a.shape[1:])) for a in jax.tree.leaves(state.x)]
     if uplink == "block_rs":
-        up = sum(masks.block_column_nnz(D, n, 2) for D in dims)
+        up = sum(masks.block_column_nnz(D, c, 2) for D in dims)
     else:
         up = sum(masks.column_nnz(D, c, 2) for D in dims)
     for impl, st_out in outs.items():
@@ -275,7 +282,7 @@ dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
 pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
 sampler = device_sampler(dcfg, cfg, mesh)
 for uplink in ("masked_psum", "block_rs"):
-    c = n if uplink == "block_rs" else 3
+    c = 3  # < n: the elastic engine, for BOTH uplinks (block_rs too, §11)
     finals = {}
     for impl in ("dense", "ws", "pallas"):
         tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
@@ -286,7 +293,8 @@ for uplink in ("masked_psum", "block_rs"):
                           is_leaf=lambda x: isinstance(x, P))
         state = jax.device_put(state, sh)
         round_fn = rounds.make_round_fn(cfg, tcfg, mesh,
-                                        sample_batch=sampler, max_L=4)
+                                        sample_batch=sampler, max_L=4,
+                                        elastic=True)
         finals[impl], last = rounds.run_rounds(
             state, round_fn=round_fn, data=pipe.device_data(),
             key=jax.random.key(5), rounds=3, rng=np.random.default_rng(7),
@@ -297,7 +305,11 @@ for uplink in ("masked_psum", "block_rs"):
             lambda a, b: float(jnp.abs(
                 a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
             finals["dense"], finals[impl])))
-        assert err <= 1e-6, (uplink, impl, err)
+        # 5e-6, not 1e-6: the impls share cohorts/keys but sum the UpCom
+        # in different float orders, and 3 ROUNDS of training amplify the
+        # per-round <=1e-6 roundoff through the gradients (the one-round
+        # bound stays 1e-6 — test_fused_round_equals_per_step)
+        assert err <= 5e-6, (uplink, impl, err)
 print("OK")
 """, devices=4, timeout=1500)
 

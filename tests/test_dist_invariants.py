@@ -46,6 +46,46 @@ def test_blocked_closed_form_matches_template_and_keeps_row_property(t, seed):
     assert (q.sum(axis=1) == s).all()  # permutation preserves owners-per-row
 
 
+elastic_blocked = st.tuples(
+    st.integers(3, 97),   # D
+    st.integers(4, 16),   # n
+    st.integers(2, 12),   # c
+    st.integers(2, 12),   # s
+    st.integers(0, 2**16),  # seed
+).filter(lambda t: t[3] <= t[2] <= t[1])
+
+
+@given(elastic_blocked)
+@settings(max_examples=40, deadline=None)
+def test_elastic_blocked_bands_keep_row_property(t):
+    """The blocked bands laid over c < n cohort slots (DESIGN.md §11):
+    every coordinate still has exactly s owners, all of them cohort
+    members, idle clients own nothing, the per-client load stays within
+    ``block_column_nnz(D, c, s)`` — and the whole thing IS a column
+    permutation (``block_shift_permutation``) of the property-tested core
+    block template, so Appendix A.1's unbiasedness argument applies."""
+    D, n, c, s, seed = t
+    rng = np.random.default_rng(seed)
+    cohort = np.sort(rng.choice(n, size=c, replace=False))
+    off = int(rng.integers(0, c))
+    slot_of = np.full(n, -1)
+    slot_of[cohort] = np.arange(c)
+    # the engine's closed form: (block(k) - slot_of[i] - off) mod c < s
+    chunk = -(-D // c)
+    blk = np.arange(D) // chunk
+    own = (slot_of[:, None] >= 0) & (
+        ((blk[None, :] - slot_of[:, None] - off) % c) < s
+    )
+    assert (own.sum(axis=0) == s).all()  # exactly s owners per coordinate
+    assert not own[slot_of < 0].any()  # idle clients own nothing
+    assert own.sum(axis=1).max() <= masks.block_column_nnz(D, c, s)
+    perm = masks.block_shift_permutation(jnp.asarray(off), c, s)
+    q = np.asarray(
+        masks.mask_from_permutation(perm, D, c, s, blocked=True)
+    )
+    np.testing.assert_array_equal(own[cohort].astype(np.int8), q.T)
+
+
 @given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 10**6))
 @settings(max_examples=40, deadline=None)
 def test_blocked_aggregation_exact_at_consensus_ragged(c, s, seed):

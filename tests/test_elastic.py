@@ -1,0 +1,347 @@
+"""Elastic partial participation (DESIGN.md §11): the dist engine against
+the paper-faithful Algorithm 1 semantics at c < n.
+
+* One elastic engine round == a line-for-line transliteration of
+  ``repro.core.tamuna.round_step`` (cohort gather, local steps from the
+  shared model, mask from ``repro.core.masks.mask_from_permutation`` —
+  cyclic perm for masked_psum, ``block_shift_permutation`` for block_rs —
+  1/s aggregation, cohort-only h-update, next-cohort DownCom), at
+  n=16, c=4 on a single device (the n-override placement), <= 1e-6.
+* Clients sitting out a round are bitwise untouched (x, h, AdamW moments).
+* Idle clients provably do no gradient work: compiled-HLO FLOPs of the
+  elastic round scale with c, not n.
+* ``run_rounds`` with an availability-driven ``CohortPlan``: mid-run
+  checkpoint round-trip, global-round plan indexing on the continuation.
+* ``CohortPlan`` / availability model unit behaviour (host-side).
+"""
+
+import numpy as np
+import pytest
+
+
+def test_cohort_plan_deterministic_and_availability_gated():
+    from repro.dist import cohort as cm
+
+    n, c = 12, 4
+    plan = cm.CohortPlan(seed=5, n=n, c=c)
+    a, b = plan.cohort(7), cm.CohortPlan(seed=5, n=n, c=c).cohort(7)
+    np.testing.assert_array_equal(a, b)  # pure in (seed, round)
+    assert len(set(a.tolist())) == c and (np.diff(a) > 0).all()
+    assert plan.cohort(8).tolist() != a.tolist()  # rounds differ
+
+    # hard-down clients are never drafted while >= c clients are up
+    p_up = np.ones(n)
+    p_up[:3] = 0.0
+    gated = cm.CohortPlan(
+        seed=1, n=n, c=c,
+        availability=cm.BernoulliAvailability(p_up=p_up, seed=2),
+    )
+    for r in range(30):
+        assert (gated.cohort(r) >= 3).all(), r
+    # ...but the plan still fills the cohort when the fleet is short
+    mostly_down = cm.CohortPlan(
+        seed=1, n=n, c=c,
+        availability=cm.BernoulliAvailability(p_up=np.zeros(n), seed=2),
+    )
+    assert len(mostly_down.cohort(0)) == c
+
+    # Markov streams are lazily advanced and replayable
+    mk = cm.MarkovAvailability(p_fail=0.4, p_recover=0.5, n=n, seed=3)
+    s10 = mk.states(10).copy()
+    mk2 = cm.MarkovAvailability(p_fail=0.4, p_recover=0.5, n=n, seed=3)
+    np.testing.assert_array_equal(s10, mk2.states(10))
+    assert mk.states(0).all()  # everyone starts up
+
+    # weights bias selection: a heavily weighted client appears in nearly
+    # every cohort
+    w = np.ones(n)
+    w[5] = 1e6
+    weighted = cm.CohortPlan(seed=9, n=n, c=c, weights=w)
+    hits = sum(5 in weighted.cohort(r) for r in range(50))
+    assert hits >= 45, hits
+
+
+def test_elastic_round_matches_algorithm1_reference(subproc):
+    """n=16 clients on ONE device (the n-override placement): one elastic
+    engine round at L=3 equals the Algorithm-1 reference — mirroring
+    ``repro.core.tamuna.round_step`` with the mask built by
+    ``repro.core.masks`` — for both uplinks, <= 1e-6; idle clients bitwise
+    untouched; sum_i h_i == 0 preserved; cohort-based float accounting."""
+    subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import masks
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import rounds, tamuna_dp
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+N, C, S, L = 16, 4, 2, 3
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=N)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+data = pipe.device_data()
+sampler = device_sampler(dcfg, cfg, mesh)
+
+def flat(tree, rows):
+    return jnp.concatenate(
+        [a.reshape(rows, -1) for a in jax.tree.leaves(tree)], axis=1)
+
+for uplink in ("masked_psum", "block_rs"):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=C, s=S, p=0.5,
+                                      uplink=uplink)
+
+    def mk_state():
+        st = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg, n=N)
+        # distinct per-client h so the control-variate term is non-trivial
+        h0 = jax.tree.map(
+            lambda a: 0.01 * jax.random.normal(
+                jax.random.key(hash(a.shape) % 97), a.shape, jnp.float32),
+            st.h)
+        h0 = jax.tree.map(lambda a: a - a.mean(axis=0, keepdims=True), h0)
+        return st._replace(h=h0)
+
+    # two independent copies: the engine DONATES its carry (state0's
+    # buffers die inside round_fn), the reference reads its own
+    state0 = mk_state()
+
+    round_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
+                                    max_L=8, n=N)
+    assert round_fn.elastic
+    carry = rounds.init_carry(mk_state(), jax.random.key(11),
+                              flush_every=1)
+    dk = np.asarray(carry.data_key).copy()
+    ck = np.asarray(carry.comm_key).copy()
+    carry = round_fn(carry, data, L, 0)
+    got = carry.state
+
+    # ---- Algorithm-1 reference (mirrors repro.core.tamuna.round_step) --
+    ckey = rounds.comm_round_key(ck, 0)
+    cohort = np.asarray(tamuna_dp.round_cohort(ckey, N, C))
+    nxt = np.asarray(tamuna_dp.round_cohort(rounds.comm_round_key(ck, 1),
+                                            N, C))
+    _, k2 = jax.random.split(tamuna_dp._as_key(ckey))
+
+    # L local steps x <- x - gamma*(g - h) for the cohort only, batches
+    # keyed by the ACTUAL client ids (tamuna lines 5-9; the local rule is
+    # the engine's own step operator — pinned elsewhere against the
+    # closed form — replayed per step on the gathered compact state, so
+    # the comm-side transliteration below is compared at tight tolerance
+    # instead of through f32 gradient-recompilation drift)
+    local = jax.jit(tamuna_dp.make_local_step(cfg, tcfg))
+    work = tamuna_dp.gather_cohort(state0, jnp.asarray(cohort))
+    for t in range(L):
+        batch = sampler(data, rounds.data_step_key(dk, t),
+                        clients=jnp.asarray(cohort))
+        work, _ = local(work, **batch)
+    X = work.x
+
+    # the round mask from the CORE's generator (tamuna line 11):
+    # cyclic -> the comm key's permutation over cohort slots; blocked ->
+    # the shift realized as a template column permutation.  Built PER
+    # LEAF (the dist engine chunks/bands each leaf independently) and
+    # concatenated in the same flat order.
+    if uplink == "masked_psum":
+        perm = jax.random.permutation(k2, C)
+    else:
+        off = jax.random.randint(k2, (), 0, C, jnp.int32)
+        perm = masks.block_shift_permutation(off, C, S)
+    eta = tcfg.eta_(N)
+    xr = np.asarray(flat(state0.x, N), np.float64)
+    hr = np.asarray(flat(state0.h, N), np.float64)
+    Xf = np.asarray(flat(X, C), np.float64)
+    D = xr.shape[1]
+    q = np.concatenate([
+        np.asarray(masks.mask_from_permutation(
+            perm, int(np.prod(a.shape[1:])), C, S,
+            blocked=(uplink == "block_rs")), np.float64)
+        for a in jax.tree.leaves(state0.x)
+    ], axis=0).T
+    # aggregation + cohort h-update (tamuna lines 12-14), then the
+    # DownCom to the NEXT round's cohort (line 4 of round r+1)
+    x_bar = (q * Xf).sum(axis=0) / S
+    hr[cohort] += (eta / tcfg.gamma) * q * (x_bar[None] - Xf)
+    xr[cohort] = Xf
+    xr[nxt] = x_bar[None]
+
+    err_x = np.abs(np.asarray(flat(got.x, N), np.float64) - xr).max()
+    err_h = np.abs(np.asarray(flat(got.h, N), np.float64) - hr).max()
+    assert err_x <= 2e-6, (uplink, err_x)
+    assert err_h <= 2e-6, (uplink, err_h)
+    # sum_i h_i == 0 survives the cohort-only update
+    assert np.abs(np.asarray(flat(got.h, N)).sum(axis=0)).max() < 1e-5
+    # clients outside cohort(0) and cohort(1): bitwise untouched
+    idle = sorted(set(range(N)) - set(cohort) - set(nxt))
+    assert idle, (cohort, nxt)
+    x0f, g_xf = np.asarray(flat(state0.x, N)), np.asarray(flat(got.x, N))
+    h0f, g_hf = np.asarray(flat(state0.h, N)), np.asarray(flat(got.h, N))
+    np.testing.assert_array_equal(g_xf[idle], x0f[idle])
+    np.testing.assert_array_equal(g_hf[idle], h0f[idle])
+    # h untouched for EVERY non-cohort client (DownCom only writes x)
+    out = sorted(set(range(N)) - set(cohort))
+    np.testing.assert_array_equal(g_hf[out], h0f[out])
+    # float accounting on the COHORT template
+    dims = [int(np.prod(a.shape[1:])) for a in jax.tree.leaves(state0.x)]
+    if uplink == "block_rs":
+        up = sum(masks.block_column_nnz(d_, C, S) for d_ in dims)
+    else:
+        up = sum(masks.column_nnz(d_, C, S) for d_ in dims)
+    assert float(got.up_floats) == float(up), uplink
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_idle_clients_do_zero_gradient_compute(subproc):
+    """FLOP regression: compiled elastic-round FLOPs scale with the cohort.
+    At n=8, c=2 the elastic program must cost well under half the all-rows
+    program (grads dominate; c/n = 0.25), and AdamW moments of clients
+    sitting out stay bitwise frozen through a plan-driven round."""
+    subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import rounds, tamuna_dp
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32,
+                  remat=False)
+N, C = 8, 2
+dcfg = DataConfig(seq_len=16, per_client_batch=2, vocab=64, seed=0,
+                  n_clients=N)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+sampler = device_sampler(dcfg, cfg, mesh)
+tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=C, s=2, p=0.5)
+
+def flops_of(elastic):
+    fn = rounds.make_fused_round(cfg, tcfg, mesh, sample_batch=sampler,
+                                 L=4, n=N, elastic=elastic)
+    state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg, n=N)
+    compiled = jax.jit(fn).lower(
+        state, jax.random.key_data(jax.random.key(1)), pipe.device_data()
+    ).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: [dict]
+        cost = cost[0] if cost else {}
+    return float(cost.get("flops", 0.0))
+
+fe, fa = flops_of(True), flops_of(False)
+assert fe > 0 and fa > 0, (fe, fa)
+# c/n = 0.25 of the gradient work + comm/gather overhead; anything near
+# parity means idle rows are still doing gradient compute
+assert fe < 0.6 * fa, (fe, fa, fe / fa)
+
+# AdamW moments of sat-out clients stay bitwise frozen under an explicit
+# host plan (cohort AND down pinned)
+tcfg = tamuna_dp.DistTamunaConfig(gamma=0.01, c=C, s=2, p=0.5,
+                                  local_opt="adamw", uplink="block_rs")
+round_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
+                                max_L=4, n=N)
+state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg, n=N)
+carry = rounds.init_carry(state, jax.random.key(3), flush_every=1)
+before = jax.tree.map(np.asarray, carry.state)
+cohort = jnp.asarray([1, 4], jnp.int32)
+down = jnp.zeros((N,), bool).at[jnp.asarray([2, 4])].set(True)
+carry = round_fn(carry, pipe.device_data(), 3, 0, cohort=cohort,
+                 down=down)
+after = jax.tree.map(np.asarray, carry.state)
+idle = [0, 3, 5, 6, 7]  # not in cohort, not DownCom'd
+for name in ("x", "h"):
+    for a, b in zip(jax.tree.leaves(getattr(before, name)),
+                    jax.tree.leaves(getattr(after, name))):
+        np.testing.assert_array_equal(a[idle], b[idle])
+for tree in ("mu", "nu"):
+    for a, b in zip(jax.tree.leaves(getattr(before.opt, tree)),
+                    jax.tree.leaves(getattr(after.opt, tree))):
+        np.testing.assert_array_equal(a[[0, 2, 3, 5, 6, 7]],
+                                      b[[0, 2, 3, 5, 6, 7]])
+# ...and the DownCom'd rows DID receive the new server model
+xa = jax.tree.leaves(after.x)[0]
+np.testing.assert_array_equal(xa[2], xa[4])
+assert not np.array_equal(xa[2], jax.tree.leaves(before.x)[0][2])
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_run_rounds_plan_checkpoint_roundtrip(subproc):
+    """Mid-``run_rounds`` checkpoint with an availability-driven
+    ``CohortPlan``: bit-exact state round-trip, and the continuation
+    indexes the plan by the GLOBAL round counter — clients the plan
+    leaves idle in the continued round stay bitwise frozen."""
+    subproc("""
+import os, tempfile
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import cohort as cm
+from repro.dist import rounds, sharding, tamuna_dp
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=n)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=2, s=2, p=0.5)
+plan = cm.CohortPlan(
+    seed=17, n=n, c=2,
+    availability=cm.MarkovAvailability(p_fail=0.3, p_recover=0.6, n=n,
+                                       seed=4),
+)
+state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                  tamuna_dp.state_pspecs(state, cfg, mesh),
+                  is_leaf=lambda x: isinstance(x, P))
+state = jax.device_put(state, sh)
+round_fn = rounds.make_round_fn(
+    cfg, tcfg, mesh, sample_batch=device_sampler(dcfg, cfg, mesh), max_L=4,
+    elastic=True)  # forced: one client per shard here (default = all-rows)
+d = tempfile.mkdtemp()
+final, last = rounds.run_rounds(
+    state, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(3), rounds=2, rng=np.random.default_rng(0),
+    p=tcfg.p, flush_every=2, checkpoint_dir=d, checkpoint_every=2,
+    plan=plan)
+assert int(final.round) == 2
+
+like = jax.tree.map(jnp.zeros_like, final)
+restored = checkpoint.restore(os.path.join(d, 'step_2'), like)
+for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(restored)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# continuation: round index resumes at state.round == 2, so the engine
+# must consume plan.cohort(2)/plan.cohort(3) — anyone else stays frozen
+restored = jax.device_put(restored, sh)
+before = {k: np.asarray(v) for k, v in
+          zip(['x', 'h'], [jax.tree.leaves(restored.x)[0],
+                           jax.tree.leaves(restored.h)[0]])}
+cont, _ = rounds.run_rounds(
+    restored, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(4), rounds=1, rng=np.random.default_rng(1),
+    p=tcfg.p, flush_every=1, plan=plan)
+assert int(cont.round) == 3
+active = set(plan.cohort(2).tolist()) | set(plan.cohort(3).tolist())
+idle = sorted(set(range(n)) - active)
+xa = np.asarray(jax.tree.leaves(cont.x)[0])
+ha = np.asarray(jax.tree.leaves(cont.h)[0])
+np.testing.assert_array_equal(xa[idle], before['x'][idle])
+np.testing.assert_array_equal(ha[idle], before['h'][idle])
+trained = sorted(set(plan.cohort(2).tolist()))
+assert any(not np.array_equal(ha[i], before['h'][i]) for i in trained)
+print("OK")
+""", devices=4, timeout=1500)

@@ -114,6 +114,35 @@ def test_uplink_h_update_sweep(n, d, m, s):
     np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_exp))
 
 
+@pytest.mark.parametrize("n,d,m,s", [
+    (4, 257, 3, 2),
+    (6, 4097, 5, 2),
+])
+def test_uplink_h_update_down_mask(n, d, m, s):
+    """The DownCom row mask (elastic PP): masked rows get x_bar, the rest
+    keep x bit-exactly, h-update unaffected."""
+    x, h, slot, band = _uplink_operands(n, d, m, 3 * n + d)
+    rng = np.random.default_rng(d)
+    down = jnp.asarray(rng.integers(0, 2, size=n).astype(np.int32))
+    x_bar = ref.uplink_masked_sum_ref(x, slot, band, m, s)
+    h_new, x_new = ops.uplink_h_update(
+        x, h, x_bar, slot, band, m, s, 0.25, down=down, block=256
+    )
+    h_exp, x_exp = ref.uplink_h_update_ref(x, h, x_bar, slot, band, m, s,
+                                           0.25, down=down)
+    np.testing.assert_allclose(
+        np.asarray(h_new), np.asarray(h_exp), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_exp))
+    dn = np.asarray(down).astype(bool)
+    np.testing.assert_array_equal(np.asarray(x_new)[~dn],
+                                  np.asarray(x)[~dn])
+    np.testing.assert_array_equal(
+        np.asarray(x_new)[dn],
+        np.broadcast_to(np.asarray(x_bar), (int(dn.sum()), d)),
+    )
+
+
 @given(
     st.integers(2, 10), st.integers(2, 12), st.integers(2, 12),
     st.integers(1, 700), st.integers(0, 2**16),

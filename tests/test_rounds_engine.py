@@ -6,9 +6,12 @@ import pytest
 
 def test_fused_round_equals_per_step(subproc):
     """One engine round matches (<=1e-6) L per-step local_step calls +
-    comm_step replayed on the same key schedule — for both uplinks and
-    local_opt='adamw', at L spanning single- and multi-chunk buckets — and
-    the compile cache stays within log2(max_L)+1."""
+    comm_step replayed on the same key schedule — for both uplinks
+    (block_rs now at c < n too) and local_opt='adamw', at L spanning
+    single- and multi-chunk buckets — and the compile cache stays within
+    log2(max_L)+1.  At c < n the replay runs the ELASTIC semantics: gather
+    the device-derived cohort, train the compact state on cohort-only
+    batches, scatter, comm with the cohort and next-cohort DownCom."""
     subproc("""
 import numpy as np
 import jax, jax.numpy as jnp
@@ -32,7 +35,7 @@ sampler = device_sampler(dcfg, cfg, mesh)
 
 for uplink, opt in [("masked_psum", "sgd"), ("block_rs", "sgd"),
                     ("masked_psum", "adamw")]:
-    c = n if uplink == "block_rs" else 3
+    c = 3
     tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
                                       uplink=uplink, local_opt=opt)
     def mk_state():
@@ -42,8 +45,12 @@ for uplink, opt in [("masked_psum", "sgd"), ("block_rs", "sgd"),
                           is_leaf=lambda x: isinstance(x, P))
         return jax.device_put(st, sh)
 
+    # elastic forced: this 4x2 host mesh has one client per data shard,
+    # where the default keeps the all-rows body (the gather cannot vacate
+    # hardware there) — the replay below tests the elastic semantics
     round_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
-                                    max_L=8)
+                                    max_L=8, elastic=True)
+    assert round_fn.elastic and round_fn.c == c and round_fn.n == n
     local = jax.jit(tamuna_dp.make_local_step(cfg, tcfg))
     comm = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh))
 
@@ -55,15 +62,24 @@ for uplink, opt in [("masked_psum", "sgd"), ("block_rs", "sgd"),
         dk = np.asarray(carry.data_key).copy()
         ck = np.asarray(carry.comm_key).copy()
 
-        # per-step reference on the SAME key schedule
+        # per-step reference on the SAME key schedule and cohort plan
         ref = mk_state()
+        cohort = tamuna_dp.round_cohort(
+            rounds.comm_round_key(ck, ref.round), n, c)
+        down = tamuna_dp.member_mask(
+            tamuna_dp.round_cohort(
+                rounds.comm_round_key(ck, ref.round + 1), n, c), n)
+        work = tamuna_dp.gather_cohort(ref, cohort)
         acc = 0.0
         for t in range(L):
-            batch = sampler(data, rounds.data_step_key(dk, t))
-            ref, m = local(ref, **batch)
+            batch = sampler(data, rounds.data_step_key(dk, t),
+                            clients=cohort)
+            work, m = local(work, **batch)
             acc += float(m["loss"])
+        ref = tamuna_dp.scatter_cohort(ref, work, cohort)
         ckey = rounds.comm_round_key(ck, ref.round)
-        ref = comm(ref, jax.random.key_data(ckey))
+        ref = comm(ref, jax.random.key_data(ckey), cohort=cohort,
+                   down=down)
 
         carry = round_fn(carry, data, L, 0)
 

@@ -41,6 +41,36 @@ def test_train_driver_end_to_end(tmp_path):
     assert (tmp_path / "ckpt" / "step_6").exists()
 
 
+def test_train_driver_block_rs_partial_participation(tmp_path):
+    """The blocked uplink at c < n end to end (ISSUE 5 acceptance), with
+    the client population decoupled from the mesh (--clients 8 on 4 data
+    shards: 2 stacked client rows per shard) — the elastic engine trains
+    only the cohort and the blocked bands lie over its slots."""
+    out = _run([
+        "-m", "repro.launch.train", "--arch", "gemma2-2b", "--reduced",
+        "--rounds", "4", "--seq-len", "32", "--per-client-batch", "1",
+        "--data-parallel", "4", "--model-parallel", "1",
+        "--clients", "8", "--cohort", "4", "--uplink", "block_rs",
+        "--log", str(tmp_path / "m.csv"),
+    ], devices=4)
+    assert "final loss" in out
+    assert (tmp_path / "m.csv").exists()
+
+
+def test_train_driver_no_fuse_elastic(tmp_path):
+    """The per-step escape hatch under the elastic gate: the gathered
+    compact state shares no buffers with the donated step in a way that
+    deletes the full state's scalars (regression — the first cut crashed
+    comm_step with 'Array has been deleted')."""
+    out = _run([
+        "-m", "repro.launch.train", "--arch", "gemma2-2b", "--reduced",
+        "--rounds", "2", "--seq-len", "32", "--per-client-batch", "1",
+        "--data-parallel", "1", "--model-parallel", "1",
+        "--clients", "4", "--cohort", "2", "--no-fuse",
+    ], devices=1)
+    assert "final loss" in out
+
+
 def test_serve_driver_end_to_end():
     out = _run([
         "-m", "repro.launch.serve", "--arch", "rwkv6-7b", "--reduced",
