@@ -131,6 +131,18 @@ def trajectory_rows() -> list:
         add("elastic", "min speedup vs all-rows, any c < n row",
             el["min_speedup_any_partial_row"], acc["any_partial_row_min"])
 
+    fl = _load("BENCH_faults.json")
+    if fl:
+        acc = fl["acceptance"]
+        ratio = fl.get("quorum_ratio_at_p02")
+        add("faults", "quorum rounds-to-target vs fault-free at p=0.2",
+            ratio if ratio is not None else float("inf"),
+            acc["quorum_ratio_max"], higher_is_better=False)
+        add("faults", "wait_all control stalls/biases at p=0.2 (1=yes)",
+            float(bool(fl.get("wait_all_control_stalls_at_p02"))), 1.0)
+        add("faults", "deterministic fault replay bitwise (1=yes)",
+            float(bool(fl.get("deterministic_replay_ok"))), 1.0)
+
     return rows
 
 

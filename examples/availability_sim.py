@@ -25,7 +25,15 @@ cohort sampling through ``repro.dist.cohort.CohortPlan`` into the elastic
 round engine (``rounds.run_rounds(plan=...)``, DESIGN.md §11), and the
 plan's own cohorts price the simulated wall clock.
 
-  PYTHONPATH=src python examples/availability_sim.py [--dist]
+``--dist --faults`` goes one step further into the fault-tolerant driver
+(DESIGN.md §12): a deterministic ``FaultPlan`` drops uplinks mid-round,
+and the table compares the fault-free run against the quorum policy
+(survivor-aware aggregation, cohort resample + backoff on a quorum miss)
+and the wait_all control (biased 1/s aggregation of whatever arrived) —
+reporting retries, quorum misses, and the simulated wall clock including
+retry backoff.
+
+  PYTHONPATH=src python examples/availability_sim.py [--dist [--faults]]
 """
 
 import argparse
@@ -175,16 +183,84 @@ def dist_main(rounds):
           "crossover as the convex story, now on the system engine.")
 
 
+def faults_main(rounds):
+    import jax
+
+    from repro.configs import registry
+    from repro.data import DataConfig, SyntheticTokenPipeline, device_sampler
+    from repro.dist import cohort as cohort_mod
+    from repro.dist import faults as faults_mod
+    from repro.dist import rounds as rounds_mod
+    from repro.dist import tamuna_dp
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    n, c = 8, 2
+    cfg = registry.get_reduced_config("gemma2-2b")
+    dcfg = DataConfig(seq_len=32, per_client_batch=2, vocab=512, seed=0,
+                      n_clients=n)
+    pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.34)
+    fp = faults_mod.FaultPlan(
+        seed=11, n=n, model=faults_mod.FaultModel(p_drop=0.25)
+    )
+
+    scenarios = [
+        ("fault-free", dict()),
+        ("quorum", dict(faults=fp, policy="quorum", max_retries=3,
+                        backoff0=0.5)),
+        ("wait_all+drops", dict(faults=fp, policy="wait_all")),
+    ]
+    print(f"fault-tolerant dist engine: n={n} c={c} ({cfg.name}), "
+          f"{rounds} rounds, Bernoulli dropout p_drop=0.25 "
+          f"(deterministic, seed=11)\n")
+    print(f"{'scenario':>15} {'loss':>8} {'arrivals':>9} {'retries':>8} "
+          f"{'q-miss':>7} {'sim wall-clock':>15}")
+    for name, kw in scenarios:
+        plan = cohort_mod.CohortPlan(seed=7, n=n, c=c)
+        state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg,
+                                     n=n)
+        round_fn = rounds_mod.make_round_fn(
+            cfg, tcfg, mesh,
+            sample_batch=device_sampler(dcfg, cfg, mesh), max_L=8, n=n,
+        )
+        logger = _RowLogger()
+        state, last = rounds_mod.run_rounds(
+            state, round_fn=round_fn, data=pipe.device_data(),
+            key=jax.random.key(1), rounds=rounds,
+            rng=np.random.default_rng(0), p=tcfg.p,
+            flush_every=min(10, rounds), logger=logger, plan=plan, **kw,
+        )
+        arr = sum(r.get("arrivals", c) for r in logger.rows)
+        ret = sum(r.get("retries", 0) for r in logger.rows)
+        miss = sum(r.get("quorum_miss", 0) for r in logger.rows)
+        clock = sum(
+            r.get("round_latency_s", 0.0) + max(int(r["L"]), 1) * 1.0
+            for r in logger.rows
+        )
+        print(f"{name:>15} {last['loss']:>8.4f} {arr:>9} {ret:>8} "
+              f"{miss:>7} {clock:>15.1f}")
+    print("\nthe quorum policy pays retries/backoff to keep every round "
+          "above quorum with unbiased survivor means; the wait_all "
+          "control aggregates whatever arrived at the legacy 1/s scale — "
+          "the bias BENCH_faults.json quantifies on the convex problem.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dist", action="store_true",
                     help="run the straggler story on the dist round engine "
                          "with an availability-driven cohort plan")
+    ap.add_argument("--faults", action="store_true",
+                    help="with --dist: run the fault-tolerant driver "
+                         "(dropout + quorum vs wait_all) — DESIGN.md §12")
     ap.add_argument("--rounds", type=int, default=0,
                     help="rounds per setting (default: 3000 convex, "
                          "12 dist)")
     args = ap.parse_args()
-    if args.dist:
+    if args.dist and args.faults:
+        faults_main(args.rounds or 12)
+    elif args.dist:
         dist_main(args.rounds or 12)
     else:
         convex_main(args.rounds or 3000)

@@ -6,6 +6,7 @@ family-dispatching model API.
   tamuna_dp    DistTamunaConfig / init_state / local + comm step builders,
                cohort gather/scatter (elastic PP, §11)
   cohort       host-side cohort plans + availability models (§11)
+  faults       deterministic fault plans: dropout / corruption / delays (§12)
   rounds       donated scanned round engine (make_round_fn / run_rounds)
   comm_ws      flat comm workspace: the mask-free fused comm step (§9)
   block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
@@ -16,6 +17,7 @@ from repro.dist import (
     block_uplink,
     cohort,
     comm_ws,
+    faults,
     model_api,
     rounds,
     sharding,
@@ -26,6 +28,7 @@ __all__ = [
     "block_uplink",
     "cohort",
     "comm_ws",
+    "faults",
     "model_api",
     "rounds",
     "sharding",

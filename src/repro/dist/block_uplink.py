@@ -102,6 +102,8 @@ def block_rs_aggregate(
     c: Optional[int] = None,
     slot_of: Optional[Any] = None,
     down: Optional[Any] = None,
+    arrived: Optional[Any] = None,
+    correct: bool = True,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
@@ -130,14 +132,16 @@ def block_rs_aggregate(
     parameters (DESIGN.md §11): the ownership bands are laid over the
     ``c`` cohort slots (``slot_of[i]`` in ``[0, c)``, -1 idle) and the
     DownCom targets only the ``down`` rows.  Defaults = full
-    participation, the original template.
+    participation, the original template.  ``arrived``/``correct`` are
+    the fault-tolerant aggregation inputs (DESIGN.md §12, see
+    ``comm_ws.blocked_comm``).
     """
     del model_cfg
     if meshed is None:
         meshed = mesh is not None
     return comm_ws.blocked_comm(
         x, h, off, n, tcfg.s, eta / tcfg.gamma, impl=impl, block=block,
-        c=c, slot_of=slot_of, down=down,
+        c=c, slot_of=slot_of, down=down, arrived=arrived, correct=correct,
         meshed=meshed, mesh=mesh, pspecs=pspecs,
         shard_kernels=shard_kernels,
     )

@@ -126,26 +126,57 @@ class CohortPlan:
             np.asarray(weights, np.float64)
         )
         self._logw = logw
-        self._cache: Dict[int, np.ndarray] = {}
+        self._cache: Dict[tuple, np.ndarray] = {}
+        # (ids, first, last) quarantine windows — payload-guard feedback
+        self._quarantine: list = []
 
-    def cohort(self, rnd: int) -> np.ndarray:
-        rnd = int(rnd)
-        got = self._cache.get(rnd)
+    def cohort(self, rnd: int, attempt: int = 0) -> np.ndarray:
+        """The (sorted) cohort of round ``rnd``.  ``attempt`` indexes
+        quorum *retries* of the fault-tolerant driver (DESIGN.md §12):
+        each retry resamples the cohort from a fresh stream; attempt 0
+        keys exactly as before, so existing schedules replay unchanged."""
+        rnd, attempt = int(rnd), int(attempt)
+        key = (rnd, attempt)
+        got = self._cache.get(key)
         if got is not None:
             return got
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, 211, rnd])
-        )
+        words = ([self.seed, 211, rnd] if attempt == 0
+                 else [self.seed, 211, rnd, attempt])
+        rng = np.random.default_rng(np.random.SeedSequence(words))
         g = rng.gumbel(size=self.n) + self._logw
         if self.availability is not None:
             g = np.where(self.availability.states(rnd), g,
                          g + _DOWN_LOG_WEIGHT)
+        for ids, first, last in self._quarantine:
+            if first <= rnd <= last:
+                g[ids] = g[ids] + _DOWN_LOG_WEIGHT
         top = np.argpartition(-g, self.c - 1)[:self.c]
         out = np.sort(top).astype(np.int32)
-        self._cache[rnd] = out
+        self._cache[key] = out
         return out
 
-    def member_mask(self, rnd: int) -> np.ndarray:
+    def member_mask(self, rnd: int, attempt: int = 0) -> np.ndarray:
         mask = np.zeros(self.n, bool)
-        mask[self.cohort(rnd)] = True
+        mask[self.cohort(rnd, attempt)] = True
         return mask
+
+    def quarantine(self, clients, first_round: int,
+                   last_round: int) -> None:
+        """Penalize ``clients`` by the unavailability weight floor for
+        rounds ``[first_round, last_round]`` (inclusive) — the payload
+        guard's feedback into selection (DESIGN.md §12): a client whose
+        uplink failed the nonfinite guard sits out R rounds, drafted
+        again only when fewer than ``c`` healthy clients remain (same
+        soft-floor semantics as the availability gate, so the paper's
+        exactly-``c``-participants invariant holds throughout).  Cached
+        draws inside the window are purged; the driver quarantines from
+        detection round + 2 (cohort ``g+1`` is already committed as round
+        ``g``'s DownCom target), so no *executed* round is rewritten."""
+        ids = np.asarray(clients, np.int64).reshape(-1)
+        if ids.size == 0:
+            return
+        first_round, last_round = int(first_round), int(last_round)
+        self._quarantine.append((ids, first_round, last_round))
+        for k in [k for k in self._cache
+                  if first_round <= k[0] <= last_round]:
+            del self._cache[k]

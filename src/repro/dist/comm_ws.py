@@ -85,6 +85,23 @@ Both templates take an optional ``down`` row mask: the DownCom writes
 partial participation — idle clients' ``x`` passes through bit-exactly);
 ``down=None`` broadcasts to every row, the full-participation behaviour.
 
+Fault tolerance (DESIGN.md §12): both templates also take an optional
+``arrived`` mask over the client rows — a cohort member whose uplink never
+lands is demoted to idle (``slot = -1``: owns nothing, contributes
+nothing, NaN payloads included).  With ``correct=True`` (survivor-aware
+aggregation) the exact ``1/s`` rebuild becomes the per-coordinate
+``1/(arrived owner count)`` — unbiased whenever dropout is independent of
+the payload — and *uncovered* coordinates (every owner dropped) are left
+bitwise untouched in BOTH h and x, extending §11's idle-row semantics to
+single coordinates; ``correct=False`` keeps the ``1/s`` division and the
+full DownCom (the biased wait-all-with-drops control the fault benchmark
+measures against).  Under an all-``True`` arrival mask the corrected path
+computes bit-identical values to ``arrived=None`` on the dense and ws
+paths; the kernel path's two-output counts kernel lets XLA reassociate
+the client-axis reduction (≤1 ulp — which is why the round driver passes
+``arrived=None`` outright for a zero-fault plan, keeping the program
+itself identical).
+
 All functions are pure jnp over the stacked client axis (mesh-free and
 mesh-agnostic); callers pick ``meshed`` per placement, and ``impl`` per
 backend (``resolve_impl``).
@@ -257,37 +274,50 @@ def _block_band_np(dims: Tuple[int, ...], n: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
-def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None):
+def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
+                        sanitize=False, survivor=False):
     """One leaf of the dense-mask blocked reference: materialized
     ``(n, D)`` ownership (``(slot_i + block(k)) mod m < s``, the shifted
     blocked template over the ``m`` cohort slots — under full
     participation ``slot_i = (-(i + off)) mod n`` recovers the original
     ``(block(k) - i - off) mod n < s``; idle rows ``slot = -1`` own
     nothing), masked sum over all client rows, 1/s rebuild, masked
-    h-update, DownCom."""
+    h-update, DownCom.  ``sanitize`` zeroes idle rows before the
+    multiply-mask math (this path multiplies by ``qf`` instead of
+    selecting, and ``NaN * 0 = NaN`` — a dropped client's corrupted
+    payload would otherwise poison x_bar); ``survivor`` switches to the
+    per-coordinate arrived-owner-count rebuild."""
     n = xl.shape[0]
     D = int(np.prod(xl.shape[1:]))
     band = jnp.asarray(_block_leaf_band_np(D, m))[None, :]  # (1, D)
     sl = slot[:, None]
     qf = ((sl >= 0) & (((sl + band) % m) < s)).astype(jnp.float32)
     xf = xl.reshape(n, D).astype(jnp.float32)
-    x_bar = (xf * qf).sum(axis=0) / s
+    if sanitize:
+        xf = jnp.where(sl >= 0, xf, 0.0)
+    num = (xf * qf).sum(axis=0)
+    if survivor:
+        x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
+    else:
+        x_bar, covered = num / s, None
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
     return (
-        _downcom(xl, x_bar, down),
+        _downcom(xl, x_bar, down, covered),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
 
-def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None):
+def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None,
+                       sanitize=False, survivor=False):
     """One leaf of the reference masked_psum comm step: materialized
     ``(n, D)`` mask (both template regimes of paper Fig. 1), masked sum,
     1/s rebuild, masked h-update, broadcast.  The mask is derived from the
     property-tested ``masks.mask_from_permutation`` (identity permutation:
     ``slot`` already IS the template column), so this ground truth never
-    drifts from the algorithm spec the fused paths are tested against."""
+    drifts from the algorithm spec the fused paths are tested against.
+    ``sanitize``/``survivor``: see ``_dense_blocked_leaf``."""
     from repro.core import masks  # jax/np only; no x64 side effect
 
     n = xl.shape[0]
@@ -300,12 +330,18 @@ def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None):
         q.T[jnp.clip(slot, 0)] & (sl >= 0) & (sl < c)
     ).astype(jnp.float32)
     xf = xl.reshape(n, D).astype(jnp.float32)
-    x_bar = (xf * qf).sum(axis=0) / s
+    if sanitize:
+        xf = jnp.where(sl >= 0, xf, 0.0)
+    num = (xf * qf).sum(axis=0)
+    if survivor:
+        x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
+    else:
+        x_bar, covered = num / s, None
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
     return (
-        _downcom(xl, x_bar, down),
+        _downcom(xl, x_bar, down, covered),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
@@ -331,39 +367,67 @@ def _wrapped_owned(slot2, band, m: int, s: int):
     )
 
 
-def _downcom(xl, x_bar, down):
+def _downcom(xl, x_bar, down, covered=None):
     """DownCom of one leaf: ``down`` rows (all when None) receive
     ``x_bar`` in storage dtype; every other row keeps its ``x``
-    bit-exactly (idle clients under elastic PP, DESIGN.md §11)."""
+    bit-exactly (idle clients under elastic PP, DESIGN.md §11).
+    ``covered`` additionally gates per coordinate: columns with no
+    arrived owner keep their ``x`` bit-exactly (§12)."""
     n = xl.shape[0]
     D = x_bar.shape[0]
     bar = x_bar.astype(xl.dtype)[None]
-    if down is None:
-        return jnp.broadcast_to(bar, (n, D)).reshape(xl.shape)
+    if covered is None:
+        if down is None:
+            return jnp.broadcast_to(bar, (n, D)).reshape(xl.shape)
+        return jnp.where(
+            down[:, None], bar, xl.reshape(n, D)
+        ).reshape(xl.shape)
+    dm = (jnp.ones((n, 1), bool) if down is None else down[:, None])
     return jnp.where(
-        down[:, None], bar, xl.reshape(n, D)
+        dm & covered[None, :], bar, xl.reshape(n, D)
     ).reshape(xl.shape)
 
 
-def _finish_leaf(xl, hl, xf, x_bar, owned, scale, down=None):
+def _finish_leaf(xl, hl, xf, x_bar, owned, scale, down=None, covered=None):
     """The fused h-update + DownCom shared by both uplinks: reads x, h
     once, writes h_new and x_new — ownership is the branch-free predicate
-    evaluated inside the fusion, ``down`` the DownCom row mask."""
+    evaluated inside the fusion, ``down`` the DownCom row mask,
+    ``covered`` the survivor-aware per-coordinate DownCom gate (the
+    h-update needs no gate: an uncovered coordinate has no arrived owner,
+    so ``owned`` is already false on every row there)."""
     n = xl.shape[0]
     D = xf.shape[1]
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * jnp.where(
         owned, x_bar[None] - xf, 0.0
     )
     return (
-        _downcom(xl, x_bar, down),
+        _downcom(xl, x_bar, down, covered),
         h_new.astype(hl.dtype).reshape(hl.shape),
     )
 
 
+def _survivor_bar(num, cnt):
+    """``x_bar = num / max(cnt, 1)`` + the covered mask: the per-
+    coordinate 1/(arrived owner count) rebuild.  Under zero drops
+    ``cnt == s`` everywhere, so the division is bit-identical to the
+    static ``num / s``."""
+    return num / jnp.maximum(cnt, 1.0), cnt > 0
+
+
 def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int,
-                 down=None):
+                 down=None, survivor=False):
     from repro.kernels import uplink  # lazy: keep dist importable w/o pallas
 
+    if survivor:
+        num, cnt = uplink.masked_sum(
+            xw, slot, band, m, s, counts=True, block=block
+        )
+        x_bar, covered = _survivor_bar(num, cnt)
+        h_new, x_new = uplink.h_update(
+            xw, hw, x_bar, slot, band, m, s, float(scale), down=down,
+            covered=covered, block=block,
+        )
+        return x_bar, h_new, x_new
     x_bar = uplink.masked_sum(xw, slot, band, m, s, block=block)
     h_new, x_new = uplink.h_update(
         xw, hw, x_bar, slot, band, m, s, float(scale), down=down,
@@ -447,6 +511,8 @@ def _shard_comm(
     block: int,
     use_kernels: Optional[bool],
     down: Optional[jax.Array] = None,  # (n,) DownCom rows; None = all
+    faulted: bool = False,  # an arrival mask was applied to ``slot``
+    survivor: bool = False,  # per-coordinate arrived-owner-count rebuild
 ) -> Tuple[Any, Any]:
     """The shard-resident comm step: one ``shard_map`` over the dp axes.
 
@@ -484,6 +550,17 @@ def _shard_comm(
         .at[jnp.where(slot >= 0, slot, m)]
         .set(jnp.arange(n, dtype=jnp.int32))[:m]
     )
+    # under faults a dropped owner's column has NO live row, but
+    # client_of defaults it to row 0 — col_ok marks the live columns so
+    # the coarse per-block gathers can gate the phantom contribution
+    # (the predicate-based paths need no gate: slot -1 owns nothing)
+    col_ok = None
+    if faulted:
+        col_ok = (
+            jnp.zeros((m + 1,), bool)
+            .at[jnp.where(slot >= 0, slot, m)]
+            .set(True)[:m]
+        )
 
     # pad the client axis to the dp extent: padded rows are idle (slot -1,
     # zero state) — never owners, never owned — and sliced off after.
@@ -543,7 +620,8 @@ def _shard_comm(
             return (sl2 >= 0) & (sl2 < D * s) & (sl2 % D == kk[None, :])
         return _wrapped_owned(sl2, _leaf_band(i, k_arr)[None, :], m, s)
 
-    def body(xs, hs, sl, cof, dw):
+    def body(xs, hs, sl, cof, *rest):
+        cok, dw = rest if faulted else (None, rest[0])
         row0 = _shr.dp_shard_index(mesh) * rows
         sl2 = sl[:, None]
         coords = [
@@ -552,8 +630,12 @@ def _shard_comm(
         ]
         xfs = [a.reshape(rows, -1).astype(jnp.float32) for a in xs]
 
-        def local_partial(i):
-            """This shard's UpCom partial, 1/s folded in.
+        def local_partial(i, counts=False):
+            """This shard's UpCom partial, 1/s folded in (``counts=True``,
+            the survivor path: raw sum + per-coordinate count of LOCALLY
+            resident arrived owners — each owner lives on exactly one
+            shard, so the psum'd counts are the global arrived-owner
+            counts).
 
             Blocked template on an unsharded leaf with more local rows
             than shifts: ownership contiguity means block j's owners at
@@ -579,29 +661,47 @@ def _shard_comm(
                 jf = np.arange(nf, dtype=np.int32)
                 accm = jnp.zeros((nf, chunk), jnp.float32)
                 acct = jnp.zeros((tailn,), jnp.float32)
+                cntm = jnp.zeros((nf,), jnp.float32)
+                cntt = jnp.zeros((), jnp.float32)
                 for t in range(s):
                     # owner of block j at shift t: the client whose slot
                     # is (t - j) mod n — local rows contribute, the rest
                     # land on their own shards
                     own = cof[jnp.asarray((t - jf) % m)]
                     loc = (own >= row0) & (own < row0 + rows)
+                    if cok is not None:
+                        loc = loc & cok[jnp.asarray((t - jf) % m)]
                     rr = jnp.clip(own - row0, 0, rows - 1)
                     accm = accm + jnp.where(loc[:, None], xm[rr, jf], 0.0)
+                    if counts:
+                        cntm = cntm + loc.astype(jnp.float32)
                     if tailn:
                         ot = cof[(t - nf) % m]
                         lt = (ot >= row0) & (ot < row0 + rows)
+                        if cok is not None:
+                            lt = lt & cok[(t - nf) % m]
                         rt = jnp.clip(ot - row0, 0, rows - 1)
                         acct = acct + jnp.where(lt, xf[rt, nf * chunk:], 0.0)
+                        if counts:
+                            cntt = cntt + lt.astype(jnp.float32)
                 flat = (jnp.concatenate([accm.reshape(-1), acct])
                         if tailn else accm.reshape(-1))
+                if counts:
+                    cnt = jnp.repeat(cntm, chunk)
+                    cnt = (jnp.concatenate(
+                        [cnt, jnp.broadcast_to(cntt, (tailn,))])
+                        if tailn else cnt)
+                    return flat, cnt
                 return flat / s
             # predicate recomputed here AND in the finish (not cached):
             # sharing it across the psum boundary forces XLA to
             # materialize a (rows, d) pred buffer; recomputed, it stays
             # two compares inside each fusion (what the ws path does)
-            return jnp.where(
-                _owned(i, coords[i], sl2), xf, 0.0
-            ).sum(axis=0) / s
+            owned_loc = _owned(i, coords[i], sl2)
+            num = jnp.where(owned_loc, xf, 0.0).sum(axis=0)
+            if counts:
+                return num, owned_loc.astype(jnp.float32).sum(axis=0)
+            return num / s
 
         def _psum(v):
             return jax.lax.psum(v, dp_names) if dp_names else v
@@ -630,33 +730,56 @@ def _shard_comm(
             band_parts = [_leaf_band(i, coords[i]) for i in covered]
             band_ws = (band_parts[0] if len(band_parts) == 1
                        else jnp.concatenate(band_parts))
-            xbar_ws = _psum(
-                uplink.masked_sum(xw, sl, band_ws, m, s, block=block)
-            )
-            h_new_ws, x_new_ws = uplink.h_update(
-                xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
-                down=dw, block=block,
-            )
+            if survivor:
+                num_ws, cnt_ws = uplink.masked_sum(
+                    xw, sl, band_ws, m, s, counts=True, block=block
+                )
+                xbar_ws, cov_ws = _survivor_bar(
+                    _psum(num_ws), _psum(cnt_ws)
+                )
+                h_new_ws, x_new_ws = uplink.h_update(
+                    xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
+                    down=dw, covered=cov_ws, block=block,
+                )
+            else:
+                xbar_ws = _psum(
+                    uplink.masked_sum(xw, sl, band_ws, m, s, block=block)
+                )
+                h_new_ws, x_new_ws = uplink.h_update(
+                    xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
+                    down=dw, block=block,
+                )
             xs_un = unpack(x_new_ws, spec)
             hs_un = unpack(h_new_ws, hspec)
             for j, i in enumerate(covered):
                 out_x[i], out_h[i] = xs_un[j], hs_un[j]
         for i in rest:
-            x_bar = _psum(local_partial(i))
+            if survivor:
+                num, cnt = local_partial(i, counts=True)
+                x_bar, cov = _survivor_bar(_psum(num), _psum(cnt))
+            else:
+                x_bar, cov = _psum(local_partial(i)), None
             out_x[i], out_h[i] = _finish_leaf(
                 xs[i], hs[i], xfs[i], x_bar, _owned(i, coords[i], sl2),
-                scale, dw,
+                scale, dw, cov,
             )
         return tuple(out_x), tuple(out_h)
 
+    if faulted:
+        in_specs = (leaf_specs, leaf_specs, P(dp), P(), P(), P(dp))
+        operands = (tuple(xflat), tuple(hflat), slot, client_of, col_ok,
+                    dwn)
+    else:
+        in_specs = (leaf_specs, leaf_specs, P(dp), P(), P(dp))
+        operands = (tuple(xflat), tuple(hflat), slot, client_of, dwn)
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(leaf_specs, leaf_specs, P(dp), P(), P(dp)),
+        in_specs=in_specs,
         out_specs=(leaf_specs, leaf_specs),
         check_rep=False,
     )
-    xs_out, hs_out = fn(tuple(xflat), tuple(hflat), slot, client_of, dwn)
+    xs_out, hs_out = fn(*operands)
     if pad:
         xs_out = [a[:n] for a in xs_out]
         hs_out = [a[:n] for a in hs_out]
@@ -676,6 +799,8 @@ def cyclic_comm(
     impl: str = "ws",
     *,
     down: Optional[jax.Array] = None,
+    arrived: Optional[jax.Array] = None,
+    correct: bool = True,
     block: int = 4096,
     meshed: bool = False,
     mesh=None,
@@ -689,17 +814,27 @@ def cyclic_comm(
     docstring for the three implementations.  ``down`` is the DownCom row
     mask ((n,) bool; None broadcasts to every row) — the elastic engine
     passes the NEXT round's cohort so idle rows stay untouched (§11).
+    ``arrived``/``correct`` are the fault-tolerant aggregation inputs
+    (§12, module docstring): rows outside ``arrived`` are demoted to idle
+    and, with ``correct=True``, the rebuild divides by the per-coordinate
+    arrived-owner count with uncovered coordinates left untouched.
     ``meshed=True`` with a ``mesh`` handle and ``impl="pallas"`` runs the
     shard-resident engine (``pspecs``: the stacked state's PartitionSpecs,
     client split only when None; ``shard_kernels``: force/suppress the
     per-shard Pallas kernels, default per backend).
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
+    faulted = arrived is not None
+    survivor = faulted and correct
+    if faulted:
+        slot = jnp.where(
+            jnp.asarray(arrived).astype(bool), slot, -1
+        ).astype(jnp.int32)
     if impl == "pallas" and meshed:
         return _shard_comm(
             x, h, slot, c, s, scale, template="cyclic", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
-            down=down,
+            down=down, faulted=faulted, survivor=survivor,
         )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
@@ -710,6 +845,7 @@ def cyclic_comm(
 
     if impl == "ws":
         client_of = None
+        col_ok = None
         if not meshed:
             # column -> client row of this round (idle writes land in the
             # dropped overflow slot; every column has exactly one owner)
@@ -718,6 +854,14 @@ def cyclic_comm(
                 .at[jnp.where(slot >= 0, slot, c)]
                 .set(jnp.arange(n, dtype=jnp.int32))[:c]
             )
+            if faulted:
+                # columns whose owner dropped default to row 0 in
+                # client_of — col_ok gates those phantom gathers
+                col_ok = (
+                    jnp.zeros((c + 1,), bool)
+                    .at[jnp.where(slot >= 0, slot, c)]
+                    .set(True)[:c]
+                )
         sl = slot[:, None]
         for i, (xl, hl) in enumerate(zip(xflat, hflat)):
             D = dims[i]
@@ -734,15 +878,30 @@ def cyclic_comm(
                 # on other shards, so a gather would all-gather (n, D) --
                 # keep the psum shape (a d-sized all-reduce, the minimum)
                 # with the predicate fused into the local partial sum
-                x_bar = jnp.where(owned, xf, 0.0).sum(axis=0) / s
+                num = jnp.where(owned, xf, 0.0).sum(axis=0)
+                if survivor:
+                    x_bar, cov = _survivor_bar(
+                        num, owned.astype(jnp.float32).sum(axis=0)
+                    )
+                else:
+                    x_bar, cov = num / s, None
             else:
                 # sparse UpCom: s row-gathers + 1/s rebuild, O(s D) reads
                 rows = client_of[jnp.asarray(cols)]  # (s, D) owner rows
-                x_bar = (
-                    jnp.take_along_axis(xf, rows, axis=0).sum(axis=0) / s
-                )
+                vals = jnp.take_along_axis(xf, rows, axis=0)
+                if faulted:
+                    ok = col_ok[jnp.asarray(cols)]  # (s, D) owner arrived
+                    num = jnp.where(ok, vals, 0.0).sum(axis=0)
+                    if survivor:
+                        x_bar, cov = _survivor_bar(
+                            num, ok.astype(jnp.float32).sum(axis=0)
+                        )
+                    else:
+                        x_bar, cov = num / s, None
+                else:
+                    x_bar, cov = vals.sum(axis=0) / s, None
             out_x[i], out_h[i] = _finish_leaf(
-                xl, hl, xf, x_bar, owned, scale, down
+                xl, hl, xf, x_bar, owned, scale, down, cov
             )
         return (
             jax.tree.unflatten(treedef, out_x),
@@ -757,7 +916,8 @@ def cyclic_comm(
 
     for i in fallback:
         out_x[i], out_h[i] = _dense_cyclic_leaf(
-            xflat[i], hflat[i], slot, c, s, scale, down
+            xflat[i], hflat[i], slot, c, s, scale, down,
+            sanitize=faulted, survivor=survivor,
         )
 
     if covered:
@@ -767,7 +927,8 @@ def cyclic_comm(
         hw = pack([hflat[i] for i in covered], hspec)
         band = jnp.asarray(_cyclic_band_np(spec.dims, c, s))
         _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, c, s, scale, block, down=down
+            xw, hw, slot, band, c, s, scale, block, down=down,
+            survivor=survivor,
         )
         xs = unpack(x_new_ws, spec)
         hs = unpack(h_new_ws, hspec)
@@ -792,6 +953,8 @@ def blocked_comm(
     c: Optional[int] = None,
     slot_of: Optional[jax.Array] = None,
     down: Optional[jax.Array] = None,
+    arrived: Optional[jax.Array] = None,
+    correct: bool = True,
     block: int = 4096,
     meshed: bool = False,
     mesh=None,
@@ -813,7 +976,11 @@ def blocked_comm(
     s``: every coordinate still has exactly ``s`` owners, all of them
     cohort members.  The defaults (``c=None``, ``slot_of=None``) are full
     participation with identity slots, bit-identical to the original
-    template.  ``down`` is the DownCom row mask (see ``cyclic_comm``).
+    template.  ``down`` is the DownCom row mask and ``arrived``/
+    ``correct`` the fault-tolerant aggregation inputs (see
+    ``cyclic_comm``): a dropped owner leaves its block columns uncovered,
+    and with ``correct=True`` those coordinates pass through h and x
+    bitwise untouched.
 
     ``meshed=True`` + ``mesh`` + ``impl="pallas"``: the shard-resident
     engine (see ``cyclic_comm``) — the contiguous per-block gathers run on
@@ -837,17 +1004,24 @@ def blocked_comm(
         slot = jnp.where(
             slot_of >= 0, (-(slot_of + off)) % m, -1
         ).astype(jnp.int32)
+    faulted = arrived is not None
+    survivor = faulted and correct
+    if faulted:
+        slot = jnp.where(
+            jnp.asarray(arrived).astype(bool), slot, -1
+        ).astype(jnp.int32)
     if impl == "pallas" and meshed:
         return _shard_comm(
             x, h, slot, m, s, scale, template="blocked", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
-            down=down,
+            down=down, faulted=faulted, survivor=survivor,
         )
     if impl == "dense":
         xflat, treedef = jax.tree.flatten(x)
         hflat = jax.tree.leaves(h)
         pairs = [
-            _dense_blocked_leaf(xl, hl, slot, m, s, scale, down)
+            _dense_blocked_leaf(xl, hl, slot, m, s, scale, down,
+                                sanitize=faulted, survivor=survivor)
             for xl, hl in zip(xflat, hflat)
         ]
         return (
@@ -866,7 +1040,8 @@ def blocked_comm(
         hw = pack(hflat, hspec)
         band = jnp.asarray(_block_band_np(spec.dims, m))
         _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, m, s, scale, block, down=down
+            xw, hw, slot, band, m, s, scale, block, down=down,
+            survivor=survivor,
         )
         return (
             jax.tree.unflatten(treedef, unpack(x_new_ws, spec)),
@@ -876,6 +1051,7 @@ def blocked_comm(
     # impl == "ws": s rolled adds (contiguous per-block gathers, no pad)
     # + the fused h-update, leaf by leaf
     client_of = None
+    col_ok = None
     if not meshed:
         # block-slot -> owner client row (idle writes land in the dropped
         # overflow slot; cohort slots are a permutation of [0, m))
@@ -884,6 +1060,14 @@ def blocked_comm(
             .at[jnp.where(slot >= 0, slot, m)]
             .set(jnp.arange(n, dtype=jnp.int32))[:m]
         )
+        if faulted:
+            # dropped owners' slots default to row 0 in client_of —
+            # col_ok gates those phantom chunk gathers
+            col_ok = (
+                jnp.zeros((m + 1,), bool)
+                .at[jnp.where(slot >= 0, slot, m)]
+                .set(True)[:m]
+            )
     sl = slot[:, None]
     out_x: List[Any] = [None] * len(xflat)
     out_h: List[Any] = [None] * len(xflat)
@@ -899,27 +1083,60 @@ def blocked_comm(
         jb = jnp.arange(nb, dtype=jnp.int32)[None, :]
         own_nb = _wrapped_owned(sl, jb, m, s)
         owned = jnp.repeat(own_nb, chunk, axis=1)[:, :D]
+        cov = None
         if meshed:
             # sharded client axis: keep the d-sized all-reduce shape (see
             # cyclic_comm); the predicate fuses into the partial sum
-            x_bar = jnp.where(owned, xf, 0.0).sum(axis=0) / s
+            num = jnp.where(owned, xf, 0.0).sum(axis=0)
+            if survivor:
+                x_bar, cov = _survivor_bar(
+                    num, owned.astype(jnp.float32).sum(axis=0)
+                )
+            else:
+                x_bar = num / s
         else:
             xm = xf[:, :nf * chunk].reshape(n, nf, chunk)
             jf = jnp.arange(nf, dtype=jnp.int32)
             acc = jnp.zeros((nf, chunk), jnp.float32)
             acc_t = jnp.zeros((tail,), jnp.float32)
+            cnt_f = jnp.zeros((nf,), jnp.float32)
+            cnt_t = jnp.zeros((), jnp.float32)
             for t in range(s):
                 # owner row of block j at shift t: the client whose slot
                 # is (t - j) mod m — one contiguous chunk per block, the
                 # reduce-scatter shape
-                acc = acc + xm[client_of[(t - jf) % m], jf]
+                if faulted:
+                    ok = col_ok[(t - jf) % m]
+                    acc = acc + jnp.where(
+                        ok[:, None], xm[client_of[(t - jf) % m], jf], 0.0
+                    )
+                    cnt_f = cnt_f + ok.astype(jnp.float32)
+                else:
+                    acc = acc + xm[client_of[(t - jf) % m], jf]
                 if tail:
-                    acc_t = acc_t + xf[client_of[(t - nf) % m],
-                                       nf * chunk:]
-            x_bar = jnp.concatenate([acc.reshape(-1), acc_t]) / s \
-                if tail else acc.reshape(-1) / s
+                    if faulted:
+                        ok_t = col_ok[(t - nf) % m]
+                        acc_t = acc_t + jnp.where(
+                            ok_t, xf[client_of[(t - nf) % m],
+                                     nf * chunk:], 0.0
+                        )
+                        cnt_t = cnt_t + ok_t.astype(jnp.float32)
+                    else:
+                        acc_t = acc_t + xf[client_of[(t - nf) % m],
+                                           nf * chunk:]
+            num = jnp.concatenate([acc.reshape(-1), acc_t]) \
+                if tail else acc.reshape(-1)
+            if survivor:
+                cnt = jnp.repeat(cnt_f, chunk)
+                if tail:
+                    cnt = jnp.concatenate(
+                        [cnt, jnp.broadcast_to(cnt_t, (tail,))]
+                    )
+                x_bar, cov = _survivor_bar(num, cnt)
+            else:
+                x_bar = num / s
         out_x[i], out_h[i] = _finish_leaf(xl, hl, xf, x_bar, owned, scale,
-                                          down)
+                                          down, cov)
     return (
         jax.tree.unflatten(treedef, out_x),
         jax.tree.unflatten(treedef, out_h),

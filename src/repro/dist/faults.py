@@ -1,0 +1,225 @@
+"""Deterministic fault plans and payload guards for fault-tolerant rounds.
+
+TAMUNA's partial-participation story assumes every *sampled* client
+completes its round; in practice a cohort member does its local steps and
+then its uplink never lands (mid-round dropout), lands late (straggler),
+or lands corrupted (NaN/Inf payloads, scaled blow-ups).  This module is
+the robustness substrate (DESIGN.md §12) shared by the round driver's
+fault policies (``rounds.run_rounds``), the survivor-aware aggregation of
+``comm_ws`` (arrival masks), the fault-injection example
+(``examples/availability_sim.py --faults``) and the fault benchmark
+(``benchmarks/faults_bench.py``):
+
+``FaultPlan``
+    deterministic, replayable per-round fault draws keyed exactly like
+    ``cohort.CohortPlan``: every draw is a pure function of
+    ``(seed, round, attempt)`` via ``np.random.SeedSequence`` — global-
+    round indexed (a restored checkpoint replays the identical fault
+    trajectory), independent of query order, and *attempt*-indexed so a
+    quorum retry re-draws the round's faults (the retried round is a new
+    communication attempt, with new failures).
+
+``nonfinite_clients`` / ``corrupt_rows``
+    the device-side halves: per-client nonfinite (or magnitude) payload
+    detection over a stacked state tree, and the matching injection
+    (what a corrupted uplink payload looks like).  ``rounds`` wires the
+    detector in front of the comm step (the payload guard) and the
+    injector behind the fault plan.
+
+All host outputs are numpy; the driver uploads the tiny ``(n,)`` masks per
+round, exactly like the cohort plan's arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = [
+    "FaultModel",
+    "FaultPlan",
+    "nonfinite_clients",
+    "corrupt_rows",
+    "CORRUPT_MODES",
+]
+
+CORRUPT_MODES = ("nan", "inf", "blowup")
+
+# SeedSequence stream tags: disjoint from cohort.py's (53, 59, 211) so a
+# shared seed never correlates availability with faults
+_TAG_DROP = 101
+_TAG_CORRUPT = 103
+_TAG_DELAY = 107
+_TAG_BASE = 109
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Static description of a fleet's failure behaviour.
+
+    ``p_drop``       per-client per-attempt probability that the uplink
+                     never lands (mid-round dropout).
+    ``p_corrupt``    per-client per-attempt probability that the uplink
+                     payload arrives corrupted (``corrupt_mode``).
+    ``corrupt_mode`` "nan" | "inf" (nonfinite, caught by the payload
+                     guard) | "blowup" (finite scaled blow-up by
+                     ``blowup`` — only caught by a magnitude guard,
+                     see ``nonfinite_clients(max_abs=...)``).
+    ``delay_*``      straggler model: per-client persistent base latency
+                     (lognormal(mu, sigma); ``straggler_frac`` of the
+                     fleet is ``straggler_scale`` slower) times a fresh
+                     per-round lognormal jitter — the
+                     ``examples/availability_sim.py`` latency model, now
+                     replayable.  ``delays`` are in simulated seconds;
+                     the ``deadline`` round policy admits uplinks under
+                     its cutoff.
+    """
+
+    p_drop: float = 0.0
+    p_corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    blowup: float = 1e8
+    delay_mu: float = 0.0
+    delay_sigma: float = 0.2
+    straggler_frac: float = 0.0
+    straggler_scale: float = 10.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_drop <= 1.0):
+            raise ValueError(f"p_drop={self.p_drop} outside [0, 1]")
+        if not (0.0 <= self.p_corrupt <= 1.0):
+            raise ValueError(f"p_corrupt={self.p_corrupt} outside [0, 1]")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"unknown corrupt_mode {self.corrupt_mode!r}; want one of "
+                f"{CORRUPT_MODES}"
+            )
+
+
+class FaultPlan:
+    """Replayable per-round fault draws for ``n`` clients.
+
+    Every query is a pure function of ``(seed, round, attempt)`` — no
+    internal mutable state at all, so draws are independent of query
+    order and a fresh instance replayed at any round matches a live one
+    (the checkpoint-restore path needs exactly this).  ``attempt``
+    indexes quorum retries: attempt 0 is the round's first communication
+    try, each retry re-draws drops/corruption/delays under the same
+    model (a resampled cohort fails independently).
+    """
+
+    def __init__(self, seed: int, n: int,
+                 model: Optional[FaultModel] = None, **kw):
+        if model is not None and kw:
+            raise ValueError("pass a FaultModel or kwargs, not both")
+        self.seed, self.n = int(seed), int(n)
+        self.model = model if model is not None else FaultModel(**kw)
+        # persistent per-client straggler identity: a function of the
+        # seed alone (round-independent), like availability_sim's base
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, _TAG_BASE])
+        )
+        base = rng.lognormal(self.model.delay_mu, self.model.delay_sigma,
+                             size=self.n)
+        base[rng.random(self.n) < self.model.straggler_frac] *= \
+            self.model.straggler_scale
+        self._base = base
+
+    @classmethod
+    def zero(cls, n: int, seed: int = 0) -> "FaultPlan":
+        """The zero-fault plan: nothing drops, corrupts, or straggles.
+        ``rounds.run_rounds`` under this plan (policy ``wait_all``) is
+        bitwise identical to the fault-free engine."""
+        return cls(seed, n, FaultModel())
+
+    @property
+    def is_zero(self) -> bool:
+        m = self.model
+        return (m.p_drop == 0.0 and m.p_corrupt == 0.0
+                and m.straggler_frac == 0.0)
+
+    def _rng(self, tag: int, rnd: int, attempt: int):
+        return np.random.default_rng(
+            np.random.SeedSequence(
+                [self.seed, tag, int(rnd), int(attempt)]
+            )
+        )
+
+    def drops(self, rnd: int, attempt: int = 0) -> np.ndarray:
+        """(n,) bool: client ``i``'s uplink never lands this attempt."""
+        if self.model.p_drop == 0.0:
+            return np.zeros(self.n, bool)
+        u = self._rng(_TAG_DROP, rnd, attempt).random(self.n)
+        return u < self.model.p_drop
+
+    def corrupts(self, rnd: int, attempt: int = 0) -> np.ndarray:
+        """(n,) bool: client ``i``'s payload arrives corrupted."""
+        if self.model.p_corrupt == 0.0:
+            return np.zeros(self.n, bool)
+        u = self._rng(_TAG_CORRUPT, rnd, attempt).random(self.n)
+        return u < self.model.p_corrupt
+
+    def delays(self, rnd: int, attempt: int = 0) -> np.ndarray:
+        """(n,) float64 simulated uplink-arrival delays: the persistent
+        per-client base times a fresh per-attempt lognormal jitter."""
+        jit = self._rng(_TAG_DELAY, rnd, attempt).lognormal(
+            0.0, self.model.delay_sigma, size=self.n
+        )
+        return self._base * jit
+
+    @property
+    def base_delays(self) -> np.ndarray:
+        """(n,) persistent per-client base latency (straggler identity)."""
+        return self._base.copy()
+
+
+# --------------------------------------------------------------------------
+# device-side halves: payload guard + injection
+# --------------------------------------------------------------------------
+
+
+def nonfinite_clients(tree: Any, max_abs: Optional[float] = None):
+    """(n,) bool: client rows whose payload fails the guard — any
+    nonfinite value in any leaf, or (``max_abs`` given) any magnitude
+    above it (the blow-up guard).  One fused reduction pass over the
+    stacked state; pure jnp, jit/shard-safe."""
+    import jax
+    import jax.numpy as jnp
+
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    bad = jnp.zeros((n,), bool)
+    for a in leaves:
+        f = a.astype(jnp.float32).reshape(n, -1)
+        ok = jnp.isfinite(f)
+        if max_abs is not None:
+            ok = ok & (jnp.abs(f) <= max_abs)
+        bad = bad | ~ok.all(axis=1)
+    return bad
+
+
+def corrupt_rows(tree: Any, mask, mode: str = "nan", blowup: float = 1e8):
+    """Inject payload corruption into the ``mask``'ed client rows of a
+    stacked tree (what a corrupted uplink looks like to the server):
+    ``nan``/``inf`` overwrite the row, ``blowup`` scales it by
+    ``blowup``.  Rows outside ``mask`` pass through bit-exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    if mode not in CORRUPT_MODES:
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    mask = jnp.asarray(mask).astype(bool)
+
+    def leaf(a):
+        m = mask.reshape((a.shape[0],) + (1,) * (a.ndim - 1))
+        if mode == "blowup":
+            return jnp.where(m, (a.astype(jnp.float32)
+                                 * blowup).astype(a.dtype), a)
+        val = jnp.asarray(
+            jnp.nan if mode == "nan" else jnp.inf, jnp.float32
+        ).astype(a.dtype)
+        return jnp.where(m, val, a)
+
+    return jax.tree.map(leaf, tree)

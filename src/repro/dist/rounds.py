@@ -92,6 +92,13 @@ def default_elastic(n: int, c: int, dp_total: int) -> bool:
 SampleFn = Callable[[Any, jax.Array], Dict[str, jax.Array]]
 
 TRACE_KEYS = ("loss_sum", "steps", "up_floats", "down_floats")
+# extra per-round device traces of the fault-tolerant driver (present in
+# the carry only when ``init_carry(robust_n=...)`` > 0): arrivals = cohort
+# members whose uplink was aggregated, corrupted = members zeroed by the
+# payload guard, bad = the (flush_every, n) guard mask the quarantine
+# feedback reads
+FAULT_TRACE_KEYS = ("arrivals", "corrupted", "bad")
+ROUND_POLICIES = ("wait_all", "quorum", "deadline")
 
 
 class RoundCarry(NamedTuple):
@@ -128,13 +135,18 @@ def comm_round_key(base: jax.Array, rnd) -> jax.Array:
     return jax.random.fold_in(_as_key(base), rnd)
 
 
-def _zero_traces(flush_every: int) -> Dict[str, jax.Array]:
-    return {
+def _zero_traces(flush_every: int, robust_n: int = 0) -> Dict[str, jax.Array]:
+    traces = {
         "loss_sum": jnp.zeros((flush_every,), jnp.float32),
         "steps": jnp.zeros((flush_every,), jnp.int32),
         "up_floats": jnp.zeros((flush_every,), jnp.float32),
         "down_floats": jnp.zeros((flush_every,), jnp.float32),
     }
+    if robust_n:
+        traces["arrivals"] = jnp.zeros((flush_every,), jnp.int32)
+        traces["corrupted"] = jnp.zeros((flush_every,), jnp.int32)
+        traces["bad"] = jnp.zeros((flush_every, robust_n), bool)
+    return traces
 
 
 def _scan_local(local, sample_batch: SampleFn, state, data, dkey, t, B: int,
@@ -211,7 +223,10 @@ def make_round_fn(
     comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n)
 
     def chunk_fn(B: int, carry: RoundCarry, data, do_comm, slot,
-                 cohort, down) -> RoundCarry:
+                 cohort, down, arrived=None, corrupt=None, *,
+                 correct: bool = True, guard: bool = False,
+                 corrupt_mode: str = "nan", blowup: float = 1e8,
+                 guard_max_abs: Optional[float] = None) -> RoundCarry:
         state, t, dk, ck, traces = carry
         if elastic:
             if cohort is None:
@@ -239,13 +254,64 @@ def make_round_fn(
                 local, sample_batch, state, data, _as_key(dk), t, B
             )
 
-        def with_comm(st):
-            ckey = comm_round_key(ck, st.round)
-            return comm(st, jax.random.key_data(ckey), cohort=cohort,
-                        down=down)
+        if arrived is None:
+            def with_comm(st):
+                ckey = comm_round_key(ck, st.round)
+                return comm(st, jax.random.key_data(ckey), cohort=cohort,
+                            down=down)
 
-        state = jax.lax.cond(do_comm, with_comm, lambda st: st, state)
-        traces = {
+            state = jax.lax.cond(do_comm, with_comm, lambda st: st, state)
+            new_traces = None
+        else:
+            # the fault-tolerant comm branch (DESIGN.md §12): corruption
+            # is injected into the would-be uplink payload, the payload
+            # guard demotes nonfinite members to non-arrived (and zeroes
+            # their rows so leftover garbage can't reach a later loss),
+            # and the comm step aggregates survivors only
+            from repro.dist import faults as faults_mod
+
+            member = jnp.zeros((n,), bool).at[cohort].set(True)
+
+            def with_comm(st):
+                ckey = comm_round_key(ck, st.round)
+                stx = st
+                if corrupt is not None:
+                    stx = stx._replace(x=faults_mod.corrupt_rows(
+                        stx.x, corrupt, corrupt_mode, blowup
+                    ))
+                arr = arrived & member
+                if guard:
+                    bad = faults_mod.nonfinite_clients(
+                        stx.x, guard_max_abs
+                    ) & member
+                    arr = arr & ~bad
+                    stx = stx._replace(x=jax.tree.map(
+                        lambda a: jnp.where(
+                            bad.reshape((n,) + (1,) * (a.ndim - 1)),
+                            jnp.zeros((), a.dtype), a,
+                        ),
+                        stx.x,
+                    ))
+                else:
+                    bad = jnp.zeros((n,), bool)
+                st2 = comm(stx, jax.random.key_data(ckey), cohort=cohort,
+                           down=down, arrived=arr, correct=correct)
+                return st2, arr.sum().astype(jnp.int32), bad
+
+            def no_comm(st):
+                return st, jnp.int32(0), jnp.zeros((n,), bool)
+
+            state, arr_cnt, badm = jax.lax.cond(
+                do_comm, with_comm, no_comm, state
+            )
+            new_traces = {
+                "arrivals": traces["arrivals"].at[slot].set(arr_cnt),
+                "corrupted": traces["corrupted"].at[slot].set(
+                    badm.sum().astype(jnp.int32)
+                ),
+                "bad": traces["bad"].at[slot].set(badm),
+            }
+        out_traces = {
             "loss_sum": traces["loss_sum"].at[slot].add(loss_sum),
             "steps": traces["steps"].at[slot].add(B),
             "up_floats": traces["up_floats"].at[slot].set(state.up_floats),
@@ -253,18 +319,34 @@ def make_round_fn(
                 state.down_floats
             ),
         }
-        return RoundCarry(state, t, dk, ck, traces)
+        if new_traces is not None:
+            out_traces.update(new_traces)
+        return RoundCarry(state, t, dk, ck, out_traces)
 
     cache: Dict[Any, Callable] = {}
 
-    def program(B: int, with_plan: bool):
-        key = (B, with_plan)
+    def program(B: int, with_plan: bool, fkey=None):
+        key = (B, with_plan, fkey)
         if key not in cache:
-            cache[key] = jax.jit(partial(chunk_fn, B), donate_argnums=(0,))
+            if fkey is None:
+                cache[key] = jax.jit(
+                    partial(chunk_fn, B), donate_argnums=(0,)
+                )
+            else:
+                correct, guard, mode, blowup, gmax = fkey
+                cache[key] = jax.jit(
+                    partial(chunk_fn, B, correct=correct, guard=guard,
+                            corrupt_mode=mode, blowup=blowup,
+                            guard_max_abs=gmax),
+                    donate_argnums=(0,),
+                )
         return cache[key]
 
     def round_fn(carry: RoundCarry, data, L: int, slot,
-                 cohort=None, down=None) -> RoundCarry:
+                 cohort=None, down=None, arrived=None, corrupt=None,
+                 correct: bool = True, guard: bool = False,
+                 corrupt_mode: str = "nan", blowup: float = 1e8,
+                 guard_max_abs: Optional[float] = None) -> RoundCarry:
         chunks = round_chunks(L, max_L)
         slot = jnp.asarray(slot, jnp.int32)
         with_plan = cohort is not None
@@ -272,10 +354,32 @@ def make_round_fn(
             # a host plan must pin the DownCom too: without it the engine
             # would derive a (different) uniform next cohort on device
             raise ValueError("explicit cohort needs an explicit down mask")
+        if arrived is None:
+            if corrupt is not None:
+                raise ValueError("corrupt mask needs an arrived mask")
+            for i, B in enumerate(chunks):
+                do_comm = jnp.asarray(i == len(chunks) - 1)
+                carry = program(B, with_plan)(carry, data, do_comm, slot,
+                                              cohort, down)
+            return carry
+        # fault-tolerant rounds carry the arrival mask into every chunk
+        # (only the comm chunk consumes it) plus the static fault config
+        # in the compile key; the carry must have been built with
+        # init_carry(robust_n=n)
+        if not with_plan:
+            raise ValueError("fault injection needs an explicit cohort "
+                             "(resolve it host-side, see run_rounds)")
+        fkey = (bool(correct), bool(guard), str(corrupt_mode),
+                float(blowup),
+                None if guard_max_abs is None else float(guard_max_abs))
+        arrived = jnp.asarray(arrived).astype(bool)
+        if corrupt is not None:
+            corrupt = jnp.asarray(corrupt).astype(bool)
         for i, B in enumerate(chunks):
             do_comm = jnp.asarray(i == len(chunks) - 1)
-            carry = program(B, with_plan)(carry, data, do_comm, slot,
-                                          cohort, down)
+            carry = program(B, with_plan, fkey)(
+                carry, data, do_comm, slot, cohort, down, arrived, corrupt
+            )
         return carry
 
     round_fn.cache = cache
@@ -347,6 +451,7 @@ def init_carry(
     state: tamuna_dp.DistTamunaState,
     key: jax.Array,
     flush_every: int,
+    robust_n: int = 0,
 ) -> RoundCarry:
     kd, kc = jax.random.split(_as_key(key))
     return RoundCarry(
@@ -354,7 +459,7 @@ def init_carry(
         t=jnp.zeros((), jnp.int32),
         data_key=jax.random.key_data(kd),
         comm_key=jax.random.key_data(kc),
-        traces=_zero_traces(flush_every),
+        traces=_zero_traces(flush_every, robust_n),
     )
 
 
@@ -373,6 +478,15 @@ def run_rounds(
     checkpoint_every: int = 0,
     max_L: Optional[int] = None,
     plan=None,
+    faults=None,
+    policy: str = "wait_all",
+    quorum: Optional[int] = None,
+    max_retries: int = 3,
+    backoff0: float = 1.0,
+    deadline: Optional[float] = None,
+    quarantine_rounds: int = 0,
+    guard: Optional[bool] = None,
+    guard_max_abs: Optional[float] = None,
 ) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
     """Multi-round driver: geometric ``L`` per round (host ``rng``), fused
     rounds on device, metrics drained every ``flush_every`` rounds.
@@ -389,6 +503,35 @@ def run_rounds(
     identical schedule; per round it uploads the tiny ``(c,)`` cohort and
     ``(n,)`` DownCom mask.  ``plan=None`` (the default) keeps cohort
     selection on device, derived from the comm key (uniform).
+
+    ``faults`` (a ``repro.dist.faults.FaultPlan``) turns on the
+    fault-tolerant round path (DESIGN.md §12).  Per round the plan's
+    deterministic draws decide which cohort members drop their uplink,
+    which corrupt their payload, and each member's latency; the driver
+    resolves the round's *survivors* host-side (the draws are replayable,
+    so a failed attempt never executes on device) and runs exactly one
+    device round per global round with the arrival mask:
+
+      wait_all  accept whatever arrives, but aggregate with the legacy
+                1/s semantics (``correct=False``) — the biased control.
+                Under a zero-fault plan this passes ``arrived=None`` and
+                is bitwise identical to the fault-free driver.
+      quorum    require ``quorum`` arrivals (default ``c // 2 + 1``);
+                on a miss, resample the cohort (``plan.cohort(g, attempt)``
+                or the attempt-folded comm key) and redraw faults, up to
+                ``max_retries`` times with capped exponential backoff
+                (``backoff0 * 2**attempt`` simulated seconds, accounted in
+                the metrics, never slept).  Survivor-aware aggregation
+                (``correct=True``).
+      deadline  admit only members whose drawn latency is ``<= deadline``
+                (and that didn't drop); survivor-aware aggregation.
+
+    ``guard`` (default: on iff the fault model corrupts payloads) enables
+    the nonfinite payload guard: corrupted members are demoted to
+    non-arrived before aggregation and, when ``quarantine_rounds > 0`` and
+    a ``plan`` is given, quarantined from selection for that many rounds
+    starting at detection + 2 (the next round's cohort is already
+    committed as this round's DownCom target).
     """
     # never sample past the engine's bucket cap: round_fn silently clamps
     # executed steps to its own max_L, so a larger caller cap would desync
@@ -398,16 +541,133 @@ def run_rounds(
     if engine_cap:
         max_L = min(max_L, engine_cap)
     flush_every = max(1, min(flush_every, rounds))
-    start_round = int(state.round) if plan is not None else 0
-    carry = init_carry(state, key, flush_every)
+
+    import numpy as np
+
+    n = getattr(round_fn, "n", None)
+    c = getattr(round_fn, "c", None)
+    if policy not in ROUND_POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; pick from "
+                         f"{ROUND_POLICIES}")
+    if guard is None:
+        guard = faults is not None and faults.model.p_corrupt > 0
+    faulted = faults is not None and (
+        not faults.is_zero or policy != "wait_all"
+        or quarantine_rounds > 0 or bool(guard)
+    )
+    if faults is None and (policy != "wait_all" or quarantine_rounds > 0):
+        raise ValueError("round policies and quarantine need a fault plan")
+    if policy == "deadline" and deadline is None:
+        raise ValueError("deadline policy needs a deadline (seconds)")
+    if quarantine_rounds > 0 and plan is None:
+        raise ValueError("quarantine needs a CohortPlan to feed back into")
+    if faulted:
+        if n is None or c is None:
+            raise ValueError("fault-tolerant rounds need a round_fn built "
+                             "by make_round_fn (n and c attributes)")
+        if faults.n != n:
+            raise ValueError(f"fault plan covers {faults.n} clients, "
+                             f"round_fn has n={n}")
+
+    start_round = int(state.round) if (plan is not None or faulted) else 0
+    carry = init_carry(state, key, flush_every, robust_n=n if faulted else 0)
+    q = quorum if quorum is not None else (c // 2 + 1 if c else None)
+
+    if faulted and plan is None:
+        # replay the engine's on-device uniform cohorts host-side so the
+        # arrival mask lines up with the rows the round actually trains
+        ck0 = np.asarray(jax.device_get(carry.comm_key))
+
+    def host_cohort(g: int, attempt: int = 0) -> np.ndarray:
+        if plan is not None:
+            return np.asarray(plan.cohort(g, attempt))
+        ckey = comm_round_key(jnp.asarray(ck0), g)
+        if attempt > 0:
+            ckey = jax.random.fold_in(ckey, attempt)
+        return np.asarray(jax.device_get(
+            tamuna_dp.round_cohort(ckey, n, c)
+        ))
+
+    resolved: Dict[int, Any] = {}
+
+    def resolve(g: int):
+        """The round's survivors, after the policy's retries: a dict with
+        cohort/member/arrived/corrupt masks plus host-side accounting."""
+        got = resolved.get(g)
+        if got is not None:
+            return got
+        attempt, backoff, quorum_miss = 0, 0.0, 0
+        while True:
+            cohort = host_cohort(g, attempt)
+            member = np.zeros(n, bool)
+            member[cohort] = True
+            arrived = member & ~faults.drops(g, attempt)
+            if policy == "deadline":
+                arrived &= faults.delays(g, attempt) <= deadline
+            if (policy == "quorum" and int(arrived.sum()) < q
+                    and attempt < max_retries):
+                quorum_miss += 1
+                backoff += backoff0 * (2.0 ** attempt)
+                attempt += 1
+                continue
+            break
+        res = {
+            "cohort": cohort,
+            "member": member,
+            "arrived": arrived,
+            "corrupt": faults.corrupts(g, attempt) & member,
+            "retries": attempt,
+            "backoff": backoff,
+            "quorum_miss": quorum_miss,
+        }
+        resolved[g] = res
+        return res
+
     pending = []  # global round indices awaiting drain
+    fmeta = []  # per-pending-round host-side fault accounting
     total_steps = 0
     last: Dict[str, Any] = {}
     for r in range(rounds):
         L = tamuna_dp.sample_round_length(rng, p, max_L=max_L)
         slot = len(pending)
-        if plan is not None:
-            g = start_round + r
+        g = start_round + r
+        if faulted:
+            res = resolve(g)
+            nxt = resolve(g + 1)
+            carry = round_fn(
+                carry, data, L, slot,
+                cohort=jnp.asarray(res["cohort"], jnp.int32),
+                down=jnp.asarray(nxt["member"]),
+                arrived=jnp.asarray(res["arrived"]),
+                corrupt=(jnp.asarray(res["corrupt"])
+                         if faults.model.p_corrupt > 0 else None),
+                correct=(policy != "wait_all"),
+                guard=bool(guard),
+                corrupt_mode=faults.model.corrupt_mode,
+                blowup=faults.model.blowup,
+                guard_max_abs=guard_max_abs,
+            )
+            fmeta.append({
+                "retries": res["retries"],
+                "backoff_s": res["backoff"],
+                "quorum_miss": res["quorum_miss"],
+                "round_latency_s": float(
+                    faults.delays(g, res["retries"])[res["arrived"]].max()
+                    if res["arrived"].any() else 0.0
+                ) + res["backoff"],
+            })
+            if quarantine_rounds > 0:
+                # drain this round's guard verdict NOW: quarantine must
+                # land before round g+2's cohort is resolved
+                bad = np.asarray(
+                    jax.device_get(carry.traces["bad"][slot])
+                )
+                if bad.any():
+                    ids = np.where(bad)[0]
+                    plan.quarantine(ids, g + 2, g + 1 + quarantine_rounds)
+                    for k in [k for k in resolved if k >= g + 2]:
+                        del resolved[k]
+        elif plan is not None:
             carry = round_fn(
                 carry, data, L, slot,
                 cohort=jnp.asarray(plan.cohort(g), jnp.int32),
@@ -429,10 +689,19 @@ def run_rounds(
                     "up_floats": float(tr["up_floats"][i]),
                     "down_floats": float(tr["down_floats"][i]),
                 }
+                if faulted:
+                    last.update({
+                        "arrivals": int(tr["arrivals"][i]),
+                        "corrupted": int(tr["corrupted"][i]),
+                        **fmeta[i],
+                    })
                 if logger is not None:
                     logger.log(gr, last)
             pending = []
-            carry = carry._replace(traces=_zero_traces(flush_every))
+            fmeta = []
+            carry = carry._replace(
+                traces=_zero_traces(flush_every, n if faulted else 0)
+            )
         if (checkpoint_dir and checkpoint_every
                 and (r + 1) % checkpoint_every == 0):
             from repro import checkpoint

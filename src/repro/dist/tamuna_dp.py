@@ -377,6 +377,11 @@ def make_comm_step(
     is the DownCom row mask — the elastic engine passes the NEXT round's
     cohort (only joining clients download, the paper's DownCom); ``None``
     broadcasts ``x_bar`` to every row (full-participation behaviour).
+    ``arrived``/``correct`` are the fault-tolerant aggregation inputs
+    (DESIGN.md §12, ``comm_ws`` docstring): clients outside ``arrived``
+    contribute nothing, the corrected rebuild divides by the arrived
+    owner count, and the uplink float accounting scales to the arrived
+    cohort fraction (the expected-survivor correction).
 
     The aggregation math runs over the flat comm workspace
     (``repro.dist.comm_ws``, DESIGN.md §9): ``impl`` (default
@@ -422,11 +427,11 @@ def make_comm_step(
     else:
         up_total = jnp.float32(sum(masks.column_nnz(D, c, s) for D in dims))
 
-    def bump(state, x_new, h_new):
+    def bump(state, x_new, h_new, up=None):
         return state._replace(
             x=x_new, h=h_new,
             round=state.round + 1,
-            up_floats=state.up_floats + up_total,
+            up_floats=state.up_floats + (up_total if up is None else up),
             down_floats=state.down_floats + down_total,
         )
 
@@ -436,29 +441,46 @@ def make_comm_step(
             .at[cohort].set(jnp.arange(c, dtype=jnp.int32))
         )
 
+    def up_arrived(slot_of, arrived):
+        """Expected-survivor float accounting (DESIGN.md §12): only the
+        arrived cohort members' uplinks consumed bandwidth.  The template
+        splits the d coordinates' s-owner slots evenly over the c cohort
+        slots, so the arrived fraction of ``up_total`` is the (exact in
+        expectation, per-round approximate) survivor uplink volume."""
+        if arrived is None:
+            return None
+        surv = ((slot_of >= 0) & jnp.asarray(arrived).astype(bool)).sum()
+        return up_total * surv.astype(jnp.float32) / c
+
     if tcfg.uplink == "block_rs":
         from repro.dist.block_uplink import block_rs_aggregate
 
         def fn(state: DistTamunaState, key: jax.Array,
                cohort: Optional[jax.Array] = None,
-               down: Optional[jax.Array] = None) -> DistTamunaState:
+               down: Optional[jax.Array] = None,
+               arrived: Optional[jax.Array] = None,
+               correct: bool = True) -> DistTamunaState:
             key = _as_key(key)
             _, k_off = jax.random.split(key)
             if cohort is None:
                 cohort = round_cohort(key, n, c)
             off = jax.random.randint(k_off, (), 0, c, jnp.int32)
+            slot_of = slot_of_(cohort)
             xb, hb = block_rs_aggregate(
                 state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg,
                 impl=impl, block=block, meshed=True, pspecs=stacked_specs,
-                c=c, slot_of=slot_of_(cohort), down=down,
+                c=c, slot_of=slot_of, down=down, arrived=arrived,
+                correct=correct,
             )
-            return bump(state, xb, hb)
+            return bump(state, xb, hb, up_arrived(slot_of, arrived))
 
         return fn
 
     def fn(state: DistTamunaState, key: jax.Array,
            cohort: Optional[jax.Array] = None,
-           down: Optional[jax.Array] = None) -> DistTamunaState:
+           down: Optional[jax.Array] = None,
+           arrived: Optional[jax.Array] = None,
+           correct: bool = True) -> DistTamunaState:
         key = _as_key(key)
         _, k_perm = jax.random.split(key)
         if cohort is None:
@@ -475,9 +497,10 @@ def make_comm_step(
         # of the partials; the mesh handle and state specs ride along)
         x_new, h_new = comm_ws.cyclic_comm(
             state.x, state.h, slot, c, s, scale, impl=impl, block=block,
-            down=down, meshed=True, mesh=mesh, pspecs=stacked_specs,
+            down=down, arrived=arrived, correct=correct,
+            meshed=True, mesh=mesh, pspecs=stacked_specs,
         )
-        return bump(state, x_new, h_new)
+        return bump(state, x_new, h_new, up_arrived(slot_of, arrived))
 
     return fn
 

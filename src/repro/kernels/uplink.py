@@ -49,6 +49,21 @@ def _masked_sum_kernel(slot_ref, band_ref, x_ref, o_ref, *, m: int, s: int):
     o_ref[...] = jnp.where(owned, x, 0.0).sum(axis=0) / s
 
 
+def _masked_sum_counts_kernel(
+    slot_ref, band_ref, x_ref, num_ref, cnt_ref, *, m: int, s: int
+):
+    # survivor-aware variant: raw masked sum + per-coordinate arrived
+    # owner count (no /s — the caller divides after any psum so the
+    # count stays exact across shards).  Dropped clients arrive here
+    # with slot = -1, which owns nothing.
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    x = x_ref[...]
+    num_ref[...] = jnp.where(owned, x, 0.0).sum(axis=0)
+    cnt_ref[...] = owned.astype(jnp.float32).sum(axis=0)
+
+
 def _h_update_kernel(
     slot_ref, down_ref, band_ref, xbar_ref, x_ref, h_ref, h_out, x_out,
     *, m: int, s: int, scale: float,
@@ -63,6 +78,27 @@ def _h_update_kernel(
     x_out[...] = jnp.where(down, jnp.broadcast_to(x_bar, x.shape), x)
 
 
+def _h_update_covered_kernel(
+    slot_ref, down_ref, band_ref, cov_ref, xbar_ref, x_ref, h_ref,
+    h_out, x_out, *, m: int, s: int, scale: float,
+):
+    # survivor-aware variant: uncovered coordinates (no arrived owner)
+    # have an x_bar rebuilt from nothing — gate both the control-variate
+    # update and the DownCom so those coordinates pass through
+    # bit-exactly (PR 5's idle-client semantics, per-coordinate).
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    cov = cov_ref[...][None, :] != 0
+    x = x_ref[...]
+    x_bar = xbar_ref[...][None, :]
+    h_out[...] = h_ref[...] + scale * jnp.where(
+        owned & cov, x_bar - x, 0.0
+    )
+    down = (down_ref[...][:, None] != 0) & cov
+    x_out[...] = jnp.where(down, jnp.broadcast_to(x_bar, x.shape), x)
+
+
 def _pad_cols(a: jax.Array, pad: int) -> jax.Array:
     return jnp.pad(a, ((0, 0), (0, pad))) if pad else a
 
@@ -74,24 +110,45 @@ def masked_sum(
     m: int,
     s: int,
     *,
+    counts: bool = False,
     block: int = 4096,
     interpret: Optional[bool] = None,
-) -> jax.Array:
-    """UpCom fused with the 1/s rebuild: ``sum_owned(x, axis=0) / s``."""
+):
+    """UpCom fused with the 1/s rebuild: ``sum_owned(x, axis=0) / s``.
+
+    With ``counts=True`` (the survivor-aware path) returns the raw
+    ``(num, cnt)`` pair instead — the undivided masked sum and the
+    per-coordinate arrived-owner count — so the caller can psum both
+    and rebuild ``x_bar = num / max(cnt, 1)`` globally."""
     n, d = x.shape
     blk = min(block, d)
     pad = (-d) % blk
     x = _pad_cols(x, pad)
     band = jnp.pad(band, (0, pad)) if pad else band
+    in_specs = [
+        pl.BlockSpec((n,), lambda i: (0,)),
+        pl.BlockSpec((blk,), lambda i: (i,)),
+        pl.BlockSpec((n, blk), lambda i: (0, i)),
+    ]
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    if counts:
+        num, cnt = pl.pallas_call(
+            functools.partial(_masked_sum_counts_kernel, m=m, s=s),
+            grid=(x.shape[1] // blk,),
+            in_specs=in_specs,
+            out_specs=(vec, vec),
+            out_shape=(
+                jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
+                jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
+            ),
+            interpret=resolve_interpret(interpret),
+        )(slot, band, x)
+        return (num[:d], cnt[:d]) if pad else (num, cnt)
     out = pl.pallas_call(
         functools.partial(_masked_sum_kernel, m=m, s=s),
         grid=(x.shape[1] // blk,),
-        in_specs=[
-            pl.BlockSpec((n,), lambda i: (0,)),
-            pl.BlockSpec((blk,), lambda i: (i,)),
-            pl.BlockSpec((n, blk), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        in_specs=in_specs,
+        out_specs=vec,
         out_shape=jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(slot, band, x)
@@ -109,12 +166,15 @@ def h_update(
     scale: float,  # eta / gamma
     *,
     down: Optional[jax.Array] = None,  # (n,) int32/bool DownCom targets
+    covered: Optional[jax.Array] = None,  # (d,) bool: coord has a survivor
     block: int = 4096,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """One fused pass: ``h += scale * owned * (x_bar - x)`` and the DownCom
     ``x_new = x_bar`` on the ``down`` rows (every row when ``down=None``);
-    rows outside ``down`` keep their ``x`` bit-exactly."""
+    rows outside ``down`` keep their ``x`` bit-exactly.  ``covered``
+    (survivor-aware path) additionally masks per-coordinate: coordinates
+    with no arrived owner keep both h and x bit-exactly."""
     n, d = x.shape
     blk = min(block, d)
     pad = (-d) % blk
@@ -126,24 +186,41 @@ def h_update(
     vec = pl.BlockSpec((blk,), lambda i: (i,))
     mat = pl.BlockSpec((n, blk), lambda i: (0, i))
     row = pl.BlockSpec((n,), lambda i: (0,))
-    h_new, x_new = pl.pallas_call(
-        functools.partial(_h_update_kernel, m=m, s=s, scale=scale),
-        grid=(x.shape[1] // blk,),
-        in_specs=[
-            row,  # slot
-            row,  # down
-            vec,  # band
-            vec,  # x_bar
-            mat,  # x
-            mat,  # h
-        ],
-        out_specs=(mat, mat),
-        out_shape=(
-            jax.ShapeDtypeStruct(x.shape, jnp.float32),
-            jax.ShapeDtypeStruct(x.shape, jnp.float32),
-        ),
-        interpret=resolve_interpret(interpret),
-    )(slot, down, band, x_bar, x, h)
+    if covered is not None:
+        cov = jnp.pad(covered.astype(jnp.int32), (0, pad)) if pad \
+            else covered.astype(jnp.int32)
+        h_new, x_new = pl.pallas_call(
+            functools.partial(
+                _h_update_covered_kernel, m=m, s=s, scale=scale
+            ),
+            grid=(x.shape[1] // blk,),
+            in_specs=[row, row, vec, vec, vec, mat, mat],
+            out_specs=(mat, mat),
+            out_shape=(
+                jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            ),
+            interpret=resolve_interpret(interpret),
+        )(slot, down, band, cov, x_bar, x, h)
+    else:
+        h_new, x_new = pl.pallas_call(
+            functools.partial(_h_update_kernel, m=m, s=s, scale=scale),
+            grid=(x.shape[1] // blk,),
+            in_specs=[
+                row,  # slot
+                row,  # down
+                vec,  # band
+                vec,  # x_bar
+                mat,  # x
+                mat,  # h
+            ],
+            out_specs=(mat, mat),
+            out_shape=(
+                jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            ),
+            interpret=resolve_interpret(interpret),
+        )(slot, down, band, x_bar, x, h)
     if pad:
         h_new, x_new = h_new[:, :d], x_new[:, :d]
     return h_new, x_new

@@ -84,3 +84,19 @@ def test_straggler_base_shape_and_tail():
     assert base.shape == (1000,)
     frac = (base > 5.0).mean()
     assert 0.05 < frac < 0.2, frac
+
+
+def test_faults_mode_runs_and_reports(subproc):
+    """``--dist --faults`` (DESIGN.md §12): all three scenarios print,
+    the quorum driver shows retries/backoff, and the fault rows carry
+    the robustness metrics through the example's logger."""
+    out = subproc(
+        "import sys; sys.argv = ['availability_sim.py', '--dist', "
+        "'--faults', '--rounds', '3']; "
+        "exec(open('examples/availability_sim.py').read())",
+        devices=1, timeout=1500,
+    )
+    assert "fault-tolerant dist engine" in out
+    for scenario in ("fault-free", "quorum", "wait_all+drops"):
+        assert scenario in out, out[-2000:]
+    assert "sim wall-clock" in out

@@ -60,6 +60,33 @@ assert rc == 0
             f"--smoke must not overwrite the measured artifact {p}"
 
 
+def test_run_smoke_faults_emits_rows_and_preserves_artifact(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_faults.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "faults"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # the fault-free reference, both drivers at the dropout rate, and the
+    # acceptance summary row
+    assert "faults/p0.0/fault_free," in out, out[-2000:]
+    assert "faults/p0.2/quorum," in out, out[-2000:]
+    assert "faults/p0.2/wait_all," in out, out[-2000:]
+    assert "faults/quorum_ratio_at_p02," in out
+    assert "replay_ok=True" in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
 def test_trajectory_table_aggregates_artifacts():
     if REPO not in sys.path:
         sys.path.insert(0, REPO)
@@ -70,6 +97,7 @@ def test_trajectory_table_aggregates_artifacts():
     assert "dist_round" in table
     assert "round_engine" in table
     assert "comm_step" in table
+    assert "faults" in table
     assert "| acceptance |" in table.splitlines()[0].replace(
         " ok |", " ok |")  # header shape
     rows = report.trajectory_rows()
