@@ -143,7 +143,39 @@ def trajectory_rows() -> list:
         add("faults", "deterministic fault replay bitwise (1=yes)",
             float(bool(fl.get("deterministic_replay_ok"))), 1.0)
 
+    qc = _load("BENCH_quant_comm.json")
+    if qc:
+        acc = qc["acceptance"]
+        add("quant_comm", "up-bytes reduction int8 vs f32 wire",
+            qc["up_bytes_ratio_int8_vs_f32"], acc["up_bytes_ratio_min"])
+        add("quant_comm", "fused-round time ratio int8 vs f32",
+            qc["round_time_ratio_int8_vs_f32"],
+            acc["round_time_ratio_max"], higher_is_better=False)
+        add("quant_comm", "convergence floor ratio int8 vs f32",
+            qc["floor_ratio_int8_vs_f32"], acc["floor_ratio_max"],
+            higher_is_better=False)
+
     return rows
+
+
+def wire_bytes_table() -> str:
+    """Per-policy up/down wire bytes per round (the comm step's dtype-
+    aware accounting counters, BENCH_quant_comm.json)."""
+    qc = _load("BENCH_quant_comm.json")
+    if not qc:
+        return ""
+    out = [
+        "| wire policy | up bytes/round | down bytes/round | leaf kinds |",
+        "|---|---|---|---|",
+    ]
+    for r in qc["meshed"]["bytes_rows"]:
+        kinds = ", ".join(f"{k}:{v}"
+                          for k, v in r["leaf_kind_counts"].items())
+        out.append(
+            f"| {r['policy']} | {r['up_bytes_per_round']:.3e} |"
+            f" {r['down_bytes_per_round']:.3e} | {kinds} |"
+        )
+    return "\n".join(out)
 
 
 def trajectory_table() -> str:
@@ -168,6 +200,10 @@ def main(argv=None):
     if args.trajectory:
         print("\n## Perf trajectory — BENCH_*.json acceptance metrics\n")
         print(trajectory_table())
+        wb = wire_bytes_table()
+        if wb:
+            print("\n## Wire bytes per round — BENCH_quant_comm.json\n")
+            print(wb)
         return
     for mesh in ("pod16x16", "pod2x16x16"):
         print(f"\n## Roofline table — {mesh}\n")

@@ -31,6 +31,8 @@ __all__ = [
     "top_k",
     "uplink_floats_permutation",
     "uplink_floats_rand_k",
+    "uplink_bytes_permutation",
+    "uplink_bytes_rand_k",
 ]
 
 
@@ -68,24 +70,39 @@ def top_k(v: jax.Array, k: int) -> jax.Array:
 
 
 def quantize_stochastic(
-    key: jax.Array, v: jax.Array, bits: int
+    key: jax.Array, v: jax.Array, bits: int, chunk: int = 256
 ) -> jax.Array:
-    """Unbiased per-tensor stochastic-rounding quantizer (symmetric).
+    """Unbiased stochastic-rounding quantizer with PER-CHUNK scales.
 
     Beyond-paper experiment: the paper's conclusion leaves "quantization on
     top of the permutation sparsifier" as an open question; this composes an
     UNBIASED quantizer with the mask, so E[Q(C_i(x))] = C_i(x) and the
     aggregation remains exact in expectation.  See EXPERIMENTS.md §Beyond.
+
+    Scales are per ``chunk`` coordinates rather than one per-tensor max, so
+    a single outlier no longer collapses the resolution of every other
+    coordinate (for ``d <= chunk`` this reduces exactly to the per-tensor
+    scale).  Nonfinite coordinates are excluded from the chunk max and pass
+    through untouched — a NaN is never quantized into a finite value, and
+    (fault-path contract) quantization composes with the payload guards by
+    running AFTER nonfinite-zeroing.
     """
     levels = 2 ** (bits - 1) - 1
-    scale = jnp.max(jnp.abs(v)) / levels
-    scale = jnp.maximum(scale, 1e-12)
-    z = v / scale
+    d = v.shape[-1]
+    nc = -(-d // chunk)
+    a = jnp.where(jnp.isfinite(v), jnp.abs(v), 0.0)
+    pad = nc * chunk - d
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    mx = a.reshape(v.shape[:-1] + (nc, chunk)).max(axis=-1)
+    scale = jnp.maximum(mx / levels, 1e-12)
+    sc = jnp.repeat(scale, chunk, axis=-1)[..., :d]
+    z = v / sc
     low = jnp.floor(z)
     p = z - low
     rnd = jax.random.uniform(key, v.shape)
     q = low + (rnd < p).astype(v.dtype)
-    return q * scale
+    return jnp.where(jnp.isfinite(v), q * sc, v)
 
 
 def uplink_floats_permutation(d: int, c: int, s: int) -> int:
@@ -95,6 +112,34 @@ def uplink_floats_permutation(d: int, c: int, s: int) -> int:
 
 def uplink_floats_rand_k(k: int) -> int:
     return k
+
+
+# dtype-aware wire widths; kept in sync with repro.dist.wire.WIDTH_BYTES
+# (dist must not import this module — it enables x64 — so the table is
+# duplicated here rather than shared)
+_WIRE_WIDTH_BYTES = {
+    "f32": 4.0, "bf16": 2.0, "f16": 2.0, "int8": 1.0, "int4": 0.5,
+}
+_WIRE_CHUNK = 256
+
+
+def uplink_bytes_permutation(
+    d: int, c: int, s: int, kind: str = "f32"
+) -> float:
+    """Wire bytes uploaded per client per round under the permutation mask
+    at wire kind ``kind``.  The f32 path is byte-identical to
+    ``uplink_floats_permutation(d, c, s) * 4``; int kinds add the per-chunk
+    f32 scales shipped alongside the codes."""
+    b = uplink_floats_permutation(d, c, s) * _WIRE_WIDTH_BYTES[kind]
+    if kind in ("int8", "int4"):
+        b += (-(-d // _WIRE_CHUNK)) * 4.0
+    return float(b)
+
+
+def uplink_bytes_rand_k(k: int, kind: str = "f32") -> float:
+    """rand-k value payload at wire width ``kind``; the f32 path is
+    byte-identical to ``uplink_floats_rand_k(k) * 4``."""
+    return float(k * _WIRE_WIDTH_BYTES[kind])
 
 
 def split_cohort(

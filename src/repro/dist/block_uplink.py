@@ -104,6 +104,9 @@ def block_rs_aggregate(
     down: Optional[Any] = None,
     arrived: Optional[Any] = None,
     correct: bool = True,
+    wire: Optional[str] = None,
+    wire_seed=None,
+    wire_down: bool = False,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
@@ -134,7 +137,8 @@ def block_rs_aggregate(
     DownCom targets only the ``down`` rows.  Defaults = full
     participation, the original template.  ``arrived``/``correct`` are
     the fault-tolerant aggregation inputs (DESIGN.md §12, see
-    ``comm_ws.blocked_comm``).
+    ``comm_ws.blocked_comm``); ``wire``/``wire_seed``/``wire_down`` the
+    quantized wire (§13, see ``comm_ws.cyclic_comm``).
     """
     del model_cfg
     if meshed is None:
@@ -144,4 +148,5 @@ def block_rs_aggregate(
         c=c, slot_of=slot_of, down=down, arrived=arrived, correct=correct,
         meshed=meshed, mesh=mesh, pspecs=pspecs,
         shard_kernels=shard_kernels,
+        wire=wire, wire_seed=wire_seed, wire_down=wire_down,
     )

@@ -117,6 +117,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import wire as _wire
+
 __all__ = [
     "WorkspaceSpec",
     "workspace_spec",
@@ -181,17 +183,25 @@ class WorkspaceSpec:
     offsets: Tuple[int, ...]  # leaf start offsets in the flat axis
     d_total: int
     rows_total: int = -1  # global client rows (== n when unsharded)
+    wire_kinds: Tuple[str, ...] = ()  # per-leaf wire kind (empty: all f32)
 
 
 def workspace_spec(
-    leaves: Sequence[Any], rows_total: Optional[int] = None
+    leaves: Sequence[Any], rows_total: Optional[int] = None,
+    wire: Optional[str] = None, wire_dims: Optional[Sequence[int]] = None,
 ) -> WorkspaceSpec:
     """Offset table for a list of stacked leaves (arrays or structs).
-    ``rows_total`` marks a shard-local spec with the global row count."""
+    ``rows_total`` marks a shard-local spec with the global row count.
+    ``wire`` resolves the size-adaptive per-leaf wire precision at spec
+    build time (``dist/wire.py``): ``wire_kinds[i]`` is leaf i's payload
+    dtype on the UpCom wire.  ``wire_dims`` overrides the leaf sizes the
+    policy sees (the GLOBAL dims under the shard engine, where the local
+    block is smaller than the leaf)."""
     shapes = tuple(tuple(a.shape) for a in leaves)
     dims = tuple(int(np.prod(s[1:])) for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + dims)[:-1])
     n = int(shapes[0][0]) if shapes else 0
+    pdims = tuple(wire_dims) if wire_dims is not None else dims
     return WorkspaceSpec(
         n=n,
         shapes=shapes,
@@ -200,6 +210,7 @@ def workspace_spec(
         offsets=offsets,
         d_total=int(sum(dims)),
         rows_total=n if rows_total is None else int(rows_total),
+        wire_kinds=tuple(_wire.resolve_kind(D, wire) for D in pdims),
     )
 
 
@@ -270,12 +281,174 @@ def _block_band_np(dims: Tuple[int, ...], n: int) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# quantized wire (dist/wire.py fused into every impl — DESIGN.md §13)
+#
+# The one rule all four impls share: quantization is a PER-ROW function of
+# the leaf payload (row r's wire values depend only on row r, keyed on
+# (round seed, leaf, global row id, leaf coordinate id)), applied to the
+# UpCom numerator ONLY — the h-update and the DownCom passthrough read the
+# raw f32 payload, mirroring the convergence-validated core path
+# (core/tamuna.py: X_up feeds aggregate_masked, h updates against X).
+# Q(0) == 0 exactly, so idle/faulted rows need no special casing, and the
+# survivor-aware 1/(arrived owner count) rebuild divides AFTER
+# dequantization — PR 6's fault semantics are unchanged.
+# --------------------------------------------------------------------------
+
+
+def _wire_policy(wire: Optional[str]) -> Optional[str]:
+    """None/"f32" -> None: the f32 path takes the PR 6 code verbatim."""
+    return wire if _wire.is_wire(wire) else None
+
+
+def _wire_seed(wire_seed) -> jax.Array:
+    if wire_seed is None:
+        return jnp.uint32(0)
+    return jnp.asarray(wire_seed).astype(jnp.uint32)
+
+
+def _leaf_quant(kind, seed, li, D, row0=None, coords=None, axes=()):
+    """Closure quantize-dequantizing one leaf's ``(rows, D_local)`` f32
+    payload at ``kind`` (None when the leaf stays f32).  ``coords`` is
+    the block's GLOBAL coordinate index for model-sharded leaves (``D``
+    is the global leaf dim there, ``axes`` its model mesh axes);
+    ``row0`` offsets the global client-row ids under the shard engine."""
+    if kind == "f32":
+        return None
+    sl = _wire.fold_seed(seed, li)
+
+    def quant(xf):
+        rid = jnp.arange(xf.shape[0], dtype=jnp.int32)
+        if row0 is not None:
+            rid = rid + row0
+        rid = rid.astype(jnp.uint32)[:, None]
+        kk = (jnp.arange(D, dtype=jnp.int32) if coords is None else coords)
+        if kind in _wire.LEVELS and coords is not None:
+            scales = _wire.leaf_scales_at(
+                xf, kk, _wire.n_chunks(D), kind, axes
+            )
+            return _wire.quantize(
+                xf, kind, sl, rid, kk, scales, kk // _wire.CHUNK
+            )
+        return _wire.quantize(xf, kind, sl, rid, kk)
+
+    return quant
+
+
+def _down_quant(kind, seed, li, D, coords=None, axes=()):
+    """The DownCom broadcast quantizer (LoCoDL-style bidirectional
+    compression): ONE shared quantization of ``x_bar`` per leaf — a
+    pseudo row id keys the draw, independent of every uplink row — so
+    all clients apply the same ``Q(x_bar)`` and the control-variate
+    invariant holds with ``x_bar`` replaced by ``Q(x_bar)``."""
+    if kind == "f32":
+        return None
+    sl = _wire.fold_seed(seed, li)
+
+    def quant(xb):
+        x2 = xb[None, :]
+        rid = jnp.full((1, 1), _wire.DOWN_ROW, jnp.uint32)
+        kk = (jnp.arange(D, dtype=jnp.int32) if coords is None else coords)
+        if kind in _wire.LEVELS and coords is not None:
+            scales = _wire.leaf_scales_at(
+                x2, kk, _wire.n_chunks(D), kind, axes
+            )
+            return _wire.quantize(
+                x2, kind, sl, rid, kk, scales, kk // _wire.CHUNK
+            )[0]
+        return _wire.quantize(x2, kind, sl, rid, kk)[0]
+
+    return quant
+
+
+def _make_xbar_tx(offsets, ldims, gdims, idxs, kinds, seed,
+                  coords=None, axes=None):
+    """Workspace-level DownCom quantizer: split the flat ``x_bar`` at the
+    packed leaf offsets, quantize each leaf with its own kind/seed, and
+    re-concatenate.  ``ldims`` are the packed (local) dims, ``gdims`` the
+    global leaf dims the chunk layout follows."""
+    def tx(xb):
+        parts = []
+        for j, i in enumerate(idxs):
+            dq = _down_quant(
+                kinds[i], seed, i, gdims[j],
+                None if coords is None else coords[j],
+                () if axes is None else axes[j],
+            )
+            seg = xb[offsets[j]:offsets[j] + ldims[j]]
+            parts.append(seg if dq is None else dq(seg))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return tx
+
+
+@functools.lru_cache(maxsize=None)
+def _wire_chunkcol_np(dims: Tuple[int, ...]) -> np.ndarray:
+    """Packed-workspace scale-column table: per coordinate, the column of
+    the concatenated per-leaf chunk-scale array its dequant reads."""
+    parts, off = [], 0
+    for D in dims:
+        parts.append(np.arange(D, dtype=np.int64) // _wire.CHUNK + off)
+        off += _wire.n_chunks(D)
+    return (np.concatenate(parts) if parts
+            else np.zeros((0,), np.int64)).astype(np.int32)
+
+
+def _wire_pack(flats, leaf_ids, gdims, kind, seed, row0=None,
+               coords=None, axes=None):
+    """Pack one kind-group's wire payload from per-leaf f32 ``(rows, D)``
+    matrices.  Float kinds: one narrow-dtype lane buffer (scales/chunk
+    table None).  Int kinds: ``(rows, d)`` int8 codes + ``(rows,
+    nchunk_total)`` scales + the ``(d,)`` scale-column table.  ``gdims``
+    are the GLOBAL leaf dims (the chunk layout); ``coords``/``axes``
+    handle model-sharded blocks under the shard engine."""
+    if kind in ("bf16", "f16"):
+        vals = [_wire.narrow(f, kind) for f in flats]
+        w = vals[0] if len(vals) == 1 else jnp.concatenate(vals, axis=1)
+        return w, None, None
+    codes_l, scales_l, chunk_l = [], [], []
+    for j, f in enumerate(flats):
+        D = gdims[j]
+        sl = _wire.fold_seed(seed, leaf_ids[j])
+        rid = jnp.arange(f.shape[0], dtype=jnp.int32)
+        if row0 is not None:
+            rid = rid + row0
+        rid = rid.astype(jnp.uint32)[:, None]
+        kk = None if coords is None else coords[j]
+        if kk is None:
+            kk = jnp.arange(D, dtype=jnp.int32)
+            scales = _wire.leaf_scales(f, kind)
+        else:
+            scales = _wire.leaf_scales_at(
+                f, kk, _wire.n_chunks(D), kind,
+                () if axes is None else axes[j],
+            )
+        cc = kk // _wire.CHUNK
+        q, sc = _wire.quantize_to_int(f, kind, sl, rid, kk, scales, cc)
+        codes_l.append(q)
+        scales_l.append(sc)
+        chunk_l.append(cc)
+    static = coords is None or all(k is None for k in coords)
+    if static:
+        chunkcol = jnp.asarray(_wire_chunkcol_np(tuple(gdims)))
+    else:
+        off = np.cumsum([0] + [_wire.n_chunks(D) for D in gdims])[:-1]
+        chunkcol = jnp.concatenate([
+            c + jnp.int32(int(o)) for c, o in zip(chunk_l, off)
+        ])
+    codes = (codes_l[0] if len(codes_l) == 1
+             else jnp.concatenate(codes_l, axis=1))
+    scales = (scales_l[0] if len(scales_l) == 1
+              else jnp.concatenate(scales_l, axis=1))
+    return codes, scales, chunkcol
+
+
+# --------------------------------------------------------------------------
 # dense per-leaf reference (the old comm-step math, kept as ground truth)
 # --------------------------------------------------------------------------
 
 
 def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
-                        sanitize=False, survivor=False):
+                        sanitize=False, survivor=False, quant=None,
+                        down_quant=None):
     """One leaf of the dense-mask blocked reference: materialized
     ``(n, D)`` ownership (``(slot_i + block(k)) mod m < s``, the shifted
     blocked template over the ``m`` cohort slots — under full
@@ -286,7 +459,9 @@ def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
     multiply-mask math (this path multiplies by ``qf`` instead of
     selecting, and ``NaN * 0 = NaN`` — a dropped client's corrupted
     payload would otherwise poison x_bar); ``survivor`` switches to the
-    per-coordinate arrived-owner-count rebuild."""
+    per-coordinate arrived-owner-count rebuild.  ``quant`` quantizes the
+    UpCom payload (after the sanitize zeroing; h reads the raw rows) and
+    ``down_quant`` the rebuilt broadcast — see the wire section above."""
     n = xl.shape[0]
     D = int(np.prod(xl.shape[1:]))
     band = jnp.asarray(_block_leaf_band_np(D, m))[None, :]  # (1, D)
@@ -295,11 +470,14 @@ def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
     xf = xl.reshape(n, D).astype(jnp.float32)
     if sanitize:
         xf = jnp.where(sl >= 0, xf, 0.0)
-    num = (xf * qf).sum(axis=0)
+    xq = xf if quant is None else quant(xf)
+    num = (xq * qf).sum(axis=0)
     if survivor:
         x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
     else:
         x_bar, covered = num / s, None
+    if down_quant is not None:
+        x_bar = down_quant(x_bar)
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
@@ -310,14 +488,16 @@ def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
 
 
 def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None,
-                       sanitize=False, survivor=False):
+                       sanitize=False, survivor=False, quant=None,
+                       down_quant=None):
     """One leaf of the reference masked_psum comm step: materialized
     ``(n, D)`` mask (both template regimes of paper Fig. 1), masked sum,
     1/s rebuild, masked h-update, broadcast.  The mask is derived from the
     property-tested ``masks.mask_from_permutation`` (identity permutation:
     ``slot`` already IS the template column), so this ground truth never
     drifts from the algorithm spec the fused paths are tested against.
-    ``sanitize``/``survivor``: see ``_dense_blocked_leaf``."""
+    ``sanitize``/``survivor``/``quant``/``down_quant``: see
+    ``_dense_blocked_leaf``."""
     from repro.core import masks  # jax/np only; no x64 side effect
 
     n = xl.shape[0]
@@ -332,11 +512,14 @@ def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None,
     xf = xl.reshape(n, D).astype(jnp.float32)
     if sanitize:
         xf = jnp.where(sl >= 0, xf, 0.0)
-    num = (xf * qf).sum(axis=0)
+    xq = xf if quant is None else quant(xf)
+    num = (xq * qf).sum(axis=0)
     if survivor:
         x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
     else:
         x_bar, covered = num / s, None
+    if down_quant is not None:
+        x_bar = down_quant(x_bar)
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
         x_bar[None] - xf
     )
@@ -415,23 +598,35 @@ def _survivor_bar(num, cnt):
 
 
 def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int,
-                 down=None, survivor=False):
+                 down=None, survivor=False, wire_x=None, wire_scales=None,
+                 wire_chunk=None, xbar_tx=None):
     from repro.kernels import uplink  # lazy: keep dist importable w/o pallas
 
+    def _msum(counts):
+        # wire lanes: int codes dequantize in-tile against their chunk
+        # scales; narrow float lanes cast per tile — either way the
+        # accumulation (and the psum shape upstream) stays f32
+        if wire_scales is not None:
+            return uplink.masked_sum_dequant(
+                wire_x, wire_scales, wire_chunk, slot, band, m, s,
+                counts=counts, block=block,
+            )
+        xin = xw if wire_x is None else wire_x
+        return uplink.masked_sum(
+            xin, slot, band, m, s, counts=counts, block=block
+        )
+
     if survivor:
-        num, cnt = uplink.masked_sum(
-            xw, slot, band, m, s, counts=True, block=block
-        )
+        num, cnt = _msum(True)
+        # survivor rebuild AFTER dequantization: PR 6 semantics unchanged
         x_bar, covered = _survivor_bar(num, cnt)
-        h_new, x_new = uplink.h_update(
-            xw, hw, x_bar, slot, band, m, s, float(scale), down=down,
-            covered=covered, block=block,
-        )
-        return x_bar, h_new, x_new
-    x_bar = uplink.masked_sum(xw, slot, band, m, s, block=block)
+    else:
+        x_bar, covered = _msum(False), None
+    if xbar_tx is not None:
+        x_bar = xbar_tx(x_bar)
     h_new, x_new = uplink.h_update(
         xw, hw, x_bar, slot, band, m, s, float(scale), down=down,
-        block=block,
+        covered=covered, block=block,
     )
     return x_bar, h_new, x_new
 
@@ -513,6 +708,9 @@ def _shard_comm(
     down: Optional[jax.Array] = None,  # (n,) DownCom rows; None = all
     faulted: bool = False,  # an arrival mask was applied to ``slot``
     survivor: bool = False,  # per-coordinate arrived-owner-count rebuild
+    wire: Optional[str] = None,  # wire policy; None/"f32" = f32 lanes
+    wire_seed=None,  # uint32 round seed for the stochastic draws
+    wire_down: bool = False,  # quantize the DownCom broadcast too
 ) -> Tuple[Any, Any]:
     """The shard-resident comm step: one ``shard_map`` over the dp axes.
 
@@ -590,6 +788,22 @@ def _shard_comm(
     gD = [int(np.prod(g)) if g else 1 for g in gtrail]
     tall = [template == "cyclic" and D * s < m for D in gD]
 
+    # the wire policy resolves on the GLOBAL leaf dims — the same kinds
+    # every unsharded impl resolves, so quantized values agree bitwise
+    wirep = _wire_policy(wire)
+    wseed = _wire_seed(wire_seed) if wirep is not None else None
+    wdown = bool(wire_down) and wirep is not None
+    kinds = [
+        _wire.resolve_kind(D, wirep) if wirep is not None else "f32"
+        for D in gD
+    ]
+
+    def _leaf_axes(i):
+        names = []
+        for entry in trail[i]:
+            names.extend(_shr.spec_dim_axes(entry))
+        return tuple(names)
+
     leaf_specs = tuple(P(dp, *tr) for tr in trail)
 
     def _leaf_band(i, k_arr):
@@ -629,6 +843,19 @@ def _shard_comm(
             for i, a in enumerate(xs)
         ]
         xfs = [a.reshape(rows, -1).astype(jnp.float32) for a in xs]
+        # quantized UpCom payloads (local rows, global row ids/coords —
+        # bitwise the unsharded impls' rows).  Unused entries (f32 leaves,
+        # kernel-covered leaves packing their own codes) are dead code XLA
+        # drops; h/DownCom keep reading the raw xfs.
+        xqs = list(xfs)
+        if wirep is not None:
+            for i in range(len(xs)):
+                q = _leaf_quant(
+                    kinds[i], wseed, i, gD[i], row0=row0,
+                    coords=coords[i], axes=_leaf_axes(i),
+                )
+                if q is not None:
+                    xqs[i] = q(xfs[i])
 
         def local_partial(i, counts=False):
             """This shard's UpCom partial, 1/s folded in (``counts=True``,
@@ -651,7 +878,7 @@ def _shard_comm(
             the cheap one; on TPU the Pallas kernels cover these leaves
             instead.
             """
-            xf = xfs[i]
+            xf = xqs[i]  # the wire payload (== xfs[i] on the f32 path)
             if (template == "blocked" and coords[i] is None
                     and rows >= s):
                 D = gD[i]
@@ -721,44 +948,89 @@ def _shard_comm(
         if covered:
             from repro.kernels import uplink
 
-            spec = workspace_spec([xs[i] for i in covered],
-                                  rows_total=n + pad)
-            hspec = workspace_spec([hs[i] for i in covered],
-                                   rows_total=n + pad)
-            xw = pack([xs[i] for i in covered], spec)
-            hw = pack([hs[i] for i in covered], hspec)
-            band_parts = [_leaf_band(i, coords[i]) for i in covered]
-            band_ws = (band_parts[0] if len(band_parts) == 1
-                       else jnp.concatenate(band_parts))
-            if survivor:
-                num_ws, cnt_ws = uplink.masked_sum(
-                    xw, sl, band_ws, m, s, counts=True, block=block
-                )
-                xbar_ws, cov_ws = _survivor_bar(
-                    _psum(num_ws), _psum(cnt_ws)
-                )
-                h_new_ws, x_new_ws = uplink.h_update(
-                    xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
-                    down=dw, covered=cov_ws, block=block,
-                )
+            # one workspace (and one d-sized psum) per wire kind: the f32
+            # path is a single group taking the PR 6 code verbatim; under
+            # "auto" at most two (f16 + int8)
+            if wirep is None:
+                groups = [(None, covered)]
             else:
-                xbar_ws = _psum(
-                    uplink.masked_sum(xw, sl, band_ws, m, s, block=block)
-                )
-                h_new_ws, x_new_ws = uplink.h_update(
-                    xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
-                    down=dw, block=block,
-                )
-            xs_un = unpack(x_new_ws, spec)
-            hs_un = unpack(h_new_ws, hspec)
-            for j, i in enumerate(covered):
-                out_x[i], out_h[i] = xs_un[j], hs_un[j]
+                gmap: dict = {}
+                for i in covered:
+                    gmap.setdefault(kinds[i], []).append(i)
+                groups = sorted(gmap.items())
+            for gkind, idxs in groups:
+                gdims = [gD[i] for i in idxs]
+                spec = workspace_spec([xs[i] for i in idxs],
+                                      rows_total=n + pad, wire=wirep,
+                                      wire_dims=gdims)
+                hspec = workspace_spec([hs[i] for i in idxs],
+                                       rows_total=n + pad)
+                xw = pack([xs[i] for i in idxs], spec)
+                hw = pack([hs[i] for i in idxs], hspec)
+                band_parts = [_leaf_band(i, coords[i]) for i in idxs]
+                band_ws = (band_parts[0] if len(band_parts) == 1
+                           else jnp.concatenate(band_parts))
+                wx = wsc = wcc = tx = None
+                if gkind is not None:
+                    flats = [xw[:, o:o + D]
+                             for o, D in zip(spec.offsets, spec.dims)]
+                    wx, wsc, wcc = _wire_pack(
+                        flats, idxs, gdims, gkind, wseed, row0=row0,
+                        coords=[coords[i] for i in idxs],
+                        axes=[_leaf_axes(i) for i in idxs],
+                    )
+                if wdown:
+                    tx = _make_xbar_tx(
+                        spec.offsets, spec.dims, gdims, idxs, kinds,
+                        wseed, coords=[coords[i] for i in idxs],
+                        axes=[_leaf_axes(i) for i in idxs],
+                    )
+
+                def _msum(counts, _xw=xw, _wx=wx, _wsc=wsc, _wcc=wcc,
+                          _band=band_ws):
+                    if _wsc is not None:
+                        return uplink.masked_sum_dequant(
+                            _wx, _wsc, _wcc, sl, _band, m, s,
+                            counts=counts, block=block,
+                        )
+                    xin = _xw if _wx is None else _wx
+                    return uplink.masked_sum(
+                        xin, sl, _band, m, s, counts=counts, block=block
+                    )
+
+                if survivor:
+                    num_ws, cnt_ws = _msum(True)
+                    xbar_ws, cov_ws = _survivor_bar(
+                        _psum(num_ws), _psum(cnt_ws)
+                    )
+                    if tx is not None:
+                        xbar_ws = tx(xbar_ws)
+                    h_new_ws, x_new_ws = uplink.h_update(
+                        xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
+                        down=dw, covered=cov_ws, block=block,
+                    )
+                else:
+                    xbar_ws = _psum(_msum(False))
+                    if tx is not None:
+                        xbar_ws = tx(xbar_ws)
+                    h_new_ws, x_new_ws = uplink.h_update(
+                        xw, hw, xbar_ws, sl, band_ws, m, s, float(scale),
+                        down=dw, block=block,
+                    )
+                xs_un = unpack(x_new_ws, spec)
+                hs_un = unpack(h_new_ws, hspec)
+                for j, i in enumerate(idxs):
+                    out_x[i], out_h[i] = xs_un[j], hs_un[j]
         for i in rest:
             if survivor:
                 num, cnt = local_partial(i, counts=True)
                 x_bar, cov = _survivor_bar(_psum(num), _psum(cnt))
             else:
                 x_bar, cov = _psum(local_partial(i)), None
+            if wdown:
+                x_bar = _down_quant(
+                    kinds[i], wseed, i, gD[i], coords[i], _leaf_axes(i)
+                )(x_bar)
             out_x[i], out_h[i] = _finish_leaf(
                 xs[i], hs[i], xfs[i], x_bar, _owned(i, coords[i], sl2),
                 scale, dw, cov,
@@ -806,6 +1078,9 @@ def cyclic_comm(
     mesh=None,
     pspecs=None,
     shard_kernels: Optional[bool] = None,
+    wire: Optional[str] = None,
+    wire_seed=None,
+    wire_down: bool = False,
 ) -> Tuple[Any, Any]:
     """masked_psum UpCom + h-update + DownCom for the cyclic template.
 
@@ -822,6 +1097,14 @@ def cyclic_comm(
     shard-resident engine (``pspecs``: the stacked state's PartitionSpecs,
     client split only when None; ``shard_kernels``: force/suppress the
     per-shard Pallas kernels, default per backend).
+
+    ``wire`` narrows the UpCom payload per the §13 wire format (policy
+    from ``repro.dist.wire``; ``None``/``"f32"`` take the PR 6 code paths
+    verbatim), ``wire_seed`` is the round's uint32 quantization seed
+    (``wire.round_seed``), and ``wire_down`` additionally quantizes the
+    DownCom broadcast.  All four impls quantize the same (row, coord)
+    payload with the same counter-hash draw, so they agree to float-sum
+    reordering exactly as on the f32 path.
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     faulted = arrived is not None
@@ -835,6 +1118,7 @@ def cyclic_comm(
             x, h, slot, c, s, scale, template="cyclic", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
             down=down, faulted=faulted, survivor=survivor,
+            wire=wire, wire_seed=wire_seed, wire_down=wire_down,
         )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
@@ -842,6 +1126,11 @@ def cyclic_comm(
     n = xflat[0].shape[0] if xflat else 0
     out_x: List[Any] = [None] * len(xflat)
     out_h: List[Any] = [None] * len(xflat)
+    wirep = _wire_policy(wire)
+    wseed = _wire_seed(wire_seed) if wirep is not None else None
+    wdown = bool(wire_down) and wirep is not None
+    kinds = [_wire.resolve_kind(D, wirep) if wirep is not None else "f32"
+             for D in dims]
 
     if impl == "ws":
         client_of = None
@@ -867,6 +1156,12 @@ def cyclic_comm(
             D = dims[i]
             cols, band, tall = _cyclic_leaf_tables_np(D, c, s)
             xf = xl.reshape(n, D).astype(jnp.float32)
+            quant = _leaf_quant(kinds[i], wseed, i, D)
+            # UpCom reads the wire payload; the h-update below reads the
+            # raw rows (core/tamuna.py quantizes the numerator only).
+            # Masking is where-select, so quantizing unsanitized idle rows
+            # is safe — an owner row's payload is identical in every impl.
+            xq = xf if quant is None else quant(xf)
             if tall:
                 kj = jnp.arange(D, dtype=jnp.int32)[None, :]
                 owned = (sl < D * s) & (sl % D == kj)
@@ -878,7 +1173,7 @@ def cyclic_comm(
                 # on other shards, so a gather would all-gather (n, D) --
                 # keep the psum shape (a d-sized all-reduce, the minimum)
                 # with the predicate fused into the local partial sum
-                num = jnp.where(owned, xf, 0.0).sum(axis=0)
+                num = jnp.where(owned, xq, 0.0).sum(axis=0)
                 if survivor:
                     x_bar, cov = _survivor_bar(
                         num, owned.astype(jnp.float32).sum(axis=0)
@@ -888,7 +1183,7 @@ def cyclic_comm(
             else:
                 # sparse UpCom: s row-gathers + 1/s rebuild, O(s D) reads
                 rows = client_of[jnp.asarray(cols)]  # (s, D) owner rows
-                vals = jnp.take_along_axis(xf, rows, axis=0)
+                vals = jnp.take_along_axis(xq, rows, axis=0)
                 if faulted:
                     ok = col_ok[jnp.asarray(cols)]  # (s, D) owner arrived
                     num = jnp.where(ok, vals, 0.0).sum(axis=0)
@@ -900,6 +1195,8 @@ def cyclic_comm(
                         x_bar, cov = num / s, None
                 else:
                     x_bar, cov = vals.sum(axis=0) / s, None
+            if wdown:
+                x_bar = _down_quant(kinds[i], wseed, i, D)(x_bar)
             out_x[i], out_h[i] = _finish_leaf(
                 xl, hl, xf, x_bar, owned, scale, down, cov
             )
@@ -918,22 +1215,48 @@ def cyclic_comm(
         out_x[i], out_h[i] = _dense_cyclic_leaf(
             xflat[i], hflat[i], slot, c, s, scale, down,
             sanitize=faulted, survivor=survivor,
+            quant=_leaf_quant(kinds[i], wseed, i, dims[i]),
+            down_quant=(_down_quant(kinds[i], wseed, i, dims[i])
+                        if wdown else None),
         )
 
     if covered:
-        spec = workspace_spec([xflat[i] for i in covered])
-        hspec = workspace_spec([hflat[i] for i in covered])
-        xw = pack([xflat[i] for i in covered], spec)
-        hw = pack([hflat[i] for i in covered], hspec)
-        band = jnp.asarray(_cyclic_band_np(spec.dims, c, s))
-        _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, c, s, scale, block, down=down,
-            survivor=survivor,
-        )
-        xs = unpack(x_new_ws, spec)
-        hs = unpack(h_new_ws, hspec)
-        for j, i in enumerate(covered):
-            out_x[i], out_h[i] = xs[j], hs[j]
+        # one workspace per wire kind (see _shard_comm): the f32 path is
+        # the single group (None, covered) running the PR 6 code verbatim
+        if wirep is None:
+            groups = [(None, covered)]
+        else:
+            gmap: dict = {}
+            for i in covered:
+                gmap.setdefault(kinds[i], []).append(i)
+            groups = sorted(gmap.items())
+        for gkind, idxs in groups:
+            spec = workspace_spec([xflat[i] for i in idxs], wire=wirep)
+            hspec = workspace_spec([hflat[i] for i in idxs])
+            xw = pack([xflat[i] for i in idxs], spec)
+            hw = pack([hflat[i] for i in idxs], hspec)
+            band = jnp.asarray(_cyclic_band_np(spec.dims, c, s))
+            wx = wsc = wcc = tx = None
+            if gkind is not None:
+                flats = [xw[:, o:o + D]
+                         for o, D in zip(spec.offsets, spec.dims)]
+                wx, wsc, wcc = _wire_pack(
+                    flats, idxs, list(spec.dims), gkind, wseed
+                )
+            if wdown:
+                tx = _make_xbar_tx(
+                    spec.offsets, spec.dims, list(spec.dims), idxs,
+                    kinds, wseed,
+                )
+            _, h_new_ws, x_new_ws = _pallas_comm(
+                xw, hw, slot, band, c, s, scale, block, down=down,
+                survivor=survivor, wire_x=wx, wire_scales=wsc,
+                wire_chunk=wcc, xbar_tx=tx,
+            )
+            xs = unpack(x_new_ws, spec)
+            hs = unpack(h_new_ws, hspec)
+            for j, i in enumerate(idxs):
+                out_x[i], out_h[i] = xs[j], hs[j]
 
     return (
         jax.tree.unflatten(treedef, out_x),
@@ -960,6 +1283,9 @@ def blocked_comm(
     mesh=None,
     pspecs=None,
     shard_kernels: Optional[bool] = None,
+    wire: Optional[str] = None,
+    wire_seed=None,
+    wire_down: bool = False,
 ) -> Tuple[Any, Any]:
     """block_rs UpCom + h-update + DownCom for the blocked template.
 
@@ -986,6 +1312,9 @@ def blocked_comm(
     engine (see ``cyclic_comm``) — the contiguous per-block gathers run on
     each shard's local rows and the block partials combine in one psum,
     the true reduce-scatter decomposition of the blocked uplink.
+
+    ``wire``/``wire_seed``/``wire_down``: the quantized wire (§13); see
+    ``cyclic_comm``.
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     off = jnp.asarray(off, jnp.int32)
@@ -1015,37 +1344,73 @@ def blocked_comm(
             x, h, slot, m, s, scale, template="blocked", mesh=mesh,
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
             down=down, faulted=faulted, survivor=survivor,
+            wire=wire, wire_seed=wire_seed, wire_down=wire_down,
         )
+    xflat, treedef = jax.tree.flatten(x)
+    hflat = jax.tree.leaves(h)
+    dims = [int(np.prod(a.shape[1:])) for a in xflat]
+    wirep = _wire_policy(wire)
+    wseed = _wire_seed(wire_seed) if wirep is not None else None
+    wdown = bool(wire_down) and wirep is not None
+    kinds = [_wire.resolve_kind(D, wirep) if wirep is not None else "f32"
+             for D in dims]
+
     if impl == "dense":
-        xflat, treedef = jax.tree.flatten(x)
-        hflat = jax.tree.leaves(h)
         pairs = [
-            _dense_blocked_leaf(xl, hl, slot, m, s, scale, down,
-                                sanitize=faulted, survivor=survivor)
-            for xl, hl in zip(xflat, hflat)
+            _dense_blocked_leaf(
+                xl, hl, slot, m, s, scale, down,
+                sanitize=faulted, survivor=survivor,
+                quant=_leaf_quant(kinds[i], wseed, i, dims[i]),
+                down_quant=(_down_quant(kinds[i], wseed, i, dims[i])
+                            if wdown else None),
+            )
+            for i, (xl, hl) in enumerate(zip(xflat, hflat))
         ]
         return (
             jax.tree.unflatten(treedef, [a for a, _ in pairs]),
             jax.tree.unflatten(treedef, [b for _, b in pairs]),
         )
 
-    xflat, treedef = jax.tree.flatten(x)
-    hflat = jax.tree.leaves(h)
-    dims = [int(np.prod(a.shape[1:])) for a in xflat]
-
     if impl == "pallas":
-        spec = workspace_spec(xflat)
-        hspec = workspace_spec(hflat)
-        xw = pack(xflat, spec)
-        hw = pack(hflat, hspec)
-        band = jnp.asarray(_block_band_np(spec.dims, m))
-        _, h_new_ws, x_new_ws = _pallas_comm(
-            xw, hw, slot, band, m, s, scale, block, down=down,
-            survivor=survivor,
-        )
+        out_x = [None] * len(xflat)
+        out_h = [None] * len(xflat)
+        if wirep is None:
+            groups = [(None, list(range(len(xflat))))]
+        else:
+            gmap: dict = {}
+            for i in range(len(xflat)):
+                gmap.setdefault(kinds[i], []).append(i)
+            groups = sorted(gmap.items())
+        for gkind, idxs in groups:
+            spec = workspace_spec([xflat[i] for i in idxs], wire=wirep)
+            hspec = workspace_spec([hflat[i] for i in idxs])
+            xw = pack([xflat[i] for i in idxs], spec)
+            hw = pack([hflat[i] for i in idxs], hspec)
+            band = jnp.asarray(_block_band_np(spec.dims, m))
+            wx = wsc = wcc = tx = None
+            if gkind is not None:
+                flats = [xw[:, o:o + D]
+                         for o, D in zip(spec.offsets, spec.dims)]
+                wx, wsc, wcc = _wire_pack(
+                    flats, idxs, list(spec.dims), gkind, wseed
+                )
+            if wdown:
+                tx = _make_xbar_tx(
+                    spec.offsets, spec.dims, list(spec.dims), idxs,
+                    kinds, wseed,
+                )
+            _, h_new_ws, x_new_ws = _pallas_comm(
+                xw, hw, slot, band, m, s, scale, block, down=down,
+                survivor=survivor, wire_x=wx, wire_scales=wsc,
+                wire_chunk=wcc, xbar_tx=tx,
+            )
+            xs = unpack(x_new_ws, spec)
+            hs = unpack(h_new_ws, hspec)
+            for j, i in enumerate(idxs):
+                out_x[i], out_h[i] = xs[j], hs[j]
         return (
-            jax.tree.unflatten(treedef, unpack(x_new_ws, spec)),
-            jax.tree.unflatten(treedef, unpack(h_new_ws, hspec)),
+            jax.tree.unflatten(treedef, out_x),
+            jax.tree.unflatten(treedef, out_h),
         )
 
     # impl == "ws": s rolled adds (contiguous per-block gathers, no pad)
@@ -1077,6 +1442,8 @@ def blocked_comm(
         nf, tail = divmod(D, chunk)  # full blocks + ragged tail block
         nb = nf + (1 if tail else 0)
         xf = xl.reshape(n, D).astype(jnp.float32)
+        quant = _leaf_quant(kinds[i], wseed, i, D)
+        xq = xf if quant is None else quant(xf)  # wire payload; h reads xf
         # blocked ownership is block-granular: evaluate the predicate at
         # (n, nb) (tiny) and expand to coordinates with a repeat — beats
         # recomputing an (n, D) predicate (measured, DESIGN.md §9)
@@ -1087,7 +1454,7 @@ def blocked_comm(
         if meshed:
             # sharded client axis: keep the d-sized all-reduce shape (see
             # cyclic_comm); the predicate fuses into the partial sum
-            num = jnp.where(owned, xf, 0.0).sum(axis=0)
+            num = jnp.where(owned, xq, 0.0).sum(axis=0)
             if survivor:
                 x_bar, cov = _survivor_bar(
                     num, owned.astype(jnp.float32).sum(axis=0)
@@ -1095,7 +1462,7 @@ def blocked_comm(
             else:
                 x_bar = num / s
         else:
-            xm = xf[:, :nf * chunk].reshape(n, nf, chunk)
+            xm = xq[:, :nf * chunk].reshape(n, nf, chunk)
             jf = jnp.arange(nf, dtype=jnp.int32)
             acc = jnp.zeros((nf, chunk), jnp.float32)
             acc_t = jnp.zeros((tail,), jnp.float32)
@@ -1117,12 +1484,12 @@ def blocked_comm(
                     if faulted:
                         ok_t = col_ok[(t - nf) % m]
                         acc_t = acc_t + jnp.where(
-                            ok_t, xf[client_of[(t - nf) % m],
+                            ok_t, xq[client_of[(t - nf) % m],
                                      nf * chunk:], 0.0
                         )
                         cnt_t = cnt_t + ok_t.astype(jnp.float32)
                     else:
-                        acc_t = acc_t + xf[client_of[(t - nf) % m],
+                        acc_t = acc_t + xq[client_of[(t - nf) % m],
                                            nf * chunk:]
             num = jnp.concatenate([acc.reshape(-1), acc_t]) \
                 if tail else acc.reshape(-1)
@@ -1135,6 +1502,8 @@ def blocked_comm(
                 x_bar, cov = _survivor_bar(num, cnt)
             else:
                 x_bar = num / s
+        if wdown:
+            x_bar = _down_quant(kinds[i], wseed, i, D)(x_bar)
         out_x[i], out_h[i] = _finish_leaf(xl, hl, xf, x_bar, owned, scale,
                                           down, cov)
     return (

@@ -91,7 +91,8 @@ def default_elastic(n: int, c: int, dp_total: int) -> bool:
 # never donated — the caller's handle stays valid).
 SampleFn = Callable[[Any, jax.Array], Dict[str, jax.Array]]
 
-TRACE_KEYS = ("loss_sum", "steps", "up_floats", "down_floats")
+TRACE_KEYS = ("loss_sum", "steps", "up_floats", "down_floats",
+              "up_bytes", "down_bytes")
 # extra per-round device traces of the fault-tolerant driver (present in
 # the carry only when ``init_carry(robust_n=...)`` > 0): arrivals = cohort
 # members whose uplink was aggregated, corrupted = members zeroed by the
@@ -141,6 +142,8 @@ def _zero_traces(flush_every: int, robust_n: int = 0) -> Dict[str, jax.Array]:
         "steps": jnp.zeros((flush_every,), jnp.int32),
         "up_floats": jnp.zeros((flush_every,), jnp.float32),
         "down_floats": jnp.zeros((flush_every,), jnp.float32),
+        "up_bytes": jnp.zeros((flush_every,), jnp.float32),
+        "down_bytes": jnp.zeros((flush_every,), jnp.float32),
     }
     if robust_n:
         traces["arrivals"] = jnp.zeros((flush_every,), jnp.int32)
@@ -317,6 +320,10 @@ def make_round_fn(
             "up_floats": traces["up_floats"].at[slot].set(state.up_floats),
             "down_floats": traces["down_floats"].at[slot].set(
                 state.down_floats
+            ),
+            "up_bytes": traces["up_bytes"].at[slot].set(state.up_bytes),
+            "down_bytes": traces["down_bytes"].at[slot].set(
+                state.down_bytes
             ),
         }
         if new_traces is not None:
@@ -688,6 +695,8 @@ def run_rounds(
                     "local_steps": total_steps,
                     "up_floats": float(tr["up_floats"][i]),
                     "down_floats": float(tr["down_floats"][i]),
+                    "up_bytes": float(tr["up_bytes"][i]),
+                    "down_bytes": float(tr["down_bytes"][i]),
                 }
                 if faulted:
                     last.update({

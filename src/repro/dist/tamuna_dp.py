@@ -46,7 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import masks, theory
-from repro.dist import comm_ws, model_api, sharding
+from repro.dist import comm_ws, model_api, sharding, wire
 from repro.models.transformer import ModelConfig
 from repro.optim import optimizers
 
@@ -77,10 +77,24 @@ class DistTamunaConfig:
     local_opt: str = "sgd"  # "sgd" (paper rule) | "adamw" (DESIGN.md §7)
     use_kernel: bool = False  # fused Pallas local-step update (kernels/)
     comm_impl: str = "auto"  # "auto" | "dense" | "ws" | "pallas" (§9)
+    wire_precision: str = "f32"  # UpCom payload width (§13): "auto" |
+    #   "f32" | "bf16" | "f16" | "int8" | "int4" — "f32" is bitwise the
+    #   unquantized path, "auto" resolves per leaf size
+    wire_down: bool = False  # also quantize the DownCom broadcast (§13)
 
     def __post_init__(self):
         if not (2 <= self.s <= self.c):
             raise ValueError(f"need 2 <= s <= c, got s={self.s} c={self.c}")
+        if self.wire_precision not in wire.WIRE_POLICIES:
+            raise ValueError(
+                f"unknown wire_precision {self.wire_precision!r}; want one "
+                f"of {wire.WIRE_POLICIES}"
+            )
+        if self.wire_down and not wire.is_wire(self.wire_precision):
+            raise ValueError(
+                "wire_down quantizes the DownCom broadcast; it needs a "
+                f"non-f32 wire_precision, got {self.wire_precision!r}"
+            )
         if self.uplink not in ("masked_psum", "block_rs"):
             raise ValueError(f"unknown uplink {self.uplink!r}")
         if self.comm_impl not in comm_ws.COMM_IMPLS:
@@ -112,6 +126,11 @@ class DistTamunaState(NamedTuple):
     round: jax.Array  # int32 scalar
     up_floats: jax.Array  # f32 scalar: cumulative uplink floats per client
     down_floats: jax.Array  # f32 scalar
+    # dtype-aware wire accounting (§13): cumulative wire BYTES per client,
+    # resolved from the per-leaf wire kinds at builder time.  On the f32
+    # wire these are byte-identical to floats * 4.
+    up_bytes: jax.Array = None  # f32 scalar
+    down_bytes: jax.Array = None  # f32 scalar
 
 
 # --------------------------------------------------------------------------
@@ -146,6 +165,8 @@ def init_state(
         round=jnp.zeros((), jnp.int32),
         up_floats=jnp.zeros((), jnp.float32),
         down_floats=jnp.zeros((), jnp.float32),
+        up_bytes=jnp.zeros((), jnp.float32),
+        down_bytes=jnp.zeros((), jnp.float32),
     )
 
 
@@ -165,6 +186,7 @@ def state_pspecs(
     return DistTamunaState(
         x=x_spec, h=h_spec, opt=opt_spec,
         round=P(), up_floats=P(), down_floats=P(),
+        up_bytes=P(), down_bytes=P(),
     )
 
 
@@ -421,19 +443,42 @@ def make_comm_step(
     stacked_specs = sharding.stacked_params_pspecs(stacked_struct, cfg, mesh)
     down_total = jnp.float32(sum(dims))
     if tcfg.uplink == "block_rs":
-        up_total = jnp.float32(
-            sum(masks.block_column_nnz(D, c, s) for D in dims)
-        )
+        nnzs = [masks.block_column_nnz(D, c, s) for D in dims]
     else:
-        up_total = jnp.float32(sum(masks.column_nnz(D, c, s) for D in dims))
+        nnzs = [masks.column_nnz(D, c, s) for D in dims]
+    up_total = jnp.float32(sum(nnzs))
+    # dtype-aware wire-bytes accounting (§13), still builder-time: each
+    # leaf's kind resolves from its static dim, so the per-round byte
+    # constants fold at trace time.  Per CLIENT, like the float counters:
+    # leaf_up_bytes at c=1 is one client's codes + (int kinds) its own
+    # per-chunk scales; f32 resolves byte-identical to floats * 4.
+    wire_active = wire.is_wire(tcfg.wire_precision)
+    kinds = tuple(
+        wire.resolve_kind(D, tcfg.wire_precision) for D in dims
+    )
+    up_bytes_total = jnp.float32(sum(
+        wire.leaf_up_bytes(nnz, D, 1, k)
+        for nnz, D, k in zip(nnzs, dims, kinds)
+    ))
+    down_bytes_total = jnp.float32(sum(
+        wire.leaf_down_bytes(D, k if tcfg.wire_down else "f32")
+        for D, k in zip(dims, kinds)
+    ))
 
-    def bump(state, x_new, h_new, up=None):
-        return state._replace(
+    def bump(state, x_new, h_new, up=None, upb=None):
+        upd = dict(
             x=x_new, h=h_new,
             round=state.round + 1,
             up_floats=state.up_floats + (up_total if up is None else up),
             down_floats=state.down_floats + down_total,
         )
+        if state.up_bytes is not None:
+            upd["up_bytes"] = state.up_bytes + (
+                up_bytes_total if upb is None else upb
+            )
+        if state.down_bytes is not None:
+            upd["down_bytes"] = state.down_bytes + down_bytes_total
+        return state._replace(**upd)
 
     def slot_of_(cohort):
         return (
@@ -446,11 +491,23 @@ def make_comm_step(
         arrived cohort members' uplinks consumed bandwidth.  The template
         splits the d coordinates' s-owner slots evenly over the c cohort
         slots, so the arrived fraction of ``up_total`` is the (exact in
-        expectation, per-round approximate) survivor uplink volume."""
+        expectation, per-round approximate) survivor uplink volume.
+        Returns ``(floats, bytes)``; the byte counter scales the same
+        way (a dropped client ships neither codes nor scales)."""
         if arrived is None:
-            return None
+            return None, None
         surv = ((slot_of >= 0) & jnp.asarray(arrived).astype(bool)).sum()
-        return up_total * surv.astype(jnp.float32) / c
+        frac = surv.astype(jnp.float32) / c
+        return up_total * frac, up_bytes_total * frac
+
+    def wire_seed_(key):
+        """The round's uint32 quantization seed, derived off the comm key
+        on a folded-away stream: the ``jax.random.split`` draws for
+        cohort/permutation/offset are untouched, so the f32 wire stays
+        bitwise identical to the unquantized engine."""
+        if not wire_active:
+            return None
+        return wire.round_seed(jax.random.fold_in(key, wire.WIRE_FOLD))
 
     if tcfg.uplink == "block_rs":
         from repro.dist.block_uplink import block_rs_aggregate
@@ -470,10 +527,13 @@ def make_comm_step(
                 state.x, state.h, off, n, tcfg, eta, mesh, model_cfg=cfg,
                 impl=impl, block=block, meshed=True, pspecs=stacked_specs,
                 c=c, slot_of=slot_of, down=down, arrived=arrived,
-                correct=correct,
+                correct=correct, wire=tcfg.wire_precision,
+                wire_seed=wire_seed_(key), wire_down=tcfg.wire_down,
             )
-            return bump(state, xb, hb, up_arrived(slot_of, arrived))
+            up, upb = up_arrived(slot_of, arrived)
+            return bump(state, xb, hb, up, upb)
 
+        fn.wire_kinds = kinds
         return fn
 
     def fn(state: DistTamunaState, key: jax.Array,
@@ -499,9 +559,13 @@ def make_comm_step(
             state.x, state.h, slot, c, s, scale, impl=impl, block=block,
             down=down, arrived=arrived, correct=correct,
             meshed=True, mesh=mesh, pspecs=stacked_specs,
+            wire=tcfg.wire_precision, wire_seed=wire_seed_(key),
+            wire_down=tcfg.wire_down,
         )
-        return bump(state, x_new, h_new, up_arrived(slot_of, arrived))
+        up, upb = up_arrived(slot_of, arrived)
+        return bump(state, x_new, h_new, up, upb)
 
+    fn.wire_kinds = kinds
     return fn
 
 

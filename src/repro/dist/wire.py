@@ -1,0 +1,260 @@
+"""Quantized wire format for the distributed comm path (UpCom/DownCom).
+
+TAMUNA's permutation sparsifier decides WHICH coordinates travel; this
+module decides HOW WIDE they are.  Four wire kinds narrow the payload
+lanes (``f32``/``bf16``/``f16`` deterministic casts, ``int8``/``int4``
+unbiased stochastic rounding with per-chunk scales), plus a
+size-adaptive ``auto`` policy following the Hivemind
+``SizeAdaptiveCompression`` prior: leaves below ``SIZE_THRESHOLD``
+elements go f16, larger leaves go 8-bit stochastic.
+
+Determinism contract: the stochastic rounding draw is a counter-based
+uint32 hash of ``(round seed, leaf index, client row id, leaf
+coordinate id)`` — a pure elementwise function with no carried RNG
+state — so every comm implementation (dense / ws / pallas / shard
+engine) that quantizes the same payload row produces bitwise-identical
+wire values, whether the leaf lives whole on one host or sharded
+across a mesh.  Replay with the same ``comm_round_key`` stream is
+exact.
+
+Fault-guard contract (PR 6 composition): quantization runs on the
+*sanitized* payload (idle/faulted rows already zeroed, ``Q(0) == 0``
+exactly), and a nonfinite coordinate is never quantized into a finite
+value — float kinds pass it through, int kinds poison the containing
+chunk's scale to NaN so dequantization propagates the NaN.
+
+This module is self-contained on purpose: pure jnp, no pallas, and no
+import of :mod:`repro.core.compression` (which enables x64 at import
+time — the dist stack must stay x32).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "WIRE_KINDS",
+    "WIRE_POLICIES",
+    "CHUNK",
+    "SIZE_THRESHOLD",
+    "LEVELS",
+    "WIDTH_BYTES",
+    "resolve_kind",
+    "is_wire",
+    "n_chunks",
+    "leaf_up_bytes",
+    "leaf_down_bytes",
+    "fold_seed",
+    "uniform01",
+    "leaf_scales",
+    "leaf_scales_at",
+    "narrow",
+    "quantize",
+    "quantize_to_int",
+    "round_seed",
+]
+
+WIRE_KINDS = ("f32", "bf16", "f16", "int8", "int4")
+WIRE_POLICIES = ("auto",) + WIRE_KINDS
+
+CHUNK = 256                   # coordinates per stochastic-rounding scale
+SIZE_THRESHOLD = 2 ** 16 + 1  # auto policy: leaves below this go f16
+LEVELS = {"int8": 127, "int4": 7}
+WIDTH_BYTES = {"f32": 4.0, "bf16": 2.0, "f16": 2.0, "int8": 1.0, "int4": 0.5}
+_F_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16}
+_F16_MAX = 65504.0            # finite payloads must stay finite on the wire
+
+# pseudo row id for the (single, shared) DownCom broadcast quantization
+DOWN_ROW = 0xFFFFFFFF
+
+# fold_in constant separating the wire stream from the cohort/permutation
+# streams derived from the same per-round key (see tamuna_dp.make_comm_step)
+WIRE_FOLD = 0x517E
+
+
+def resolve_kind(d: int, policy: Optional[str]) -> str:
+    """Per-leaf wire kind for a leaf of ``d`` coordinates under ``policy``."""
+    if policy is None:
+        return "f32"
+    if policy == "auto":
+        return "f16" if d < SIZE_THRESHOLD else "int8"
+    if policy not in WIRE_KINDS:
+        raise ValueError(
+            f"unknown wire policy {policy!r}; expected one of {WIRE_POLICIES}")
+    return policy
+
+
+def is_wire(policy: Optional[str]) -> bool:
+    """True iff ``policy`` can change any payload (i.e. not the f32 path)."""
+    return policy is not None and policy != "f32"
+
+
+def kind_bits(kind: str) -> int:
+    return int(WIDTH_BYTES[kind] * 8)
+
+
+def n_chunks(d: int) -> int:
+    return -(-d // CHUNK)
+
+
+def leaf_up_bytes(nnz: int, d: int, c: int, kind: str) -> float:
+    """UpCom wire bytes one round costs for a leaf: ``nnz`` owner-coordinate
+    pairs at ``kind`` width; int kinds add the per-chunk f32 scales each of
+    the ``c`` cohort clients ships alongside its codes."""
+    b = nnz * WIDTH_BYTES[kind]
+    if kind in LEVELS:
+        b += c * n_chunks(d) * 4.0
+    return float(b)
+
+
+def leaf_down_bytes(d: int, kind: str) -> float:
+    """DownCom wire bytes for one broadcast of a ``d``-coordinate leaf."""
+    b = d * WIDTH_BYTES[kind]
+    if kind in LEVELS:
+        b += n_chunks(d) * 4.0
+    return float(b)
+
+
+# --------------------------------------------------------------------------
+# counter-based uniform draw: pure elementwise uint32 hash, no RNG state
+# --------------------------------------------------------------------------
+
+
+def _avalanche(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def round_seed(key) -> jax.Array:
+    """Collapse a jax PRNG key into the uint32 wire seed for one round."""
+    kd = jax.random.key_data(key).reshape(-1).astype(jnp.uint32)
+    return _avalanche(kd[0] ^ _avalanche(kd[-1]))
+
+
+def fold_seed(seed, leaf_index: int) -> jax.Array:
+    """Fold a static per-leaf index into the round seed so identical
+    (row, coord) pairs in different leaves draw independent uniforms."""
+    s = jnp.asarray(seed, jnp.uint32)
+    return _avalanche(s ^ (jnp.uint32(leaf_index) * jnp.uint32(0x9E3779B9)))
+
+
+def uniform01(seed, row_ids, coord_ids) -> jax.Array:
+    """U[0,1) keyed on (seed, row, coordinate); shapes broadcast."""
+    h = jnp.asarray(seed, jnp.uint32)
+    h = _avalanche(
+        h ^ (jnp.asarray(row_ids, jnp.uint32) * jnp.uint32(0x9E3779B9)))
+    h = _avalanche(
+        h ^ (jnp.asarray(coord_ids, jnp.uint32) * jnp.uint32(0x85EBCA6B)))
+    return h.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+# --------------------------------------------------------------------------
+# per-chunk scales
+# --------------------------------------------------------------------------
+
+
+def leaf_scales(x2: jax.Array, kind: str) -> Optional[jax.Array]:
+    """Per-row per-chunk scales for int kinds: ``(rows, d) -> (rows,
+    n_chunks(d))``.  Nonfinite entries are excluded from the chunk max
+    (they pass through the quantizer untouched); all-zero chunks clamp
+    to 1e-12 so ``0/scale`` stays exact."""
+    if kind not in LEVELS:
+        return None
+    rows, d = x2.shape
+    nc = n_chunks(d)
+    a = jnp.where(jnp.isfinite(x2), jnp.abs(x2), 0.0)
+    pad = nc * CHUNK - d
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    mx = a.reshape(rows, nc, CHUNK).max(axis=2)
+    return jnp.maximum(mx / LEVELS[kind], 1e-12)
+
+
+def leaf_scales_at(
+    x2: jax.Array, coord_ids: jax.Array, nc: int, kind: str,
+    axis_names=(),
+) -> jax.Array:
+    """Scatter-max form of :func:`leaf_scales` for model-sharded leaves:
+    local values with their GLOBAL coordinate ids; ``pmax`` over the
+    leaf's model axes merges chunks that straddle shard boundaries.
+    max is exact, so this is bitwise-equal to :func:`leaf_scales` on the
+    gathered leaf."""
+    a = jnp.where(jnp.isfinite(x2), jnp.abs(x2), 0.0)
+    mx = jnp.zeros((x2.shape[0], nc), jnp.float32)
+    mx = mx.at[:, coord_ids // CHUNK].max(a)
+    for name in axis_names:
+        mx = jax.lax.pmax(mx, name)
+    return jnp.maximum(mx / LEVELS[kind], 1e-12)
+
+
+# --------------------------------------------------------------------------
+# quantize / dequantize
+# --------------------------------------------------------------------------
+
+
+def narrow(x2: jax.Array, kind: str) -> jax.Array:
+    """Cast a payload to the narrow float wire dtype (the workspace lane
+    dtype).  f16 clips finite values into range so the wire never turns
+    a finite payload into an inf; nonfinite passes through."""
+    y = x2
+    if kind == "f16":
+        lim = jnp.float32(_F16_MAX)
+        y = jnp.where(jnp.isfinite(x2), jnp.clip(x2, -lim, lim), x2)
+    return y.astype(_F_DTYPES[kind])
+
+
+def _codes(x2, sc, seed, row_ids, coord_ids, levels):
+    z = x2 / sc
+    low = jnp.floor(z)
+    u = uniform01(seed, row_ids, coord_ids)
+    q = low + (u < (z - low)).astype(jnp.float32)
+    return jnp.clip(q, -float(levels), float(levels))
+
+
+def quantize(
+    x2: jax.Array, kind: str, seed=None, row_ids=None, coord_ids=None,
+    scales: Optional[jax.Array] = None, chunk_ids: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quantize-dequantize a ``(rows, d)`` f32 payload matrix at ``kind``.
+
+    ``row_ids`` (e.g. ``(rows, 1)``) and ``coord_ids`` (e.g. ``(d,)``)
+    broadcast against ``x2`` and key the stochastic draw; ``scales``
+    ``(rows, nchunk)`` and ``chunk_ids`` ``(d,)`` select the per-chunk
+    scale (both derived from ``x2`` when omitted).  Nonfinite inputs
+    pass through untouched."""
+    if kind == "f32":
+        return x2
+    if kind in _F_DTYPES:
+        return narrow(x2, kind).astype(jnp.float32)
+    if scales is None:
+        scales = leaf_scales(x2, kind)
+    if chunk_ids is None:
+        chunk_ids = jnp.arange(x2.shape[-1], dtype=jnp.int32) // CHUNK
+    sc = jnp.take(scales, chunk_ids, axis=1)
+    q = _codes(x2, sc, seed, row_ids, coord_ids, LEVELS[kind])
+    return jnp.where(jnp.isfinite(x2), q * sc, x2)
+
+
+def quantize_to_int(
+    x2: jax.Array, kind: str, seed, row_ids, coord_ids,
+    scales: jax.Array, chunk_ids: jax.Array,
+):
+    """Integer codes for the packed wire workspace (int8 container, int4
+    codes stay within ±7).  Returns ``(codes int8, scales f32)`` where a
+    chunk containing nonfinite payload has its scale poisoned to NaN —
+    dequantization (``codes * scale``) then propagates the NaN instead
+    of ever minting a finite value from one."""
+    sc = jnp.take(scales, chunk_ids, axis=1)
+    q = _codes(x2, sc, seed, row_ids, coord_ids, LEVELS[kind])
+    q = jnp.where(jnp.isfinite(x2), q, 0.0)
+    bad = jnp.zeros(scales.shape, jnp.bool_)
+    bad = bad.at[:, chunk_ids].max(~jnp.isfinite(x2))
+    scales = jnp.where(bad, jnp.float32(jnp.nan), scales)
+    return q.astype(jnp.int8), scales

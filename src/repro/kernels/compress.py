@@ -49,6 +49,17 @@ def cyclic_band(k, c: int, s: int):
     return (-(s * (k % c))) % c
 
 
+def wire_dequant(codes, scales, chunk_ids):
+    """Dequantize int-wire payload lanes: ``codes`` (rows, d) int8 times
+    the per-chunk f32 scale each column's ``chunk_ids`` entry selects
+    from ``scales`` (rows, nchunk).  Shared by the uplink kernels (in-
+    tile, f32 accumulation downstream) and the jnp comm paths — the one
+    definition of the wire's dequantization, so the kernel and jnp
+    impls cannot drift (a NaN-poisoned chunk scale propagates the NaN
+    here in both)."""
+    return codes.astype(jnp.float32) * jnp.take(scales, chunk_ids, axis=1)
+
+
 def _compress_kernel(slot_ref, x_ref, o_ref, *, c: int, s: int, block: int):
     i = pl.program_id(0)
     k = jax.lax.broadcasted_iota(jnp.int32, (block,), 0) + i * block

@@ -9,7 +9,14 @@ or ``(d, c)`` mask is ever materialized in HBM.
   masked_sum  UpCom: per-tile ownership, masked client-axis sum, and the
               exact ``1/s`` rebuild fused into one pass — 1 read of x and
               a ``d``-sized write, vs the dense reference's mask write +
-              mask read + masked-product materialization.
+              mask read + masked-product materialization.  The payload
+              lanes may be the narrow float wire dtype (bf16/f16,
+              ``dist/wire.py``); accumulation is always f32.
+  masked_sum_dequant
+              the int-wire variant: (n, d) int8 codes + (n, nchunk) f32
+              per-chunk scales, dequantized per VMEM tile
+              (``compress.wire_dequant``) with f32 accumulation — the
+              client-axis HBM read shrinks to 1 byte per coordinate.
   h_update    the round's state update: reads x, h and the server model
               x_bar once and writes BOTH h_new (control variates, owned
               coordinates only) and the DownCom'd x_new in the same pass —
@@ -36,16 +43,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.compress import owned_from_band, resolve_interpret
+from repro.kernels.compress import (
+    owned_from_band,
+    resolve_interpret,
+    wire_dequant,
+)
 
-__all__ = ["masked_sum", "h_update"]
+__all__ = ["masked_sum", "masked_sum_dequant", "h_update"]
 
 
 def _masked_sum_kernel(slot_ref, band_ref, x_ref, o_ref, *, m: int, s: int):
     owned = owned_from_band(
         slot_ref[...][:, None], band_ref[...][None, :], m, s
     )
-    x = x_ref[...]
+    # workspace lanes may be the narrow float wire dtype (bf16/f16);
+    # accumulation is always f32 (a no-op cast on the f32 path)
+    x = x_ref[...].astype(jnp.float32)
     o_ref[...] = jnp.where(owned, x, 0.0).sum(axis=0) / s
 
 
@@ -59,8 +72,34 @@ def _masked_sum_counts_kernel(
     owned = owned_from_band(
         slot_ref[...][:, None], band_ref[...][None, :], m, s
     )
-    x = x_ref[...]
+    x = x_ref[...].astype(jnp.float32)
     num_ref[...] = jnp.where(owned, x, 0.0).sum(axis=0)
+    cnt_ref[...] = owned.astype(jnp.float32).sum(axis=0)
+
+
+def _masked_sum_dequant_kernel(
+    slot_ref, band_ref, chunk_ref, codes_ref, scales_ref, o_ref,
+    *, m: int, s: int,
+):
+    # int-wire lanes: int8 codes dequantized in-tile against the per-
+    # chunk scales (full (n, nchunk) block, tiny next to the codes tile),
+    # then the same masked f32 accumulation as the float-lane kernel
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    v = wire_dequant(codes_ref[...], scales_ref[...], chunk_ref[...])
+    o_ref[...] = jnp.where(owned, v, 0.0).sum(axis=0) / s
+
+
+def _masked_sum_dequant_counts_kernel(
+    slot_ref, band_ref, chunk_ref, codes_ref, scales_ref, num_ref, cnt_ref,
+    *, m: int, s: int,
+):
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    v = wire_dequant(codes_ref[...], scales_ref[...], chunk_ref[...])
+    num_ref[...] = jnp.where(owned, v, 0.0).sum(axis=0)
     cnt_ref[...] = owned.astype(jnp.float32).sum(axis=0)
 
 
@@ -152,6 +191,64 @@ def masked_sum(
         out_shape=jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(slot, band, x)
+    return out[:d] if pad else out
+
+
+def masked_sum_dequant(
+    codes: jax.Array,  # (n, d) int8 wire codes (int4 codes fit in int8)
+    scales: jax.Array,  # (n, nchunk) f32 per-chunk scales
+    chunk_ids: jax.Array,  # (d,) int32 scale column per coordinate
+    slot: jax.Array,  # (n,) int32; outside [0, m) -> contributes nothing
+    band: jax.Array,  # (d,) int32 per-coordinate owner band
+    m: int,
+    s: int,
+    *,
+    counts: bool = False,
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+):
+    """``masked_sum`` over int-wire workspace lanes: the (n, d) payload is
+    int8 codes plus per-chunk f32 scales; each tile dequantizes in VMEM
+    (``compress.wire_dequant``) and accumulates in f32, so HBM traffic on
+    the client-stacked axis is 1 byte per coordinate instead of 4.  The
+    ``counts=True`` survivor-aware contract matches ``masked_sum``."""
+    n, d = codes.shape
+    blk = min(block, d)
+    pad = (-d) % blk
+    codes = _pad_cols(codes, pad)
+    if pad:
+        band = jnp.pad(band, (0, pad))
+        chunk_ids = jnp.pad(chunk_ids, (0, pad))
+    nc = scales.shape[1]
+    in_specs = [
+        pl.BlockSpec((n,), lambda i: (0,)),
+        pl.BlockSpec((blk,), lambda i: (i,)),
+        pl.BlockSpec((blk,), lambda i: (i,)),
+        pl.BlockSpec((n, blk), lambda i: (0, i)),
+        pl.BlockSpec((n, nc), lambda i: (0, 0)),
+    ]
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    if counts:
+        num, cnt = pl.pallas_call(
+            functools.partial(_masked_sum_dequant_counts_kernel, m=m, s=s),
+            grid=(codes.shape[1] // blk,),
+            in_specs=in_specs,
+            out_specs=(vec, vec),
+            out_shape=(
+                jax.ShapeDtypeStruct((codes.shape[1],), jnp.float32),
+                jax.ShapeDtypeStruct((codes.shape[1],), jnp.float32),
+            ),
+            interpret=resolve_interpret(interpret),
+        )(slot, band, chunk_ids, codes, scales)
+        return (num[:d], cnt[:d]) if pad else (num, cnt)
+    out = pl.pallas_call(
+        functools.partial(_masked_sum_dequant_kernel, m=m, s=s),
+        grid=(codes.shape[1] // blk,),
+        in_specs=in_specs,
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((codes.shape[1],), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(slot, band, chunk_ids, codes, scales)
     return out[:d] if pad else out
 
 

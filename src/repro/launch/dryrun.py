@@ -32,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.dist import comm_ws
+from repro.dist import comm_ws, wire as wire_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 
@@ -99,12 +99,46 @@ def model_flops(arch: str, shape_name: str) -> float:
     return mult * n_params * tokens
 
 
+def wire_summary(arch: str, shape_name: str, tcfg) -> dict:
+    """The comm step's resolved wire format: per-leaf kinds (builder-time
+    size-adaptive policy) and the per-client wire bytes one round costs —
+    the artifact records what actually travels, not just the policy."""
+    from repro.core import masks
+    from repro.dist import model_api
+
+    cfg = steps_lib.dryrun_model_cfg(arch, shape_name)
+    params_struct = jax.eval_shape(
+        lambda: model_api.init(jax.random.key(0), cfg)
+    )
+    dims = [int(np.prod(a.shape)) for a in jax.tree.leaves(params_struct)]
+    kinds = [wire_lib.resolve_kind(D, tcfg.wire_precision) for D in dims]
+    nnz = masks.block_column_nnz if tcfg.uplink == "block_rs" \
+        else masks.column_nnz
+    counts: Dict[str, int] = {}
+    for k in kinds:
+        counts[k] = counts.get(k, 0) + 1
+    return {
+        "policy": tcfg.wire_precision,
+        "leaf_kind_counts": counts,
+        "leaf_kinds": kinds,
+        "up_bytes_per_round": sum(
+            wire_lib.leaf_up_bytes(nnz(D, tcfg.c, tcfg.s), D, 1, k)
+            for D, k in zip(dims, kinds)
+        ),
+        "down_bytes_per_round": sum(
+            wire_lib.leaf_down_bytes(D, k if tcfg.wire_down else "f32")
+            for D, k in zip(dims, kinds)
+        ),
+    }
+
+
 def run_one(
     arch: str,
     shape_name: str,
     multi_pod: bool,
     uplink: str = "masked_psum",
     comm_impl: str = "auto",
+    wire_precision: str = "f32",
     out_dir: Optional[str] = None,
     verbose: bool = True,
 ) -> Dict[str, dict]:
@@ -112,7 +146,8 @@ def run_one(
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
     tcfg = steps_lib.default_tamuna_cfg(mesh, uplink=uplink,
-                                        comm_impl=comm_impl)
+                                        comm_impl=comm_impl,
+                                        wire_precision=wire_precision)
     built = steps_lib.build(arch, shape_name, mesh, **(
         {"tcfg": tcfg} if registry.SHAPES[shape_name].kind == "train" else {}
     ))
@@ -166,6 +201,12 @@ def run_one(
             "comm_impl": (
                 comm_ws.effective_impl(tcfg.comm_impl, meshed=True,
                                        mesh=mesh)
+                if step_name in ("comm", "round") else None
+            ),
+            # resolved per-leaf wire precision (§13): what each leaf
+            # actually ships, not just the policy name
+            "wire": (
+                wire_summary(arch, shape_name, tcfg)
                 if step_name in ("comm", "round") else None
             ),
             "compile_s": round(t1 - t0, 2),
@@ -232,6 +273,10 @@ def main(argv=None) -> int:
                     choices=list(comm_ws.COMM_IMPLS),
                     help="comm-step aggregation path (DESIGN.md §9); auto "
                          "= fused workspace off-TPU, Pallas kernels on TPU")
+    ap.add_argument("--wire-precision", default="f32",
+                    choices=list(wire_lib.WIRE_POLICIES),
+                    help="UpCom payload width (DESIGN.md §13); the "
+                         "artifact records the resolved per-leaf kinds")
     ap.add_argument("--out-dir", default="benchmarks/artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args(argv)
@@ -268,7 +313,9 @@ def main(argv=None) -> int:
                     continue
             try:
                 run_one(a, s, mp, uplink=args.uplink,
-                        comm_impl=args.comm_impl, out_dir=args.out_dir)
+                        comm_impl=args.comm_impl,
+                        wire_precision=args.wire_precision,
+                        out_dir=args.out_dir)
             except Exception:
                 traceback.print_exc()
                 failures.append((a, s, mesh_name))

@@ -74,7 +74,9 @@ import os
 
 def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
                        s: int = 4,
-                       comm_impl: str = "auto") -> tamuna_dp.DistTamunaConfig:
+                       comm_impl: str = "auto",
+                       wire_precision: str = "f32",
+                       ) -> tamuna_dp.DistTamunaConfig:
     n = sharding.n_clients(mesh)
     # both uplinks run partial participation (the blocked bands lie over
     # the cohort slots, DESIGN.md §11), so the dry-run lowers the elastic
@@ -83,7 +85,7 @@ def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
     return tamuna_dp.DistTamunaConfig(
         gamma=0.02, c=c, s=min(s, c), p=0.25, uplink=uplink,
         microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1")),
-        comm_impl=comm_impl,
+        comm_impl=comm_impl, wire_precision=wire_precision,
     )
 
 

@@ -56,6 +56,15 @@ def main(argv=None) -> int:
                          "shard-resident shard_map'd kernel engine "
                          "(pallas; per-shard uplinks + one d-sized psum), "
                          "or the per-leaf dense-mask reference (dense)")
+    # literal list (= wire.WIRE_POLICIES): same no-early-jax rule as above
+    ap.add_argument("--wire-precision", default="f32",
+                    choices=["auto", "f32", "bf16", "f16", "int8", "int4"],
+                    help="UpCom payload width (DESIGN.md §13): f32 is the "
+                         "unquantized wire, auto resolves per leaf size "
+                         "(small leaves f16, large 8-bit stochastic)")
+    ap.add_argument("--wire-down", action="store_true",
+                    help="also quantize the DownCom broadcast (needs a "
+                         "non-f32 --wire-precision)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default="")
     ap.add_argument("--checkpoint-dir", default="")
@@ -97,6 +106,7 @@ def main(argv=None) -> int:
     tcfg = tamuna_dp.DistTamunaConfig(
         gamma=args.gamma, c=c, s=min(args.sparsity, c), p=args.p,
         uplink=args.uplink, comm_impl=args.comm_impl,
+        wire_precision=args.wire_precision, wire_down=args.wire_down,
     )
 
     state = tamuna_dp.init_state(jax.random.key(args.seed), cfg, mesh,
@@ -166,6 +176,7 @@ def main(argv=None) -> int:
                 )._replace(
                     round=work.round, up_floats=work.up_floats,
                     down_floats=work.down_floats,
+                    up_bytes=work.up_bytes, down_bytes=work.down_bytes,
                 )
             else:
                 state = work

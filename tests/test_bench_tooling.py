@@ -87,6 +87,36 @@ assert rc == 0
             f"--smoke must not overwrite the measured artifact {p}"
 
 
+def test_run_smoke_quant_comm_emits_rows_and_preserves_artifact(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_quant_comm.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "quant_comm"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # byte accounting per policy, the headline reduction ratio, fused-
+    # round timing for both widths, and the convergence floor rows
+    assert "quant_comm/bytes/f32," in out, out[-2000:]
+    assert "quant_comm/bytes/int8," in out, out[-2000:]
+    assert "quant_comm/bytes/auto," in out, out[-2000:]
+    assert "quant_comm/up_bytes_ratio_int8_vs_f32," in out
+    assert "quant_comm/round/f32," in out
+    assert "quant_comm/round/int8," in out
+    assert "quant_comm/floor/int8," in out
+    assert "quant_comm/floor_ratio_int8_vs_f32," in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
 def test_trajectory_table_aggregates_artifacts():
     if REPO not in sys.path:
         sys.path.insert(0, REPO)

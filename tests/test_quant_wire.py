@@ -1,0 +1,490 @@
+"""Quantized wire (DESIGN.md §13):
+
+* the counter-hash stochastic quantizer is unbiased (E[Q(v)] = v over a
+  seed batch) at int8 and int4, and so is the core's per-chunk
+  ``quantize_stochastic`` — whose chunked scales keep resolution on
+  outlier-heavy leaves where a per-tensor scale collapses it,
+* all four comm impls (dense / ws / pallas / shard engine) produce the
+  same coordinates at matching wire seeds, for every wire kind, both
+  templates, elastic cohorts c < n, and the arrived mask,
+* ``wire_precision="f32"`` is BITWISE identical to the unquantized
+  engine — the wire machinery must be dead code on the f32 path,
+* nonfinite payloads are never quantized into finite wire values (float
+  kinds pass through, int kinds NaN-poison the chunk scale) and finite
+  f16 payloads never overflow to inf,
+* the dtype-aware byte accounting: f32 byte-identical to floats * 4,
+  int8 roughly 4x smaller, threaded through ``make_comm_step``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import comm_ws, wire
+
+
+def _mesh_1x1():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def _maxerr(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(
+            x.astype(jnp.float32) - y.astype(jnp.float32)).max()),
+        a, b)))
+
+
+def _slot(rng, n, c):
+    """Template column per client (perm of the cohort's slots, -1 idle)."""
+    cohort = rng.choice(n, size=c, replace=False)
+    out = np.full((n,), -1, np.int32)
+    out[cohort] = rng.permutation(c)
+    return jnp.asarray(out)
+
+
+def _tree(rng, n):
+    x = {
+        "w": jnp.asarray(rng.normal(size=(n, 13, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 1)), jnp.bfloat16),
+        "v": jnp.asarray(rng.normal(size=(n, 29)), jnp.float32),
+    }
+    h = {
+        k: jnp.asarray(rng.normal(size=a.shape), jnp.float32)
+        for k, a in x.items()
+    }
+    h = jax.tree.map(lambda a: a - a.mean(axis=0, keepdims=True), h)
+    return x, h
+
+
+# --------------------------------------------------------------------------
+# unbiasedness
+# --------------------------------------------------------------------------
+
+
+@given(st.sampled_from(["int8", "int4"]), st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_wire_quantizer_unbiased(kind, seed):
+    """Mean of Q(v) over many independent wire seeds converges to v at
+    the Monte-Carlo rate: the rounding is unbiased, so the masked-sum
+    aggregation stays exact in expectation."""
+    rng = np.random.default_rng(seed)
+    d = 70
+    v = jnp.asarray(rng.normal(size=(1, d)).astype(np.float32)) * 3.0
+    reps = 4096
+    rid = jnp.zeros((1, 1), jnp.uint32)
+    kk = jnp.arange(d, dtype=jnp.int32)
+
+    def one(s):
+        return wire.quantize(v, kind, s, rid, kk)
+
+    seeds = jnp.arange(reps, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    mean = jax.vmap(one)(seeds).mean(axis=0)
+    # per-draw std <= scale (one quantization step); mean-of-reps std is
+    # scale/sqrt(reps) — allow 6 sigma
+    scale = float(jnp.abs(v).max()) / wire.LEVELS[kind]
+    tol = 6.0 * scale / np.sqrt(reps)
+    assert float(jnp.abs(mean - v).max()) <= tol
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=6, deadline=None)
+def test_core_quantize_stochastic_unbiased(seed):
+    from repro.core.compression import quantize_stochastic
+
+    rng = np.random.default_rng(seed)
+    d = 40
+    v = jnp.asarray(rng.normal(size=(d,)))
+    reps = 4096
+    keys = jax.random.split(jax.random.key(seed), reps)
+    mean = jax.vmap(lambda k: quantize_stochastic(k, v, 8))(keys).mean(
+        axis=0)
+    scale = float(jnp.abs(v).max()) / 127.0
+    tol = 6.0 * scale / np.sqrt(reps)
+    assert float(jnp.abs(mean - v).max()) <= tol
+
+
+def test_per_chunk_scales_survive_outliers():
+    """One huge coordinate in chunk 0 must not collapse the resolution of
+    chunk 1 (the satellite fix): with per-tensor scaling the small chunk's
+    values all quantize to 0/±1 steps of a giant scale; per-chunk, their
+    error is bounded by their OWN chunk max."""
+    from repro.core.compression import quantize_stochastic
+
+    d = 512  # two chunks of 256
+    v = np.full((d,), 1e-3, np.float32)
+    v[0] = 1e4  # outlier lives in chunk 0
+    vj = jnp.asarray(v)
+    q = quantize_stochastic(jax.random.key(0), vj, 8)
+    small = np.asarray(q)[256:]
+    # per-chunk scale of chunk 1 is 1e-3/127; per-tensor would be 1e4/127
+    # (so small values would round to 0 or jump by ~79)
+    assert np.abs(small - 1e-3).max() <= 1e-3 / 127 * 1.01
+    # the wire quantizer obeys the same bound
+    qw = wire.quantize(
+        vj[None, :], "int8", jnp.uint32(7), jnp.zeros((1, 1), jnp.uint32),
+        jnp.arange(d, dtype=jnp.int32),
+    )
+    assert np.abs(np.asarray(qw)[0, 256:] - 1e-3).max() <= 1e-3 / 127 * 1.01
+
+
+def test_quantize_stochastic_matches_per_tensor_below_chunk():
+    """For d <= chunk the per-chunk rewrite IS the per-tensor quantizer
+    bitwise (one chunk, same scale, same uniform draw) — pins the floor
+    assertions of test_perf_features to the same trajectory."""
+    from repro.core.compression import quantize_stochastic
+
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.normal(size=(32,)))
+    key = jax.random.key(5)
+    levels = 127.0
+    scale = jnp.maximum(jnp.abs(v).max() / levels, 1e-12)
+    z = v / scale
+    low = jnp.floor(z)
+    q_ref = (low + (jax.random.uniform(key, v.shape) < z - low)) * scale
+    np.testing.assert_array_equal(
+        np.asarray(quantize_stochastic(key, v, 8)), np.asarray(q_ref)
+    )
+
+
+# --------------------------------------------------------------------------
+# nonfinite / overflow guards
+# --------------------------------------------------------------------------
+
+
+def test_nonfinite_never_quantized_finite():
+    v = np.ones((2, 300), np.float32)
+    v[0, 3] = np.nan
+    v[1, 290] = np.inf
+    vj = jnp.asarray(v)
+    rid = jnp.arange(2, dtype=jnp.uint32)[:, None]
+    kk = jnp.arange(300, dtype=jnp.int32)
+    for kind in ("bf16", "f16", "int8", "int4"):
+        q = np.asarray(wire.quantize(vj, kind, jnp.uint32(1), rid, kk))
+        assert not np.isfinite(q[0, 3]), kind
+        assert not np.isfinite(q[1, 290]), kind
+    # int wire-lane form: codes stay int, the chunk SCALE carries the NaN
+    scales = wire.leaf_scales(vj, "int8")
+    codes, sc = wire.quantize_to_int(
+        vj, "int8", jnp.uint32(1), rid, kk, scales, kk // wire.CHUNK
+    )
+    assert codes.dtype == jnp.int8
+    assert np.isnan(np.asarray(sc)[0, 0])  # row 0 chunk 0 poisoned
+    assert np.isnan(np.asarray(sc)[1, 1])  # row 1 chunk 1 poisoned
+    assert np.isfinite(np.asarray(sc)[0, 1]) and np.isfinite(
+        np.asarray(sc)[1, 0])
+    from repro.kernels.compress import wire_dequant
+
+    dq = np.asarray(wire_dequant(codes, sc, kk // wire.CHUNK))
+    assert np.isnan(dq[0, :256]).all() and np.isfinite(dq[0, 256:]).all()
+
+
+def test_f16_wire_never_overflows_finite_payload():
+    v = jnp.asarray([[1e38, -3e38, 65504.0, 1.5]], jnp.float32)
+    q = np.asarray(wire.quantize(
+        v, "f16", jnp.uint32(0), jnp.zeros((1, 1), jnp.uint32),
+        jnp.arange(4, dtype=jnp.int32),
+    ))
+    assert np.isfinite(q).all()
+    assert q[0, 3] == 1.5
+
+
+def test_core_quantizer_passes_nonfinite_through():
+    from repro.core.compression import quantize_stochastic
+
+    v = jnp.asarray([np.nan, np.inf, 1.0, -2.0])
+    q = np.asarray(quantize_stochastic(jax.random.key(0), v, 8))
+    assert np.isnan(q[0]) and np.isinf(q[1]) and np.isfinite(q[2:]).all()
+
+
+# --------------------------------------------------------------------------
+# cross-impl agreement at matching wire seeds
+# --------------------------------------------------------------------------
+
+ncs = st.tuples(
+    st.integers(2, 9),  # n
+    st.integers(2, 9),  # c
+    st.integers(2, 9),  # s
+    st.integers(0, 2**16),  # seed
+).filter(lambda t: t[1] <= t[0] and t[2] <= t[1])
+
+
+@given(ncs, st.sampled_from(["f16", "int8", "auto"]))
+@settings(max_examples=10, deadline=None)
+def test_quantized_cyclic_impls_agree(t, policy):
+    n, c, s, seed = t
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    slot = _slot(rng, n, c)
+    wseed = wire.round_seed(
+        jax.random.fold_in(jax.random.key(seed), wire.WIRE_FOLD))
+    kw = dict(wire=policy, wire_seed=wseed)
+    xd, hd = jax.jit(
+        lambda x, h: comm_ws.cyclic_comm(x, h, slot, c, s, 0.37,
+                                         impl="dense", **kw)
+    )(x, h)
+    mesh = _mesh_1x1()
+    for impl, meshed, extra in (
+        ("ws", False, {}),
+        ("ws", True, {}),
+        ("pallas", False, {}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": False}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": True}),
+    ):
+        xn, hn = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, extra=extra:
+                comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl=impl,
+                                    block=32, meshed=meshed, **extra, **kw)
+        )(x, h)
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed, policy, n, c, s)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed, policy, n, c, s)
+
+
+@given(ncs, st.sampled_from(["f16", "int8"]))
+@settings(max_examples=8, deadline=None)
+def test_quantized_blocked_impls_agree(t, policy):
+    n, _, s, seed = t
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    off = jnp.asarray(int(rng.integers(0, n)), jnp.int32)
+    wseed = wire.round_seed(
+        jax.random.fold_in(jax.random.key(seed), wire.WIRE_FOLD))
+    kw = dict(wire=policy, wire_seed=wseed)
+    xd, hd = jax.jit(
+        lambda x, h: comm_ws.blocked_comm(x, h, off, n, s, 0.37,
+                                          impl="dense", **kw)
+    )(x, h)
+    mesh = _mesh_1x1()
+    for impl, meshed, extra in (
+        ("ws", False, {}),
+        ("pallas", False, {}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": True}),
+    ):
+        xn, hn = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, extra=extra:
+                comm_ws.blocked_comm(x, h, off, n, s, 0.37, impl=impl,
+                                     block=32, meshed=meshed, **extra, **kw)
+        )(x, h)
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed, policy, n, s)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed, policy, n, s)
+
+
+@given(ncs)
+@settings(max_examples=8, deadline=None)
+def test_quantized_elastic_and_arrived_compose(t):
+    """c < n cohorts + a dropped arrival under int8: all impls agree, and
+    a coordinate with no arrived owner passes through x and h bitwise
+    untouched (the §12 contract survives quantization — the survivor
+    rebuild runs AFTER dequantization)."""
+    n, c, s, seed = t
+    if c == n:
+        c = max(2, n - 1)
+        if s > c:
+            s = c
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    # cohort of c rows; one cohort member drops
+    cohort = rng.permutation(n)[:c]
+    slot_np = np.full((n,), -1, np.int64)
+    slot_np[cohort] = rng.permutation(c)
+    slot = jnp.asarray(slot_np, jnp.int32)
+    arrived_np = np.ones((n,), bool)
+    arrived_np[cohort[0]] = False
+    arrived = jnp.asarray(arrived_np)
+    wseed = wire.round_seed(
+        jax.random.fold_in(jax.random.key(seed), wire.WIRE_FOLD))
+    kw = dict(wire="int8", wire_seed=wseed, arrived=arrived)
+    xd, hd = jax.jit(
+        lambda x, h: comm_ws.cyclic_comm(x, h, slot, c, s, 0.37,
+                                         impl="dense", **kw)
+    )(x, h)
+    mesh = _mesh_1x1()
+    for impl, meshed, extra in (
+        ("ws", False, {}),
+        ("pallas", False, {}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": True}),
+    ):
+        xn, hn = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, extra=extra:
+                comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl=impl,
+                                    block=32, meshed=meshed, **extra, **kw)
+        )(x, h)
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed)
+        # uncovered coordinates: no arrived owner -> x, h bitwise kept
+        sl = slot_np[:, None]
+        arr = arrived_np[:, None]
+        for k, a in x.items():
+            D = int(np.prod(a.shape[1:]))
+            from repro.core import masks
+
+            q = np.asarray(masks.mask_from_permutation(
+                jnp.arange(c, dtype=jnp.int32), D, c, s)).astype(bool)
+            owned = (np.where(sl >= 0, q.T[np.clip(slot_np, 0, c - 1)],
+                              False) & (sl >= 0) & arr)
+            uncov = ~owned.any(axis=0)
+            if uncov.any():
+                xa = np.asarray(a).reshape(n, D)
+                xb = np.asarray(xn[k]).reshape(n, D)
+                ha = np.asarray(h[k]).reshape(n, D)
+                hb = np.asarray(hn[k]).reshape(n, D)
+                np.testing.assert_array_equal(xa[:, uncov], xb[:, uncov])
+                np.testing.assert_array_equal(ha[:, uncov], hb[:, uncov])
+
+
+# --------------------------------------------------------------------------
+# f32 wire == unquantized engine, bitwise
+# --------------------------------------------------------------------------
+
+
+def test_f32_wire_bitwise_identity_all_impls():
+    rng = np.random.default_rng(11)
+    n, c, s = 6, 5, 3
+    x, h = _tree(rng, n)
+    slot_np = np.full((n,), -1, np.int64)
+    cohort = rng.permutation(n)[:c]
+    slot_np[cohort] = rng.permutation(c)
+    slot = jnp.asarray(slot_np, jnp.int32)
+    wseed = wire.round_seed(
+        jax.random.fold_in(jax.random.key(0), wire.WIRE_FOLD))
+    mesh = _mesh_1x1()
+    cases = [
+        ("dense", False, {}),
+        ("ws", False, {}),
+        ("pallas", False, {}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": True}),
+        ("pallas", True, {"mesh": mesh, "shard_kernels": False}),
+    ]
+    for impl, meshed, extra in cases:
+        base = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, extra=extra:
+                comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl=impl,
+                                    block=32, meshed=meshed, **extra)
+        )(x, h)
+        wired = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, extra=extra:
+                comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl=impl,
+                                    block=32, meshed=meshed, wire="f32",
+                                    wire_seed=wseed, **extra)
+        )(x, h)
+        for k in x:
+            np.testing.assert_array_equal(
+                np.asarray(base[0][k]), np.asarray(wired[0][k]),
+                err_msg=f"{impl} meshed={meshed} x[{k}]")
+            np.testing.assert_array_equal(
+                np.asarray(base[1][k]), np.asarray(wired[1][k]),
+                err_msg=f"{impl} meshed={meshed} h[{k}]")
+    # blocked template too
+    off = jnp.int32(2)
+    for impl in ("dense", "ws", "pallas"):
+        base = comm_ws.blocked_comm(x, h, off, n, s, 0.37, impl=impl)
+        wired = comm_ws.blocked_comm(x, h, off, n, s, 0.37, impl=impl,
+                                     wire="f32", wire_seed=wseed)
+        for k in x:
+            np.testing.assert_array_equal(
+                np.asarray(base[0][k]), np.asarray(wired[0][k]))
+            np.testing.assert_array_equal(
+                np.asarray(base[1][k]), np.asarray(wired[1][k]))
+
+
+def test_wire_determinism_same_seed_same_wire():
+    """Same wire seed -> bitwise-identical quantized comm (replay); a
+    different seed changes the draw (the stream is live)."""
+    rng = np.random.default_rng(7)
+    n, c, s = 5, 5, 3
+    x, h = _tree(rng, n)
+    slot = jnp.asarray(np.arange(n) % c, jnp.int32)
+    s1 = wire.round_seed(
+        jax.random.fold_in(jax.random.key(1), wire.WIRE_FOLD))
+    s2 = wire.round_seed(
+        jax.random.fold_in(jax.random.key(2), wire.WIRE_FOLD))
+    a = comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl="ws",
+                            wire="int8", wire_seed=s1)
+    b = comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl="ws",
+                            wire="int8", wire_seed=s1)
+    d = comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl="ws",
+                            wire="int8", wire_seed=s2)
+    for k in x:
+        np.testing.assert_array_equal(np.asarray(a[0][k]),
+                                      np.asarray(b[0][k]))
+    assert _maxerr(a[0], d[0]) > 0.0
+
+
+# --------------------------------------------------------------------------
+# byte accounting
+# --------------------------------------------------------------------------
+
+
+def test_uplink_bytes_f32_identical_to_floats():
+    from repro.core import compression
+
+    for d, c, s in ((1000, 8, 4), (37, 5, 2), (65537, 10, 3)):
+        assert compression.uplink_bytes_permutation(d, c, s) == \
+            compression.uplink_floats_permutation(d, c, s) * 4.0
+    assert compression.uplink_bytes_rand_k(17) == 17 * 4.0
+    assert wire.leaf_up_bytes(100, 1000, 1, "f32") == 400.0
+    assert wire.leaf_down_bytes(1000, "f32") == 4000.0
+
+
+def test_leaf_bytes_int8_near_4x_reduction():
+    d, c, s = 2**17, 8, 4
+    from repro.core import masks
+
+    nnz = masks.column_nnz(d, c, s)
+    f32 = wire.leaf_up_bytes(nnz, d, 1, "f32")
+    i8 = wire.leaf_up_bytes(nnz, d, 1, "int8")
+    assert f32 / i8 >= 3.5
+
+
+def test_resolve_kind_auto_threshold():
+    assert wire.resolve_kind(10, "auto") == "f16"
+    assert wire.resolve_kind(2**16, "auto") == "f16"
+    assert wire.resolve_kind(2**16 + 1, "auto") == "int8"
+    assert wire.resolve_kind(123, None) == "f32"
+    assert wire.resolve_kind(123, "int4") == "int4"
+
+
+def test_comm_step_bytes_accounting(subproc):
+    subproc("""
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import masks
+from repro.models.transformer import ModelConfig
+from repro.dist import sharding, tamuna_dp, wire
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+c = 3
+for policy in ("f32", "int8", "auto"):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
+                                      wire_precision=policy)
+    state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      tamuna_dp.state_pspecs(state, cfg, mesh),
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, sh)
+    fn = tamuna_dp.make_comm_step(cfg, tcfg, mesh)
+    out = jax.jit(fn)(state, jax.random.key(11))
+    dims = [int(np.prod(a.shape[1:])) for a in jax.tree.leaves(state.x)]
+    kinds = [wire.resolve_kind(D, policy) for D in dims]
+    exp_up = sum(
+        wire.leaf_up_bytes(masks.column_nnz(D, c, 2), D, 1, k)
+        for D, k in zip(dims, kinds))
+    assert float(out.up_bytes) == float(jnp.float32(exp_up)), policy
+    assert float(out.down_bytes) == float(sum(dims)) * 4.0, policy
+    if policy == "f32":
+        assert float(out.up_bytes) == float(out.up_floats) * 4.0
+    else:
+        # the quantized wire really is smaller on this model
+        assert float(out.up_bytes) < float(out.up_floats) * 4.0
+print("OK")
+""")
