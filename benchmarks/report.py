@@ -155,6 +155,16 @@ def trajectory_rows() -> list:
             qc["floor_ratio_int8_vs_f32"], acc["floor_ratio_max"],
             higher_is_better=False)
 
+    pl = _load("BENCH_pipeline.json")
+    if pl:
+        acc = pl["acceptance"]
+        add("pipeline", "wall-clock speedup at measured tail, best "
+            f"wait_all tau={pl['speedup_tau']} vs sync",
+            pl["speedup_at_tail"], acc["min_speedup_at_tail"])
+        add("pipeline", "headline tau final loss within sync seed band "
+            "(1=yes)",
+            float(bool(pl["tail_loss_within_sync_band"])), 1.0)
+
     return rows
 
 
@@ -192,14 +202,38 @@ def trajectory_table() -> str:
     return "\n".join(out)
 
 
+def trajectory_json(path: str) -> None:
+    """Machine-readable twin of the --trajectory table: the same
+    (artifact, metric, value, acceptance, ok) rows as JSON, so CI and
+    the next session can diff acceptance status without parsing
+    markdown."""
+    rows = [
+        {"artifact": a, "metric": m, "value": v, "acceptance": t,
+         "ok": bool(ok)}
+        for a, m, v, t, ok in trajectory_rows()
+    ]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"rows": rows,
+                   "all_ok": all(r["ok"] for r in rows)}, f, indent=1)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--trajectory", action="store_true",
-                    help="print only the BENCH_*.json trajectory table")
+                    help="print the BENCH_*.json trajectory table and "
+                         "write its JSON twin to --trajectory-json")
+    ap.add_argument("--trajectory-json",
+                    default=os.path.join(HERE, "artifacts",
+                                         "trajectory.json"),
+                    help="where --trajectory writes the machine-readable "
+                         "rows (empty string disables the write)")
     args = ap.parse_args(argv)
     if args.trajectory:
         print("\n## Perf trajectory — BENCH_*.json acceptance metrics\n")
         print(trajectory_table())
+        if args.trajectory_json:
+            trajectory_json(args.trajectory_json)
         wb = wire_bytes_table()
         if wb:
             print("\n## Wire bytes per round — BENCH_quant_comm.json\n")

@@ -33,6 +33,13 @@ and the wait_all control (biased 1/s aggregation of whatever arrived) —
 reporting retries, quorum misses, and the simulated wall clock including
 retry backoff.
 
+``--dist --dist-out PATH`` additionally exports the wall-clock model's
+measured per-step latency draws (the straggler tail as drawn, not a
+parametric fit) as JSON — ``repro.dist.faults.EmpiricalDelays.from_json``
+bootstraps per-round fleet latencies from it, and
+``benchmarks/pipeline_bench.py`` prices the pipelined round engine's
+simulated clock with exactly this distribution.
+
   PYTHONPATH=src python examples/availability_sim.py [--dist [--faults]]
 """
 
@@ -53,7 +60,7 @@ def straggler_base(n, rng, straggler_frac=0.1):
 
 
 def wallclock_per_round(steps, n, c, base, rng, jitter_sigma=0.2,
-                        cohorts=None):
+                        cohorts=None, samples_out=None):
     """Per-round wall-clock costs: round ``k`` waits for the slowest of
     ITS OWN cohort draw with ITS OWN jitter, scaled by its local steps.
 
@@ -61,13 +68,21 @@ def wallclock_per_round(steps, n, c, base, rng, jitter_sigma=0.2,
     per-round client-id arrays) replays an externally chosen schedule
     (e.g. a ``CohortPlan``) instead of uniform draws.  Returns the
     ``(rounds,)`` per-round times; the cumulative clock is their cumsum.
+
+    ``samples_out`` (optional list) collects every per-client PER-STEP
+    latency draw (``base[cohort] * jitter``, before the ``L`` scaling) —
+    the measured straggler-tail distribution the ``--dist-out`` export
+    writes and ``repro.dist.faults.EmpiricalDelays`` bootstraps from.
     """
     times = np.empty(len(steps))
     for k, L in enumerate(steps):
         cohort = (rng.choice(n, size=c, replace=False)
                   if cohorts is None else np.asarray(cohorts[k]))
         jitter = rng.lognormal(0.0, jitter_sigma, size=len(cohort))
-        times[k] = (base[cohort] * jitter).max() * max(int(L), 1)
+        draws = base[cohort] * jitter
+        if samples_out is not None:
+            samples_out.extend(draws.tolist())
+        times[k] = draws.max() * max(int(L), 1)
     return times
 
 
@@ -119,7 +134,7 @@ class _RowLogger:
         self.rows.append(dict(metrics))
 
 
-def dist_main(rounds):
+def dist_main(rounds, dist_out=None):
     import jax
 
     from repro.configs import registry
@@ -153,6 +168,8 @@ def dist_main(rounds):
           f"Markov availability + inverse-latency weighting\n")
     print(f"{'c':>4} {'steps':>6} {'loss':>8} {'UpCom/client':>13} "
           f"{'sim wall-clock':>15}")
+    samples = [] if dist_out else None
+    per_round = []
     for c in (n, n // 4):
         tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.34)
         plan = cohort_mod.CohortPlan(
@@ -175,9 +192,32 @@ def dist_main(rounds):
         times = wallclock_per_round(
             steps, n, c, base, np.random.default_rng(3),
             cohorts=[plan.cohort(k) for k in range(len(steps))],
+            samples_out=samples,
         )
+        per_round.extend(times.tolist())
         print(f"{c:>4} {last['local_steps']:>6} {last['loss']:>8.4f} "
               f"{last['up_floats']:>13.3e} {times.sum():>15.1f}")
+    if dist_out:
+        import json
+
+        arr = np.asarray(samples, np.float64)
+        blob = {
+            "per_step_latency_s": samples,
+            "per_round_s": per_round,
+            "n": n,
+            "straggler_frac": 0.25,
+            "quantiles": {
+                f"p{int(q * 100)}": float(np.quantile(arr, q))
+                for q in (0.5, 0.9, 0.99)
+            },
+        }
+        parent = os.path.dirname(os.path.abspath(dist_out))
+        os.makedirs(parent, exist_ok=True)
+        with open(dist_out, "w") as f:
+            json.dump(blob, f)
+        print(f"\n[dist-out] {len(samples)} per-step latency samples "
+              f"(p50={blob['quantiles']['p50']:.2f}s "
+              f"p99={blob['quantiles']['p99']:.2f}s) -> {dist_out}")
     print("\nidle clients do no work in the elastic engine, and the plan "
           "routes rounds away from slow/offline clients — the same "
           "crossover as the convex story, now on the system engine.")
@@ -257,11 +297,16 @@ def main():
     ap.add_argument("--rounds", type=int, default=0,
                     help="rounds per setting (default: 3000 convex, "
                          "12 dist)")
+    ap.add_argument("--dist-out", default="",
+                    help="with --dist: export the measured per-step "
+                         "latency-tail distribution (JSON) — the input "
+                         "benchmarks/pipeline_bench.py prices the "
+                         "pipelined clock with")
     args = ap.parse_args()
     if args.dist and args.faults:
         faults_main(args.rounds or 12)
     elif args.dist:
-        dist_main(args.rounds or 12)
+        dist_main(args.rounds or 12, dist_out=args.dist_out or None)
     else:
         convex_main(args.rounds or 3000)
 

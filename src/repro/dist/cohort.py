@@ -140,6 +140,16 @@ class CohortPlan:
         got = self._cache.get(key)
         if got is not None:
             return got
+        g = self._gumbel(rnd, attempt)
+        top = np.argpartition(-g, self.c - 1)[:self.c]
+        out = np.sort(top).astype(np.int32)
+        self._cache[key] = out
+        return out
+
+    def _gumbel(self, rnd: int, attempt: int) -> np.ndarray:
+        """The round's availability/quarantine-gated Gumbel scores (the
+        draw behind ``cohort``), exposed so busy-aware selection reuses
+        the identical stream."""
         words = ([self.seed, 211, rnd] if attempt == 0
                  else [self.seed, 211, rnd, attempt])
         rng = np.random.default_rng(np.random.SeedSequence(words))
@@ -150,15 +160,44 @@ class CohortPlan:
         for ids, first, last in self._quarantine:
             if first <= rnd <= last:
                 g[ids] = g[ids] + _DOWN_LOG_WEIGHT
-        top = np.argpartition(-g, self.c - 1)[:self.c]
-        out = np.sort(top).astype(np.int32)
-        self._cache[key] = out
-        return out
+        return g
 
     def member_mask(self, rnd: int, attempt: int = 0) -> np.ndarray:
         mask = np.zeros(self.n, bool)
         mask[self.cohort(rnd, attempt)] = True
         return mask
+
+    def cohort_excluding(self, rnd: int, busy, attempt: int = 0
+                         ) -> np.ndarray:
+        """The round's cohort with ``busy`` clients barred outright.
+
+        The pipelined round driver (DESIGN.md §14) keeps up to ``τ``
+        rounds in flight; a client mid-round physically cannot join a new
+        cohort, so in-flight clients are excluded with a *hard* ``-inf``
+        (unlike the availability gate's soft floor — an unavailable
+        client may still be drafted to keep exactly ``c`` participants, a
+        busy one never).  The Gumbel stream is the same draw ``cohort``
+        uses, so whenever the plan's top-``c`` happens to avoid the busy
+        set the two selections agree; with no busy clients this *is*
+        ``cohort`` (cached, replay-identical).  Deterministic in
+        ``(seed, rnd, attempt, busy)``; results are not cached (the busy
+        set is itself a pure function of the pipeline schedule).
+        """
+        busy = np.asarray(busy, bool)
+        if busy.shape != (self.n,):
+            raise ValueError(f"busy mask shape {busy.shape} != ({self.n},)")
+        if not busy.any():
+            return self.cohort(rnd, attempt)
+        if int((~busy).sum()) < self.c:
+            raise ValueError(
+                f"only {int((~busy).sum())} free clients for c={self.c} "
+                f"at round {rnd}: staleness too deep for this fleet "
+                f"(need c * (tau + 1) <= n)"
+            )
+        g = self._gumbel(int(rnd), int(attempt))
+        g = np.where(busy, -np.inf, g)
+        top = np.argpartition(-g, self.c - 1)[:self.c]
+        return np.sort(top).astype(np.int32)
 
     def quarantine(self, clients, first_round: int,
                    last_round: int) -> None:

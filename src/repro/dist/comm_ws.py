@@ -129,6 +129,7 @@ __all__ = [
     "COMM_IMPLS",
     "cyclic_comm",
     "blocked_comm",
+    "uncovered_coords",
 ]
 
 COMM_IMPLS = ("auto", "dense", "ws", "pallas")
@@ -278,6 +279,76 @@ def _block_band_np(dims: Tuple[int, ...], n: int) -> np.ndarray:
     """Packed-workspace block ids (leaf-local chunking)."""
     parts = [_block_leaf_band_np(D, n) for D in dims]
     return np.concatenate(parts) if parts else np.zeros((0,), np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _cyclic_band_counts_np(D: int, c: int, s: int) -> np.ndarray:
+    """(c,) int64: coordinates per cyclic band value ``(s k) mod c``
+    (non-tall regime only)."""
+    band = (s * np.arange(D, dtype=np.int64)) % c
+    return np.bincount(band, minlength=c)
+
+
+@functools.lru_cache(maxsize=None)
+def _block_band_counts_np(D: int, m: int) -> np.ndarray:
+    """(m,) int64: coordinates per block id for one leaf."""
+    return np.bincount(_block_leaf_band_np(D, m), minlength=m)
+
+
+def uncovered_coords(template: str, dims: Tuple[int, ...], m: int, s: int,
+                     slot: jax.Array) -> jax.Array:
+    """int32 scalar: coordinates with NO surviving owner this round.
+
+    ``slot`` is the per-client final slot/column assignment the comm step
+    aggregates with (``-1`` = idle or demoted by the arrival mask): the
+    cyclic template column for ``template="cyclic"`` or the folded
+    ``(-(slot_of + off)) mod c`` blocked slot for ``template="blocked"``.
+    Under the survivor-aware rebuild (DESIGN.md §12) exactly these
+    coordinates pass through ``x``/``h`` bitwise untouched, so the count
+    is the per-round coverage loss the bounded-staleness driver traces
+    (§14) — dropped-late uplinks show up here, admitted ones don't.
+
+    Pure jnp over the (m,) slot-occupancy vector plus static per-leaf
+    band counts; O(s·m + tall-leaf coords) device work, no dependence on
+    the payload itself."""
+    if template not in ("cyclic", "blocked"):
+        raise ValueError(f"unknown template {template!r}")
+    slot = jnp.asarray(slot, jnp.int32)
+    # slot-value occupancy; -1 rows land in the m overflow cell
+    pres = jnp.zeros((m + 1,), bool).at[
+        jnp.where(slot >= 0, slot, m)
+    ].set(True)[:m]
+    total = jnp.int32(0)
+    if template == "cyclic":
+        # covered band b iff any owner column (b + t) mod c, t < s, has an
+        # arriving client; tall leaves (D s < c) use their explicit
+        # owner-column table instead (cols k + t D)
+        cov_band = jnp.zeros((m,), bool)
+        for t in range(s):
+            cov_band = cov_band | jnp.roll(pres, -t)
+        for D in dims:
+            cols, _, tall = _cyclic_leaf_tables_np(D, m, s)
+            if tall:
+                cov = pres[jnp.asarray(cols)].any(axis=0)
+                total = total + (D - cov.sum()).astype(jnp.int32)
+            else:
+                cnt = jnp.asarray(_cyclic_band_counts_np(D, m, s))
+                total = total + jnp.where(
+                    cov_band, 0, cnt
+                ).sum().astype(jnp.int32)
+    else:
+        # blocked ownership is (slot + block) mod m < s, so block b is
+        # covered iff any arriving slot value equals (t - b) mod m
+        pres_rev = jnp.roll(pres[::-1], 1)  # pres_rev[b] = pres[(-b) % m]
+        cov_band = jnp.zeros((m,), bool)
+        for t in range(s):
+            cov_band = cov_band | jnp.roll(pres_rev, t)
+        for D in dims:
+            cnt = jnp.asarray(_block_band_counts_np(D, m))
+            total = total + jnp.where(
+                cov_band, 0, cnt
+            ).sum().astype(jnp.int32)
+    return total
 
 
 # --------------------------------------------------------------------------

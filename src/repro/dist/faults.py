@@ -40,6 +40,7 @@ import numpy as np
 __all__ = [
     "FaultModel",
     "FaultPlan",
+    "EmpiricalDelays",
     "nonfinite_clients",
     "corrupt_rows",
     "CORRUPT_MODES",
@@ -53,6 +54,7 @@ _TAG_DROP = 101
 _TAG_CORRUPT = 103
 _TAG_DELAY = 107
 _TAG_BASE = 109
+_TAG_EMPIRICAL = 113
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +175,57 @@ class FaultPlan:
     def base_delays(self) -> np.ndarray:
         """(n,) persistent per-client base latency (straggler identity)."""
         return self._base.copy()
+
+
+class EmpiricalDelays:
+    """Replayable per-round latency draws resampled from a *measured*
+    per-step latency sample set.
+
+    ``examples/availability_sim.py --dist`` exports the per-client
+    per-local-step latencies its wall-clock model actually drew (the
+    straggler tail as measured, not a parametric fit); this class
+    bootstraps per-round fleet latencies from those samples with the same
+    ``SeedSequence`` determinism as :class:`FaultPlan` — ``delays(rnd,
+    attempt)`` is a pure function of ``(seed, rnd, attempt)``, so
+    restored runs replay the identical straggler trajectory.  The
+    pipelined round driver (``rounds.run_rounds_pipelined``) multiplies
+    these per-step draws by the round's local-step count ``L`` to get
+    uplink-arrival offsets, exactly the availability_sim cost model.
+    """
+
+    def __init__(self, samples, n: int, seed: int = 0):
+        samples = np.asarray(samples, np.float64).reshape(-1)
+        if samples.size == 0:
+            raise ValueError("EmpiricalDelays needs at least one sample")
+        if not np.all(np.isfinite(samples)) or np.any(samples < 0):
+            raise ValueError("latency samples must be finite and >= 0")
+        self.samples = samples
+        self.n, self.seed = int(n), int(seed)
+
+    @classmethod
+    def from_json(cls, path: str, n: int, seed: int = 0
+                  ) -> "EmpiricalDelays":
+        """Load the ``availability_sim --dist`` export (key
+        ``per_step_latency_s``)."""
+        import json
+
+        with open(path) as f:
+            blob = json.load(f)
+        return cls(blob["per_step_latency_s"], n=n, seed=seed)
+
+    def delays(self, rnd: int, attempt: int = 0) -> np.ndarray:
+        """(n,) float64 per-step latency draws for the round (bootstrap
+        resample of the measured distribution)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence(
+                [self.seed, _TAG_EMPIRICAL, int(rnd), int(attempt)]
+            )
+        )
+        return self.samples[rng.integers(0, self.samples.size, self.n)]
+
+    def quantile(self, q) -> np.ndarray:
+        """Tail summary of the measured distribution (for reporting)."""
+        return np.quantile(self.samples, q)
 
 
 # --------------------------------------------------------------------------

@@ -43,6 +43,26 @@ round.  Here a whole round runs as donated compiled programs:
     inside the same donated round program — per-shard uplinks, one
     d-sized psum of the partials, behind the same ``lax.cond``.
 
+  * **Pipelined rounds under bounded staleness** (DESIGN.md §14): the
+    bulk-synchronous barrier above pays the slowest cohort member's
+    straggler tail every round.  ``make_pipelined_round_fn`` splits the
+    round into separately donated *stage* (cohort gather + ``L`` local
+    steps into a compact ping-pong payload buffer) and *commit* (scatter
+    + UpCom/h-update/DownCom) programs, and ``run_rounds_pipelined``
+    keeps up to ``τ`` rounds in flight: round ``t``'s commit is deferred
+    to pipeline slot ``t+τ`` so its stragglers get ``τ`` rounds of
+    wall-clock grace (late uplinks admitted into the deferred rebuild, or
+    demoted to dropped through PR 6's ``arrived``-mask survivor
+    aggregation), the DownCom prefetches ``x_bar`` to the cohort that
+    joins next (global-round indexed, known at dispatch time), and a
+    host-side simulated clock driven by ``FaultPlan``/``EmpiricalDelays``
+    latency draws prices the overlap.  In-flight cohorts are pairwise
+    disjoint (a client mid-round cannot join a new cohort), which is what
+    makes the deferred commit exact: nothing touches a staged cohort's
+    rows between its gather and its commit.  ``τ=0`` runs the identical
+    op sequence as the synchronous engine (stage, then commit
+    immediately) — equivalence-tested to ≤1e-6 for both uplinks.
+
 The key-derivation helpers are public so the per-step reference path (and
 the equivalence tests) can replay the exact same schedule.  See DESIGN.md
 §8.
@@ -71,6 +91,11 @@ __all__ = [
     "make_fused_round",
     "init_carry",
     "run_rounds",
+    "make_pipelined_round_fn",
+    "run_rounds_pipelined",
+    "pipeline_checkpoint_save",
+    "pipeline_checkpoint_restore",
+    "pipeline_latest_step",
 ]
 
 
@@ -136,7 +161,8 @@ def comm_round_key(base: jax.Array, rnd) -> jax.Array:
     return jax.random.fold_in(_as_key(base), rnd)
 
 
-def _zero_traces(flush_every: int, robust_n: int = 0) -> Dict[str, jax.Array]:
+def _zero_traces(flush_every: int, robust_n: int = 0,
+                 coverage: bool = False) -> Dict[str, jax.Array]:
     traces = {
         "loss_sum": jnp.zeros((flush_every,), jnp.float32),
         "steps": jnp.zeros((flush_every,), jnp.int32),
@@ -149,6 +175,11 @@ def _zero_traces(flush_every: int, robust_n: int = 0) -> Dict[str, jax.Array]:
         traces["arrivals"] = jnp.zeros((flush_every,), jnp.int32)
         traces["corrupted"] = jnp.zeros((flush_every,), jnp.int32)
         traces["bad"] = jnp.zeros((flush_every, robust_n), bool)
+        if coverage:
+            # per-round count of coordinates the survivor-aware UpCom
+            # left uncovered (no arrived owner) — the staleness/quality
+            # signal of the pipelined driver (DESIGN.md §14)
+            traces["uncovered"] = jnp.zeros((flush_every,), jnp.int32)
     return traces
 
 
@@ -459,6 +490,7 @@ def init_carry(
     key: jax.Array,
     flush_every: int,
     robust_n: int = 0,
+    coverage: bool = False,
 ) -> RoundCarry:
     kd, kc = jax.random.split(_as_key(key))
     return RoundCarry(
@@ -466,8 +498,55 @@ def init_carry(
         t=jnp.zeros((), jnp.int32),
         data_key=jax.random.key_data(kd),
         comm_key=jax.random.key_data(kc),
-        traces=_zero_traces(flush_every, robust_n),
+        traces=_zero_traces(flush_every, robust_n, coverage),
     )
+
+
+def _make_fault_resolver(faults, *, n: int, policy: str, q, max_retries: int,
+                         backoff0: float, deadline, host_cohort):
+    """Host-side survivor resolution shared by the synchronous and the
+    τ=0 pipelined drivers (identical retry/backoff semantics, so the two
+    admit bit-identical arrival masks).  ``resolve(g)`` returns a dict
+    with cohort/member/arrived/corrupt masks plus retry accounting;
+    results are memoized in ``resolve.cache`` (the quarantine feedback
+    purges entries past the detection round)."""
+    resolved: Dict[int, Any] = {}
+
+    def resolve(g: int):
+        import numpy as np
+
+        got = resolved.get(g)
+        if got is not None:
+            return got
+        attempt, backoff, quorum_miss = 0, 0.0, 0
+        while True:
+            cohort = host_cohort(g, attempt)
+            member = np.zeros(n, bool)
+            member[cohort] = True
+            arrived = member & ~faults.drops(g, attempt)
+            if policy == "deadline":
+                arrived &= faults.delays(g, attempt) <= deadline
+            if (policy == "quorum" and int(arrived.sum()) < q
+                    and attempt < max_retries):
+                quorum_miss += 1
+                backoff += backoff0 * (2.0 ** attempt)
+                attempt += 1
+                continue
+            break
+        res = {
+            "cohort": cohort,
+            "member": member,
+            "arrived": arrived,
+            "corrupt": faults.corrupts(g, attempt) & member,
+            "retries": attempt,
+            "backoff": backoff,
+            "quorum_miss": quorum_miss,
+        }
+        resolved[g] = res
+        return res
+
+    resolve.cache = resolved
+    return resolve
 
 
 def run_rounds(
@@ -595,40 +674,10 @@ def run_rounds(
             tamuna_dp.round_cohort(ckey, n, c)
         ))
 
-    resolved: Dict[int, Any] = {}
-
-    def resolve(g: int):
-        """The round's survivors, after the policy's retries: a dict with
-        cohort/member/arrived/corrupt masks plus host-side accounting."""
-        got = resolved.get(g)
-        if got is not None:
-            return got
-        attempt, backoff, quorum_miss = 0, 0.0, 0
-        while True:
-            cohort = host_cohort(g, attempt)
-            member = np.zeros(n, bool)
-            member[cohort] = True
-            arrived = member & ~faults.drops(g, attempt)
-            if policy == "deadline":
-                arrived &= faults.delays(g, attempt) <= deadline
-            if (policy == "quorum" and int(arrived.sum()) < q
-                    and attempt < max_retries):
-                quorum_miss += 1
-                backoff += backoff0 * (2.0 ** attempt)
-                attempt += 1
-                continue
-            break
-        res = {
-            "cohort": cohort,
-            "member": member,
-            "arrived": arrived,
-            "corrupt": faults.corrupts(g, attempt) & member,
-            "retries": attempt,
-            "backoff": backoff,
-            "quorum_miss": quorum_miss,
-        }
-        resolved[g] = res
-        return res
+    resolve = (_make_fault_resolver(
+        faults, n=n, policy=policy, q=q, max_retries=max_retries,
+        backoff0=backoff0, deadline=deadline, host_cohort=host_cohort,
+    ) if faulted else None)
 
     pending = []  # global round indices awaiting drain
     fmeta = []  # per-pending-round host-side fault accounting
@@ -672,8 +721,8 @@ def run_rounds(
                 if bad.any():
                     ids = np.where(bad)[0]
                     plan.quarantine(ids, g + 2, g + 1 + quarantine_rounds)
-                    for k in [k for k in resolved if k >= g + 2]:
-                        del resolved[k]
+                    for k in [k for k in resolve.cache if k >= g + 2]:
+                        del resolve.cache[k]
         elif plan is not None:
             carry = round_fn(
                 carry, data, L, slot,
@@ -720,3 +769,785 @@ def run_rounds(
                 carry.state, r + 1,
             )
     return carry.state, last
+
+
+# --------------------------------------------------------------------------
+# pipelined rounds under bounded staleness (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+# SeedSequence tag for the busy-aware uniform cohort draw of the pipelined
+# driver; disjoint from cohort.py (53/59/211) and faults.py (101..113)
+_TAG_FREE = 223
+
+
+def make_pipelined_round_fn(
+    cfg: ModelConfig,
+    tcfg: tamuna_dp.DistTamunaConfig,
+    mesh,
+    *,
+    sample_batch: SampleFn,
+    max_L: int = 16,
+    n: Optional[int] = None,
+    elastic: Optional[bool] = None,
+    coverage: bool = True,
+):
+    """Build the split-phase round engine ``run_rounds_pipelined`` drives.
+
+    Where ``make_round_fn`` fuses gather -> local steps -> scatter -> comm
+    into one donated program per chunk, this engine compiles the round as
+    two separately dispatchable halves so the driver can interleave rounds:
+
+      ``stage(carry, data, L, cohort) -> (carry, buf)``
+          gather the cohort rows into a compact ``(c, ...)`` payload
+          buffer and run the round's ``L`` local steps there (same
+          ``round_chunks`` bucketing and compile-cache bound as the fused
+          engine).  The carry's full state and traces are passed through
+          untouched — a staged round owns nothing but its compact buffer,
+          its summed loss, and its step count, all returned in ``buf``.
+          The pending buffers of in-flight rounds ARE the double-buffer:
+          at ``τ=1`` two compact states ping-pong while the full state
+          advances underneath them.
+
+      ``commit(carry, buf, slot, cohort, down, ...) -> carry``
+          scatter the staged rows back, run the comm step (UpCom,
+          h-update, DownCom to ``down``), inject/guard faults when an
+          ``arrived`` mask is given (identical semantics to the fused
+          engine's fault branch, DESIGN.md §12), and write ALL of the
+          round's traces at ``slot``.  Commits happen in round order, so
+          ``state.round`` inside the program is exactly the committing
+          round's global index — the comm key replays bit-identically to
+          the synchronous engine.
+
+    Soundness rests on the driver's no-overlap invariant: in-flight
+    cohorts are pairwise disjoint, so between a round's gather and its
+    commit nothing touches its cohort's rows — the deferred scatter+comm
+    reads exactly the payload a synchronous round would have read.
+
+    ``coverage=True`` additionally compiles the stats-reporting comm step
+    (``tamuna_dp.make_comm_step(with_stats=True)``): fault-tolerant
+    commits then trace the number of coordinates the survivor-aware UpCom
+    left uncovered — the quality signal the staleness sweeps plot.
+
+    Returns an engine namespace with ``stage``/``commit`` plus the same
+    introspection attributes as the fused engine (``cache``, ``max_L``,
+    ``n``, ``c``, ``elastic``, and ``coverage``).
+    """
+    import types
+
+    n = n or sharding.n_clients(mesh)
+    c = tcfg.c
+    if elastic is None:
+        elastic = default_elastic(n, c, sharding.n_clients(mesh))
+    local = tamuna_dp.make_local_step(cfg, tcfg)
+    comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n)
+    comm_stats = (tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n,
+                                           with_stats=True)
+                  if coverage else None)
+
+    def stage_chunk(B: int, carry: RoundCarry, compact, loss, data, clients):
+        state, t, dk, ck, traces = carry
+        compact, t, ls = _scan_local(
+            local, sample_batch, compact, data, _as_key(dk), t, B,
+            clients=clients,
+        )
+        return RoundCarry(state, t, dk, ck, traces), compact, loss + ls
+
+    def stage_chunk_full(B: int, carry: RoundCarry, loss, data):
+        state, t, dk, ck, traces = carry
+        state, t, ls = _scan_local(
+            local, sample_batch, state, data, _as_key(dk), t, B
+        )
+        return RoundCarry(state, t, dk, ck, traces), loss + ls
+
+    def commit_fn(carry: RoundCarry, compact, loss, steps, slot, cohort,
+                  down, arrived=None, corrupt=None, *,
+                  correct: bool = True, guard: bool = False,
+                  corrupt_mode: str = "nan", blowup: float = 1e8,
+                  guard_max_abs: Optional[float] = None) -> RoundCarry:
+        state, t, dk, ck, traces = carry
+        if elastic:
+            state = tamuna_dp.scatter_cohort(state, compact, cohort)
+        else:
+            # all-rows body: every row trained during stage, so the
+            # DownCom must broadcast (see make_round_fn)
+            down = None
+        ckey = jax.random.key_data(comm_round_key(ck, state.round))
+        if arrived is None:
+            state = comm(state, ckey, cohort=cohort, down=down)
+            new_traces = None
+        else:
+            from repro.dist import faults as faults_mod
+
+            member = jnp.zeros((n,), bool).at[cohort].set(True)
+            stx = state
+            if corrupt is not None:
+                stx = stx._replace(x=faults_mod.corrupt_rows(
+                    stx.x, corrupt, corrupt_mode, blowup
+                ))
+            arr = arrived & member
+            if guard:
+                bad = faults_mod.nonfinite_clients(
+                    stx.x, guard_max_abs
+                ) & member
+                arr = arr & ~bad
+                stx = stx._replace(x=jax.tree.map(
+                    lambda a: jnp.where(
+                        bad.reshape((n,) + (1,) * (a.ndim - 1)),
+                        jnp.zeros((), a.dtype), a,
+                    ),
+                    stx.x,
+                ))
+            else:
+                bad = jnp.zeros((n,), bool)
+            if comm_stats is not None and "uncovered" in traces:
+                state, stats = comm_stats(stx, ckey, cohort=cohort,
+                                          down=down, arrived=arr,
+                                          correct=correct)
+                unc = stats["uncovered"]
+            else:
+                state = comm(stx, ckey, cohort=cohort, down=down,
+                             arrived=arr, correct=correct)
+                unc = None
+            new_traces = {
+                "arrivals": traces["arrivals"].at[slot].set(
+                    arr.sum().astype(jnp.int32)
+                ),
+                "corrupted": traces["corrupted"].at[slot].set(
+                    bad.sum().astype(jnp.int32)
+                ),
+                "bad": traces["bad"].at[slot].set(bad),
+            }
+            if unc is not None:
+                new_traces["uncovered"] = traces["uncovered"].at[slot].set(
+                    unc
+                )
+        out_traces = {
+            "loss_sum": traces["loss_sum"].at[slot].set(loss),
+            "steps": traces["steps"].at[slot].set(steps),
+            "up_floats": traces["up_floats"].at[slot].set(state.up_floats),
+            "down_floats": traces["down_floats"].at[slot].set(
+                state.down_floats
+            ),
+            "up_bytes": traces["up_bytes"].at[slot].set(state.up_bytes),
+            "down_bytes": traces["down_bytes"].at[slot].set(
+                state.down_bytes
+            ),
+        }
+        if new_traces is not None:
+            out_traces.update(new_traces)
+        return RoundCarry(state, t, dk, ck, out_traces)
+
+    cache: Dict[Any, Callable] = {}
+
+    def gather_prog():
+        if "gather" not in cache:
+            # NOT donated: the full state stays live in the carry
+            cache["gather"] = jax.jit(tamuna_dp.gather_cohort)
+        return cache["gather"]
+
+    def stage_prog(B: int):
+        key = ("stage", B)
+        if key not in cache:
+            fn = stage_chunk if elastic else stage_chunk_full
+            dn = (0, 1, 2) if elastic else (0, 1)
+            cache[key] = jax.jit(partial(fn, B), donate_argnums=dn)
+        return cache[key]
+
+    def commit_prog(fkey):
+        # only the carry is donated: the (c, ...) compact payload cannot
+        # alias any (n, ...) output, so donating it would just warn
+        key = ("commit", fkey)
+        if key not in cache:
+            if fkey is None:
+                cache[key] = jax.jit(commit_fn, donate_argnums=(0,))
+            else:
+                correct, guard, mode, blowup, gmax = fkey
+                cache[key] = jax.jit(
+                    partial(commit_fn, correct=correct, guard=guard,
+                            corrupt_mode=mode, blowup=blowup,
+                            guard_max_abs=gmax),
+                    donate_argnums=(0,),
+                )
+        return cache[key]
+
+    def stage(carry: RoundCarry, data, L: int, cohort=None):
+        chunks = round_chunks(L, max_L)
+        loss = jnp.float32(0.0)
+        if elastic:
+            if cohort is None:
+                raise ValueError("elastic stage needs a host-resolved "
+                                 "cohort (the driver owns the schedule)")
+            cohort = jnp.asarray(cohort, jnp.int32)
+            compact = gather_prog()(carry.state, cohort)
+            for B in chunks:
+                carry, compact, loss = stage_prog(B)(
+                    carry, compact, loss, data, cohort
+                )
+            return carry, {"compact": compact, "loss": loss,
+                           "steps": sum(chunks)}
+        for B in chunks:
+            carry, loss = stage_prog(B)(carry, loss, data)
+        return carry, {"compact": None, "loss": loss, "steps": sum(chunks)}
+
+    def commit(carry: RoundCarry, buf, slot, cohort=None, down=None,
+               arrived=None, corrupt=None, correct: bool = True,
+               guard: bool = False, corrupt_mode: str = "nan",
+               blowup: float = 1e8,
+               guard_max_abs: Optional[float] = None) -> RoundCarry:
+        slot = jnp.asarray(slot, jnp.int32)
+        steps = jnp.asarray(buf["steps"], jnp.int32)
+        if elastic and cohort is None:
+            raise ValueError("elastic commit needs the staged cohort")
+        if cohort is not None:
+            cohort = jnp.asarray(cohort, jnp.int32)
+        if down is not None:
+            down = jnp.asarray(down).astype(bool)
+        if arrived is None:
+            if corrupt is not None:
+                raise ValueError("corrupt mask needs an arrived mask")
+            return commit_prog(None)(
+                carry, buf["compact"], buf["loss"], steps, slot, cohort,
+                down,
+            )
+        if cohort is None:
+            raise ValueError("fault-tolerant commit needs an explicit "
+                             "cohort (resolve it host-side)")
+        fkey = (bool(correct), bool(guard), str(corrupt_mode),
+                float(blowup),
+                None if guard_max_abs is None else float(guard_max_abs))
+        arrived = jnp.asarray(arrived).astype(bool)
+        if corrupt is not None:
+            corrupt = jnp.asarray(corrupt).astype(bool)
+        return commit_prog(fkey)(
+            carry, buf["compact"], buf["loss"], steps, slot, cohort, down,
+            arrived, corrupt,
+        )
+
+    return types.SimpleNamespace(
+        stage=stage, commit=commit, cache=cache, max_L=max_L, n=n, c=c,
+        elastic=elastic, coverage=comm_stats is not None,
+    )
+
+
+def _uniform_cohort_host(ck0, g: int, n: int, c: int,
+                         attempt: int = 0):
+    """Host replay of the engine's on-device uniform cohort for round
+    ``g`` — bit-identical to the in-program derivation (same key fold,
+    same ``round_cohort``), so explicit upload preserves the fault-free
+    schedule exactly."""
+    import numpy as np
+
+    ckey = comm_round_key(jnp.asarray(ck0), g)
+    if attempt > 0:
+        ckey = jax.random.fold_in(ckey, attempt)
+    return np.asarray(jax.device_get(tamuna_dp.round_cohort(ckey, n, c)))
+
+
+def _free_uniform_cohort(ck0, g: int, n: int, c: int, busy):
+    """Uniform cohort over the FREE clients only: with rounds in flight a
+    busy client physically cannot join a new cohort, so the pipelined
+    driver draws round ``g``'s cohort uniformly from the complement of
+    the in-flight set.  Deterministic in ``(comm_key, g, busy)`` — keyed
+    off the same per-round comm key as the synchronous schedule, under a
+    dedicated stream tag so it never correlates with other draws."""
+    import numpy as np
+
+    busy = np.asarray(busy, bool)
+    free = np.where(~busy)[0]
+    if free.size < c:
+        raise ValueError(
+            f"only {free.size} free clients for c={c} at round {g}: "
+            f"staleness too deep for this fleet (need c*(tau+1) <= n)"
+        )
+    kd = np.asarray(jax.device_get(jax.random.key_data(
+        comm_round_key(jnp.asarray(ck0), g)
+    ))).reshape(-1)
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [int(kd[0]), int(kd[1]), _TAG_FREE]
+    ))
+    pick = rng.choice(free.size, size=c, replace=False)
+    return np.sort(free[pick]).astype(np.int32)
+
+
+def run_rounds_pipelined(
+    state: tamuna_dp.DistTamunaState,
+    *,
+    round_fn,
+    data: Any,
+    key: jax.Array,
+    rounds: int,
+    rng,
+    p: float,
+    staleness: int = 1,
+    flush_every: int = 10,
+    logger=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    max_L: Optional[int] = None,
+    plan=None,
+    faults=None,
+    latency=None,
+    policy: str = "wait_all",
+    quorum: Optional[int] = None,
+    max_retries: int = 3,
+    backoff0: float = 1.0,
+    deadline: Optional[float] = None,
+    guard: Optional[bool] = None,
+    guard_max_abs: Optional[float] = None,
+    resume: bool = False,
+) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
+    """Pipelined multi-round driver: overlap local compute with
+    communication under bounded staleness ``τ = staleness``.
+
+    Pipeline step ``u`` first *stages* round ``u`` (cohort gather + local
+    steps into a pending payload buffer) and then *commits* round
+    ``u - τ`` (scatter + UpCom/h-update/DownCom + traces), so up to ``τ``
+    rounds are in flight at once and a committing round's stragglers had
+    ``τ`` extra rounds of wall-clock to land.  ``τ=0`` stages and commits
+    the same round back to back — the identical op sequence (and, under a
+    ``FaultPlan``, the identical host-side survivor resolution) as
+    ``run_rounds``.
+
+    Schedule invariants, all host-enforced:
+
+      * **Disjoint in-flight cohorts** — round ``g``'s cohort is drawn
+        from the clients NOT in the ``τ`` preceding uncommitted rounds
+        (``plan.cohort_excluding`` / ``_free_uniform_cohort``; requires
+        ``c·(τ+1) <= n`` and the elastic engine).  This is what makes the
+        deferred commit exact: nothing touches a staged cohort's rows
+        between gather and commit.
+      * **DownCom prefetch** — commit of round ``g`` targets the cohort
+        of round ``g+τ+1``, the round that stages immediately after this
+        commit: joining clients receive ``x_bar`` exactly one commit
+        before their gather, never earlier, never later.  (At ``τ=0``
+        this is round ``g+1`` — the synchronous rule.)
+      * **Bounded-staleness admission** — at ``τ>=1`` the simulated
+        clock decides lateness: a member's uplink arrives at
+        ``dispatch_g + delay_i(g)·L_g`` (per-step latency draws from
+        ``latency`` — a ``faults.EmpiricalDelays`` or any object with
+        ``.delays(rnd, attempt)`` — or from the ``FaultPlan``); the
+        policy's cutoff (``wait_all`` = slowest member, ``quorum`` =
+        q-th arrival, ``deadline`` = dispatch + deadline) admits rows
+        into the deferred rebuild through PR 6's ``arrived``-mask
+        survivor aggregation and demotes the rest to dropped — their
+        coordinates stay bitwise untouched.  Unlike the synchronous
+        quorum, a quorum miss never resamples (the pipeline cannot
+        rewind a staged round); it commits whatever arrived.  At ``τ=0``
+        with a ``FaultPlan`` the synchronous resolver (retries, backoff,
+        resampling) is reused verbatim.
+
+    The simulated wall clock (the benchmark's headline) advances as
+    ``dispatch_u = max(commit_{u-τ-1}, dispatch_{u-1})`` and
+    ``commit_g = max(commit_{g-1}, cutoff_g)`` — at ``τ=0``/``wait_all``
+    this reproduces the bulk-synchronous sum-of-slowest-member cost
+    model of ``examples/availability_sim.py``; at ``τ>=1`` a straggler
+    only stalls the clock if it is still missing ``τ`` rounds later.
+    Metrics rows gain ``staleness``/``dispatch_s``/``commit_s``/
+    ``round_latency_s``/``admitted``/``late_dropped`` (plus
+    ``uncovered`` when the engine traces coverage); the final row's
+    ``commit_s`` is the run's total simulated seconds.
+
+    ``checkpoint_every`` saves a *pipeline* checkpoint (the carry plus
+    every in-flight payload buffer and the clock —
+    ``pipeline_checkpoint_save``) at trace-drain boundaries while the
+    pipeline is full; ``resume=True`` restores the latest one and
+    continues bit-exactly (the host ``rng``'s skipped ``L`` draws are
+    replayed deterministically).
+
+    Caveat (documented, by design): AdamW's shared ``opt.count`` scalar
+    is scattered back last-wins, so under pipelining its value can lag
+    the true global step by up to ``τ·max_L`` — same order as the
+    staleness the optimizer already tolerates.
+    """
+    import numpy as np
+
+    engine = round_fn
+    if not (hasattr(engine, "stage") and hasattr(engine, "commit")):
+        raise ValueError("run_rounds_pipelined needs the split-phase "
+                         "engine from make_pipelined_round_fn")
+    tau = int(staleness)
+    if tau < 0:
+        raise ValueError(f"staleness must be >= 0, got {tau}")
+    n, c = engine.n, engine.c
+    engine_cap = engine.max_L
+    max_L = min(max_L or engine_cap, engine_cap)
+    flush_every = max(1, min(flush_every, rounds))
+    if policy not in ROUND_POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; pick from "
+                         f"{ROUND_POLICIES}")
+    if policy == "deadline" and deadline is None:
+        raise ValueError("deadline policy needs a deadline (seconds)")
+    if tau >= 1:
+        if not engine.elastic:
+            raise ValueError(
+                "pipelining (staleness >= 1) needs the elastic engine: "
+                "all-rows rounds touch every client row, so in-flight "
+                "rounds cannot be disjoint"
+            )
+        if c * (tau + 1) > n:
+            raise ValueError(
+                f"staleness {tau} needs c*(tau+1) <= n "
+                f"(got c={c}, n={n}): in-flight cohorts must be disjoint"
+            )
+    if guard is None:
+        guard = faults is not None and faults.model.p_corrupt > 0
+    if faults is not None and faults.n != n:
+        raise ValueError(f"fault plan covers {faults.n} clients, "
+                         f"engine has n={n}")
+    if policy != "wait_all" and faults is None and (tau == 0
+                                                    or latency is None):
+        raise ValueError("round policies need a fault plan "
+                         "(or, at staleness >= 1, a latency model)")
+    lat_n = getattr(latency, "n", None)
+    if lat_n is not None and lat_n != n:
+        raise ValueError(f"latency model covers {lat_n} clients, "
+                         f"engine has n={n}")
+
+    robust = (faults is not None and (
+        not faults.is_zero or policy != "wait_all" or bool(guard)
+    )) or (tau >= 1 and policy != "wait_all")
+    sync_equiv = tau == 0 and robust  # reuse the synchronous resolver
+    q = quorum if quorum is not None else c // 2 + 1
+    coverage = bool(getattr(engine, "coverage", False)) and robust
+    r0 = int(state.round)
+    carry = init_carry(state, key, flush_every,
+                       robust_n=n if robust else 0, coverage=coverage)
+    ck0 = np.asarray(jax.device_get(carry.comm_key))
+
+    def host_cohort(g: int, attempt: int = 0) -> np.ndarray:
+        if plan is not None:
+            return np.asarray(plan.cohort(g, attempt))
+        return _uniform_cohort_host(ck0, g, n, c, attempt)
+
+    resolve = (_make_fault_resolver(
+        faults, n=n, policy=policy, q=q, max_retries=max_retries,
+        backoff0=backoff0, deadline=deadline, host_cohort=host_cohort,
+    ) if sync_equiv else None)
+
+    cohorts: Dict[int, np.ndarray] = {}
+
+    def resolve_cohort(g: int, busy: np.ndarray) -> np.ndarray:
+        got = cohorts.get(g)
+        if got is not None:
+            return got
+        if plan is not None:
+            co = np.asarray(plan.cohort_excluding(g, busy) if tau >= 1
+                            else plan.cohort(g))
+        elif not busy.any():
+            co = _uniform_cohort_host(ck0, g, n, c)
+        else:
+            co = _free_uniform_cohort(ck0, g, n, c, busy)
+        cohorts[g] = co
+        return co
+
+    def busy_mask() -> np.ndarray:
+        busy = np.zeros(n, bool)
+        for e in pend:
+            if e["cohort"] is not None:
+                busy[e["cohort"]] = True
+        return busy
+
+    lat_src = latency if latency is not None else faults
+
+    def arr_offsets(g: int, steps: int, attempt: int = 0) -> np.ndarray:
+        """(n,) absolute arrival offsets: per-STEP latency draws times
+        the round's local-step count (the availability_sim cost model)."""
+        if lat_src is None:
+            return np.zeros(n)
+        return (np.asarray(lat_src.delays(g, attempt), np.float64)
+                * max(int(steps), 1))
+
+    pend: list = []  # in-flight staged rounds, oldest first
+    window: list = []  # per-committed-round host meta awaiting drain
+    dispatch: Dict[int, float] = {}
+    committime: Dict[int, float] = {}
+    total_steps = 0
+    last: Dict[str, Any] = {}
+    u0 = 0
+
+    if resume:
+        if not checkpoint_dir:
+            raise ValueError("resume=True needs a checkpoint_dir")
+        step = pipeline_latest_step(checkpoint_dir)
+        if step is not None:
+            blob = pipeline_checkpoint_restore(
+                os.path.join(checkpoint_dir, f"pipe_step_{step}"),
+                carry_like=carry, engine=engine,
+            )
+            carry = blob["carry"]._replace(
+                traces=_zero_traces(flush_every, n if robust else 0,
+                                    coverage)
+            )
+            for e in blob["pending"]:
+                r = int(e["r"])
+                co = (None if e["cohort"] is None
+                      else np.asarray(e["cohort"], np.int32))
+                if co is not None:
+                    cohorts[r0 + r] = co
+                d = float(e["dispatch"])
+                dispatch[r] = d
+                pend.append({
+                    "r": r, "cohort": co, "dispatch": d,
+                    "buf": {"compact": e["compact"], "loss": e["loss"],
+                            "steps": int(e["steps"])},
+                })
+            u0 = step + len(pend)
+            committime[step - 1] = float(blob["clock"]["last_commit"])
+            if not pend:
+                dispatch[u0 - 1] = float(blob["clock"]["last_dispatch"])
+            total_steps = int(blob["clock"]["total_steps"])
+            # replay (and discard) the L draws of already-staged rounds so
+            # the host rng continues the original stream bit-exactly
+            for _ in range(u0):
+                tamuna_dp.sample_round_length(rng, p, max_L=max_L)
+
+    for u in range(u0, rounds + tau):
+        if u < rounds:
+            # ---- stage round u
+            L = tamuna_dp.sample_round_length(rng, p, max_L=max_L)
+            g = r0 + u
+            if sync_equiv:
+                co = np.asarray(resolve(g)["cohort"])
+            elif engine.elastic:
+                co = resolve_cohort(g, busy_mask())
+            elif plan is not None:
+                co = np.asarray(plan.cohort(g))
+            else:
+                co = None
+            carry, buf = engine.stage(carry, data, L, cohort=co)
+            d = max(committime.get(u - tau - 1, 0.0),
+                    dispatch.get(u - 1, 0.0))
+            dispatch[u] = d
+            pend.append({"r": u, "cohort": co, "buf": buf, "dispatch": d})
+        rc = u - tau
+        if not (0 <= rc < rounds):
+            continue
+        # ---- commit round rc
+        ent = pend.pop(0)
+        g = r0 + rc
+        co, buf = ent["cohort"], ent["buf"]
+        if engine.elastic:
+            if sync_equiv:
+                down = resolve(g + 1)["member"]
+            else:
+                nxt = resolve_cohort(g + tau + 1, busy_mask())
+                down = np.zeros(n, bool)
+                down[nxt] = True
+        else:
+            down = None
+        kw: Dict[str, Any] = {}
+        meta: Dict[str, Any] = {"staleness": tau}
+        if sync_equiv:
+            res = resolve(g)
+            arr_off = arr_offsets(g, buf["steps"], res["retries"])
+            arr = ent["dispatch"] + arr_off
+            cutoff = (float(arr[res["arrived"]].max())
+                      if res["arrived"].any() else ent["dispatch"])
+            cutoff += res["backoff"]
+            kw = dict(
+                arrived=res["arrived"],
+                corrupt=(res["corrupt"]
+                         if faults.model.p_corrupt > 0 else None),
+                correct=(policy != "wait_all"), guard=bool(guard),
+                corrupt_mode=faults.model.corrupt_mode,
+                blowup=faults.model.blowup, guard_max_abs=guard_max_abs,
+            )
+            meta.update(
+                retries=res["retries"], backoff_s=res["backoff"],
+                quorum_miss=res["quorum_miss"],
+                admitted=int(res["arrived"].sum()), late_dropped=0,
+            )
+        elif robust:
+            member = np.zeros(n, bool)
+            member[co] = True
+            dropped = (faults.drops(g, 0) if faults is not None
+                       else np.zeros(n, bool))
+            finite = member & ~dropped
+            arr = np.where(finite,
+                           ent["dispatch"] + arr_offsets(g, buf["steps"]),
+                           np.inf)
+            if policy == "wait_all":
+                cutoff = (float(arr[finite].max()) if finite.any()
+                          else ent["dispatch"])
+                admitted = finite
+            elif policy == "quorum":
+                kq = min(q, int(finite.sum()))
+                if kq == 0:
+                    cutoff, admitted = ent["dispatch"], np.zeros(n, bool)
+                else:
+                    cutoff = float(np.sort(arr[finite])[kq - 1])
+                    admitted = finite & (arr <= cutoff)
+            else:
+                # deadline cuts on simulated ARRIVAL time here (the
+                # synchronous driver cuts on the raw per-round draw)
+                cutoff = ent["dispatch"] + float(deadline)
+                admitted = finite & (arr <= cutoff)
+            kw = dict(
+                arrived=admitted,
+                corrupt=(faults.corrupts(g, 0) & member
+                         if faults is not None
+                         and faults.model.p_corrupt > 0 else None),
+                correct=(policy != "wait_all"), guard=bool(guard),
+                corrupt_mode=(faults.model.corrupt_mode
+                              if faults is not None else "nan"),
+                blowup=(faults.model.blowup
+                        if faults is not None else 1e8),
+                guard_max_abs=guard_max_abs,
+            )
+            meta.update(
+                retries=0, backoff_s=0.0,
+                quorum_miss=int(policy == "quorum"
+                                and int(finite.sum()) < q),
+                admitted=int(admitted.sum()),
+                late_dropped=int((finite & ~admitted).sum()),
+            )
+        else:
+            # no admission needed (everyone arrives): the clock still
+            # waits for the slowest member — the wait_all barrier
+            off = arr_offsets(g, buf["steps"])
+            if co is not None:
+                member = np.zeros(n, bool)
+                member[co] = True
+                cutoff = ent["dispatch"] + (
+                    float(off[member].max()) if member.any() else 0.0
+                )
+                meta.update(admitted=int(member.sum()), late_dropped=0)
+            else:
+                cutoff = ent["dispatch"] + (
+                    float(off.max()) if off.size else 0.0
+                )
+                meta.update(admitted=n, late_dropped=0)
+        tc = max(committime.get(rc - 1, 0.0), cutoff)
+        committime[rc] = tc
+        carry = engine.commit(carry, buf, len(window), cohort=co,
+                              down=down, **kw)
+        meta.update({
+            "round": rc, "dispatch_s": ent["dispatch"], "commit_s": tc,
+            "round_latency_s": tc - ent["dispatch"],
+        })
+        window.append(meta)
+        drained = False
+        if len(window) == flush_every or rc == rounds - 1:
+            tr = jax.device_get(carry.traces)  # the only host sync
+            for i, m in enumerate(window):
+                executed = int(tr["steps"][i])
+                total_steps += executed
+                last = {
+                    "round": m["round"],
+                    "L": executed,
+                    "loss": float(tr["loss_sum"][i]) / max(executed, 1),
+                    "local_steps": total_steps,
+                    "up_floats": float(tr["up_floats"][i]),
+                    "down_floats": float(tr["down_floats"][i]),
+                    "up_bytes": float(tr["up_bytes"][i]),
+                    "down_bytes": float(tr["down_bytes"][i]),
+                }
+                if robust:
+                    last["arrivals"] = int(tr["arrivals"][i])
+                    last["corrupted"] = int(tr["corrupted"][i])
+                    if "uncovered" in tr:
+                        last["uncovered"] = int(tr["uncovered"][i])
+                last.update({k: v for k, v in m.items() if k != "round"})
+                if logger is not None:
+                    logger.log(m["round"], last)
+            window = []
+            carry = carry._replace(traces=_zero_traces(
+                flush_every, n if robust else 0, coverage
+            ))
+            drained = True
+        if (drained and checkpoint_dir and checkpoint_every
+                and (rc + 1) % checkpoint_every == 0
+                and len(pend) == tau and rc + 1 < rounds):
+            pipeline_checkpoint_save(
+                os.path.join(checkpoint_dir, f"pipe_step_{rc + 1}"),
+                carry, pend,
+                {"last_dispatch": np.float32(dispatch.get(u, 0.0)),
+                 "last_commit": np.float32(tc),
+                 "total_steps": np.int32(total_steps)},
+                rc + 1,
+            )
+    return carry.state, last
+
+
+def pipeline_checkpoint_save(path: str, carry: RoundCarry, pending,
+                             clock, step: int) -> None:
+    """Atomically checkpoint a pipelined run mid-flight: the donated
+    carry, every in-flight payload buffer (compact state + loss + step
+    count + cohort + dispatch time), and the simulated clock — one
+    ``checkpoint.save`` tree, so a restored run continues bit-exactly
+    with both buffers in flight.  Saved under ``pipe_step_<k>`` (``k``
+    committed rounds), a namespace disjoint from the synchronous
+    ``step_<k>`` state checkpoints."""
+    import numpy as np
+
+    from repro import checkpoint
+
+    pend = tuple(
+        {
+            "compact": e["buf"]["compact"],
+            "loss": e["buf"]["loss"],
+            "steps": np.int32(e["buf"]["steps"]),
+            "r": np.int32(e["r"]),
+            "cohort": (None if e["cohort"] is None
+                       else np.asarray(e["cohort"], np.int32)),
+            "dispatch": np.float32(e["dispatch"]),
+        }
+        for e in pending
+    )
+    checkpoint.save(path, {"carry": carry, "pending": pend,
+                           "clock": dict(clock)}, step)
+
+
+def pipeline_checkpoint_restore(path: str, *, carry_like: RoundCarry,
+                                engine):
+    """Restore a ``pipeline_checkpoint_save`` blob.  The number of
+    in-flight buffers is read from the checkpoint's own leaf names (the
+    pipeline depth is a runtime choice, not a structural constant); the
+    per-buffer ``like`` comes from ``jax.eval_shape`` of the engine's
+    gather, so no device work happens until the arrays land."""
+    import json
+    import numpy as np
+
+    from repro import checkpoint
+
+    with open(os.path.join(path, "meta.json")) as f:
+        names = json.load(f)["names"]
+    idx = {int(nm.split("/")[1]) for nm in names
+           if nm.startswith("pending/")}
+    k = (max(idx) + 1) if idx else 0
+    if engine.elastic:
+        compact_like = jax.eval_shape(
+            tamuna_dp.gather_cohort, carry_like.state,
+            jax.ShapeDtypeStruct((engine.c,), jnp.int32),
+        )
+        cohort_like = np.zeros((engine.c,), np.int32)
+    else:
+        compact_like, cohort_like = None, None
+    entry_like = {
+        "compact": compact_like,
+        "loss": jax.ShapeDtypeStruct((), jnp.float32),
+        "steps": np.int32(0),
+        "r": np.int32(0),
+        "cohort": cohort_like,
+        "dispatch": np.float32(0.0),
+    }
+    like = {
+        "carry": carry_like,
+        "pending": tuple(entry_like for _ in range(k)),
+        "clock": {"last_dispatch": np.float32(0.0),
+                  "last_commit": np.float32(0.0),
+                  "total_steps": np.int32(0)},
+    }
+    return checkpoint.restore(path, like)
+
+
+def pipeline_latest_step(root: str) -> Optional[int]:
+    """Newest ``pipe_step_<k>`` checkpoint under ``root`` (committed
+    rounds ``k``), or None."""
+    if not os.path.isdir(root):
+        return None
+    steps = [
+        int(d.split("_")[-1]) for d in os.listdir(root)
+        if d.startswith("pipe_step_")
+    ]
+    return max(steps) if steps else None

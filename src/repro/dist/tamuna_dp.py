@@ -378,6 +378,7 @@ def make_comm_step(
     impl: Optional[str] = None,
     block: int = 4096,
     n: Optional[int] = None,
+    with_stats: bool = False,
 ):
     """Build ``fn(state, key, cohort=None, down=None) -> state``: UpCom +
     DownCom of one round.
@@ -414,6 +415,12 @@ def make_comm_step(
 
     Uplink/downlink float accounting is a builder-time constant (the leaf
     dims are static), not recomputed inside the traced step.
+
+    ``with_stats=True`` makes ``fn`` return ``(state, stats)`` where
+    ``stats["uncovered"]`` is the round's count of coordinates with no
+    surviving owner (``comm_ws.uncovered_coords`` over the same slot
+    assignment the aggregation used) — the coverage-loss observable the
+    pipelined driver traces per round (DESIGN.md §14).
     """
     n = n or sharding.n_clients(mesh)
     c, s = tcfg.c, tcfg.s
@@ -531,7 +538,19 @@ def make_comm_step(
                 wire_seed=wire_seed_(key), wire_down=tcfg.wire_down,
             )
             up, upb = up_arrived(slot_of, arrived)
-            return bump(state, xb, hb, up, upb)
+            out = bump(state, xb, hb, up, upb)
+            if not with_stats:
+                return out
+            bslot = jnp.where(
+                slot_of >= 0, (-(slot_of + off)) % c, -1
+            ).astype(jnp.int32)
+            if arrived is not None:
+                bslot = jnp.where(
+                    jnp.asarray(arrived).astype(bool), bslot, -1
+                )
+            return out, {"uncovered": comm_ws.uncovered_coords(
+                "blocked", tuple(dims), c, s, bslot
+            )}
 
         fn.wire_kinds = kinds
         return fn
@@ -563,7 +582,17 @@ def make_comm_step(
             wire_down=tcfg.wire_down,
         )
         up, upb = up_arrived(slot_of, arrived)
-        return bump(state, x_new, h_new, up, upb)
+        out = bump(state, x_new, h_new, up, upb)
+        if not with_stats:
+            return out
+        sslot = slot
+        if arrived is not None:
+            sslot = jnp.where(
+                jnp.asarray(arrived).astype(bool), sslot, -1
+            )
+        return out, {"uncovered": comm_ws.uncovered_coords(
+            "cyclic", tuple(dims), c, s, sslot
+        )}
 
     fn.wire_kinds = kinds
     return fn

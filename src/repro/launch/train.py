@@ -77,6 +77,27 @@ def main(argv=None) -> int:
     ap.add_argument("--flush-every", type=int, default=10,
                     help="fused path: drain device metric traces every "
                          "this many rounds")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined round engine (DESIGN.md §14): overlap "
+                         "round t+1's local compute with round t's "
+                         "commit under bounded staleness")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="pipeline depth tau: a round's commit may lag "
+                         "its dispatch by this many rounds (0 = the "
+                         "synchronous schedule, run through the split-"
+                         "phase engine)")
+    ap.add_argument("--latency-dist", default="",
+                    help="path to an availability_sim --dist export; "
+                         "drives the pipelined driver's simulated clock "
+                         "(per-step straggler latencies)")
+    ap.add_argument("--round-policy", default="wait_all",
+                    choices=["wait_all", "quorum", "deadline"],
+                    help="pipelined admission policy at the deferred "
+                         "commit (late uplinks past the cutoff are "
+                         "dropped, their coordinates untouched)")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="quorum size for --round-policy quorum "
+                         "(0 = c//2 + 1)")
     args = ap.parse_args(argv)
 
     n_dev = args.data_parallel * args.model_parallel
@@ -193,6 +214,39 @@ def main(argv=None) -> int:
                     os.path.join(args.checkpoint_dir, f"step_{r+1}"),
                     state, r + 1,
                 )
+    elif args.pipeline:
+        from repro.dist import faults as faults_mod
+
+        latency = (faults_mod.EmpiricalDelays.from_json(
+            args.latency_dist, n=n, seed=args.seed,
+        ) if args.latency_dist else None)
+        engine = rounds.make_pipelined_round_fn(
+            cfg, tcfg, mesh,
+            sample_batch=device_sampler(pipe.dcfg, cfg, mesh),
+            max_L=args.max_L, n=n,
+        )
+        state, last = rounds.run_rounds_pipelined(
+            state,
+            round_fn=engine,
+            data=pipe.device_data(),
+            key=jax.random.key(args.seed + 1),
+            rounds=args.rounds,
+            rng=rng,
+            p=tcfg.p,
+            staleness=args.staleness,
+            flush_every=args.flush_every,
+            logger=logger,
+            checkpoint_dir=args.checkpoint_dir or None,
+            checkpoint_every=args.checkpoint_every,
+            latency=latency,
+            policy=args.round_policy,
+            quorum=args.quorum or None,
+        )
+        total_steps = last.get("local_steps", 0)
+        final_loss = last.get("loss", float("nan"))
+        if "commit_s" in last:
+            print(f"[train] simulated clock: {last['commit_s']:.2f}s "
+                  f"at staleness {args.staleness}")
     else:
         round_fn = rounds.make_round_fn(
             cfg, tcfg, mesh,

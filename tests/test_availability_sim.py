@@ -100,3 +100,38 @@ def test_faults_mode_runs_and_reports(subproc):
     for scenario in ("fault-free", "quorum", "wait_all+drops"):
         assert scenario in out, out[-2000:]
     assert "sim wall-clock" in out
+
+
+def test_dist_out_exports_measured_tail(subproc, tmp_path):
+    """``--dist --dist-out`` (DESIGN.md §14): the example exports its
+    measured per-step latency draws as JSON, and EmpiricalDelays
+    bootstraps deterministic per-round fleet draws from them — the
+    pipelined driver's clock input."""
+    import json
+
+    path = tmp_path / "latency_dist.json"
+    out = subproc(
+        "import sys; sys.argv = ['availability_sim.py', '--dist', "
+        f"'--rounds', '2', '--dist-out', '{path}']; "
+        "exec(open('examples/availability_sim.py').read())",
+        devices=1, timeout=1500,
+    )
+    assert "[dist-out]" in out
+    with open(path) as f:
+        blob = json.load(f)
+    samples = np.asarray(blob["per_step_latency_s"])
+    assert samples.size > 0 and (samples > 0).all()
+    assert np.isfinite(samples).all()
+    q = blob["quantiles"]
+    assert q["p50"] <= q["p90"] <= q["p99"]
+    assert abs(q["p99"] - float(np.quantile(samples, 0.99))) < 1e-9
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.dist.faults import EmpiricalDelays
+
+    lat = EmpiricalDelays.from_json(str(path), n=6, seed=3)
+    a, b = lat.delays(4), lat.delays(4)
+    np.testing.assert_array_equal(a, b)  # deterministic in (seed, round)
+    assert a.shape == (6,)
+    assert set(np.round(a, 12)) <= set(np.round(samples, 12))
+    assert not np.array_equal(lat.delays(5), a)  # fresh draw per round

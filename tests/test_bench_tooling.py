@@ -134,3 +134,64 @@ def test_trajectory_table_aggregates_artifacts():
     assert all(len(r) == 5 for r in rows)
     # the table is what EXPERIMENTS links; a failing acceptance shows NO
     assert all(isinstance(r[4], bool) for r in rows)
+
+
+def test_run_smoke_pipeline_emits_rows_and_preserves_artifacts(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_pipeline.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "latency_dist.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "pipeline"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # the sync baseline clock, the overlapped tau=1 clock, and the
+    # headline acceptance row
+    assert "pipeline/n8/c2/tau0/wait_all/clock_s," in out, out[-2000:]
+    assert "pipeline/n8/c2/tau1/wait_all/clock_s," in out, out[-2000:]
+    assert "pipeline/speedup_at_tail," in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
+def test_trajectory_emits_machine_readable_json(tmp_path):
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    import json
+
+    from benchmarks import report
+
+    path = str(tmp_path / "traj" / "trajectory.json")
+    report.trajectory_json(path)
+    with open(path) as f:
+        got = json.load(f)
+    rows = got["rows"]
+    assert rows and all(
+        set(r) == {"artifact", "metric", "value", "acceptance", "ok"}
+        for r in rows
+    )
+    # same rows as the markdown table, same order
+    assert [(r["artifact"], r["metric"]) for r in rows] == \
+        [(a, m) for a, m, _, _, _ in report.trajectory_rows()]
+    assert got["all_ok"] == all(r["ok"] for r in rows)
+    # the pipeline artifact ships in the repo root -> its acceptance
+    # rows must be aggregated
+    assert any(r["artifact"] == "pipeline" for r in rows)
+    # --trajectory wires the write through main()
+    import contextlib
+    import io
+
+    path2 = str(tmp_path / "traj2.json")
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        report.main(["--trajectory", "--trajectory-json", path2])
+    assert os.path.exists(path2)
+    assert "Perf trajectory" in buf.getvalue()

@@ -1,0 +1,337 @@
+"""Pipelined round engine (DESIGN.md §14): split-phase stage/commit,
+bounded-staleness admission, the simulated straggler clock, and the
+pipelined checkpoint carry.
+
+The load-bearing guarantee is the first block: at ``staleness=0`` the
+split-phase engine replays the synchronous driver's op sequence — same
+cohorts, same L draws, same comm keys, same fault resolution — so every
+equivalence is leaf-wise <= 1e-6 (float32 reduction-order slack), on both
+uplinks, elastic and all-rows bodies, with and without a FaultPlan /
+CohortPlan.  Everything the pipeline adds (overlap, admission, clocks)
+is then tested as *structured metadata* on top of that anchored core.
+"""
+
+from __future__ import annotations
+
+_SETUP = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import cohort as cm
+from repro.dist import faults, rounds, tamuna_dp
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+n = 8
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=n)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+data = pipe.device_data()
+sampler = device_sampler(dcfg, cfg, mesh)
+
+
+def build(uplink, c=2, s=2, elastic=True):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=s, p=0.5,
+                                      uplink=uplink)
+    sync_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
+                                   max_L=8, n=n, elastic=elastic)
+    eng = rounds.make_pipelined_round_fn(cfg, tcfg, mesh,
+                                         sample_batch=sampler, max_L=8,
+                                         n=n, elastic=elastic)
+    mk = lambda: tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg,
+                                      n=n)
+    return tcfg, mk, sync_fn, eng
+
+
+def maxerr(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda u, v: float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                           - v.astype(jnp.float32)))),
+        a, b)), default=0.0)
+
+
+class RowLogger:
+    def __init__(self):
+        self.rows = []
+
+    def log(self, step, m):
+        self.rows.append(dict(m))
+"""
+
+
+def test_tau0_equivalent_to_sync_engine(subproc):
+    # staleness=0 through the split-phase engine == run_rounds, leaf-wise
+    # <= 1e-6: both uplinks x {elastic c<n, all-rows} — the ISSUE's
+    # acceptance anchor
+    subproc(_SETUP + r"""
+for uplink in ("masked_psum", "block_rs"):
+    for elastic in (True, False):
+        _, mk, sync_fn, eng = build(uplink, elastic=elastic)
+        kw = dict(data=data, key=jax.random.key(7), rounds=6, p=0.5,
+                  flush_every=3)
+        st_s, last_s = rounds.run_rounds(
+            mk(), round_fn=sync_fn, rng=np.random.default_rng(3), **kw)
+        st_p, last_p = rounds.run_rounds_pipelined(
+            mk(), round_fn=eng, rng=np.random.default_rng(3),
+            staleness=0, **kw)
+        err = maxerr((st_s.x, st_s.h, st_s.opt), (st_p.x, st_p.h, st_p.opt))
+        assert err <= 1e-6, (uplink, elastic, err)
+        assert abs(last_s["loss"] - last_p["loss"]) <= 1e-6
+        assert last_p["staleness"] == 0
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_tau0_equivalent_under_faults_and_plan(subproc):
+    # the sync_equiv regime reuses the PR 6 fault resolver verbatim:
+    # drops + NaN corruption + payload guard + quorum resample must
+    # produce the identical arrived-mask aggregation; a CohortPlan must
+    # drive the identical schedule through both drivers
+    subproc(_SETUP + r"""
+fp = faults.FaultPlan(11, n, p_drop=0.3, p_corrupt=0.2,
+                      corrupt_mode="nan")
+_, mk, sync_fn, eng = build("masked_psum")
+kw = dict(data=data, key=jax.random.key(7), rounds=6, p=0.5,
+          flush_every=3, faults=fp, policy="quorum", quorum=1)
+st_s, last_s = rounds.run_rounds(mk(), round_fn=sync_fn,
+                                 rng=np.random.default_rng(3), **kw)
+st_p, last_p = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, rng=np.random.default_rng(3), staleness=0, **kw)
+err = maxerr((st_s.x, st_s.h, st_s.opt), (st_p.x, st_p.h, st_p.opt))
+assert err <= 1e-6, err
+assert last_s["arrivals"] == last_p["arrivals"]
+assert last_s["corrupted"] == last_p["corrupted"]
+
+# CohortPlan schedule (fresh plans: caches are per-object)
+_, mk, sync_fn, eng = build("block_rs")
+kw = dict(data=data, key=jax.random.key(7), rounds=5, p=0.5,
+          flush_every=2)
+st_s2, _ = rounds.run_rounds(mk(), round_fn=sync_fn,
+                             rng=np.random.default_rng(3),
+                             plan=cm.CohortPlan(5, n, 2), **kw)
+st_p2, _ = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, rng=np.random.default_rng(3), staleness=0,
+    plan=cm.CohortPlan(5, n, 2), **kw)
+assert maxerr((st_s2.x, st_s2.h), (st_p2.x, st_p2.h)) <= 1e-6
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_staleness_overlap_and_admission_properties(subproc):
+    # tau=1 with a heavy-tailed latency model: (a) the clock actually
+    # overlaps (round r+1 dispatches before round r commits, total clock
+    # strictly below the sync schedule's); (b) wait_all admits every
+    # cohort member; (c) quorum=c admits everyone too (all arrivals are
+    # finite, ties land <= the cutoff) so it is BITWISE wait_all; (d) an
+    # aggressive quorum drops late rows, and with s < c the dropped rows'
+    # exclusively-owned coordinates show up in the uncovered trace
+    subproc(_SETUP + r"""
+lat = faults.EmpiricalDelays([0.05, 0.1, 3.0], n=n, seed=5)
+_, mk, _, eng = build("masked_psum")
+kw = dict(round_fn=eng, data=data, key=jax.random.key(7), rounds=8,
+          p=0.5, flush_every=4, latency=lat)
+
+log0, log1 = RowLogger(), RowLogger()
+st0, last0 = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), staleness=0, logger=log0,
+    policy="wait_all", **kw)
+st1, last1 = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), staleness=1, logger=log1,
+    policy="wait_all", **kw)
+assert last1["commit_s"] < last0["commit_s"]  # the pipeline's point
+commits = [r["commit_s"] for r in log1.rows]
+dispatches = [r["dispatch_s"] for r in log1.rows]
+assert all(a <= b for a, b in zip(commits, commits[1:]))  # clock monotone
+# overlap evidence: some round dispatched before its predecessor committed
+assert any(d < c for d, c in zip(dispatches[1:], commits[:-1]))
+assert all(r["admitted"] == 2 and r["late_dropped"] == 0
+           for r in log1.rows)
+
+# quorum=c == wait_all bitwise at tau>=1
+stq, _ = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), staleness=1, policy="quorum",
+    quorum=2, **kw)
+for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(stq)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# aggressive quorum at s < c: late rows dropped; with s=2 of c=4
+# owners per coordinate slot, a slot goes uncovered whenever BOTH its
+# owners miss the cutoff — quorum=1 under a heavy tail drops up to 3
+# rows a round, so the uncovered trace must light up
+_, mk4, _, eng4 = build("masked_psum", c=4, s=2)
+log4 = RowLogger()
+st4, last4 = rounds.run_rounds_pipelined(
+    mk4(), round_fn=eng4, data=data, key=jax.random.key(7), rounds=8,
+    p=0.5, flush_every=4, latency=lat, rng=np.random.default_rng(3),
+    staleness=1, policy="quorum", quorum=1, logger=log4)
+drops = sum(r["late_dropped"] for r in log4.rows)
+assert drops > 0
+assert all(1 <= r["admitted"] <= 4
+           and r["admitted"] + r["late_dropped"] <= 4 for r in log4.rows)
+uncov = sum(r["uncovered"] for r in log4.rows)
+assert uncov > 0  # s=1: every dropped row leaves its slot uncovered
+assert all(np.isfinite(np.asarray(jax.tree.leaves(st4.x)[0])).all()
+           for _ in [0])
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_inflight_cohorts_disjoint_and_depth_validation(subproc):
+    # the no-overlap invariant: a client mid-round never joins a new
+    # cohort, so consecutive cohorts at tau=1 are pairwise disjoint —
+    # observed through a recording CohortPlan (the driver resolves busy-
+    # aware cohorts via plan.cohort_excluding); plus the depth/engine
+    # validation errors
+    subproc(_SETUP + r"""
+calls = []
+
+
+class Recording(cm.CohortPlan):
+    def cohort_excluding(self, rnd, busy, attempt=0):
+        out = super().cohort_excluding(rnd, busy, attempt)
+        calls.append((int(rnd), out.copy()))
+        return out
+
+
+_, mk, _, eng = build("masked_psum")
+lat = faults.EmpiricalDelays([0.1, 2.0], n=n, seed=1)
+st, _ = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, data=data, key=jax.random.key(7), rounds=8,
+    p=0.5, flush_every=4, rng=np.random.default_rng(3), staleness=1,
+    latency=lat, policy="wait_all", plan=Recording(5, n, 2))
+assert len(calls) >= 8
+by_round = dict(calls)
+# disjointness applies to rounds that are ever simultaneously in flight:
+# cohort g vs g+1 for every STAGED g (cohorts past the horizon are
+# resolved only as DownCom targets after their predecessor drained)
+for g in range(8):
+    if g + 1 in by_round:
+        assert not set(by_round[g].tolist()) & set(by_round[g + 1].tolist())
+
+# validation: depth needs c*(tau+1) <= n
+import pytest
+
+_, mk5, _, eng5 = build("masked_psum", c=5, s=2)
+try:
+    rounds.run_rounds_pipelined(
+        mk5(), round_fn=eng5, data=data, key=jax.random.key(7), rounds=2,
+        p=0.5, rng=np.random.default_rng(0), staleness=1)
+    raise SystemExit("expected ValueError for c*(tau+1) > n")
+except ValueError as e:
+    assert "tau" in str(e) or "staleness" in str(e)
+
+# validation: tau>=1 needs the elastic engine
+_, mkf, _, engf = build("masked_psum", elastic=False)
+try:
+    rounds.run_rounds_pipelined(
+        mkf(), round_fn=engf, data=data, key=jax.random.key(7), rounds=2,
+        p=0.5, rng=np.random.default_rng(0), staleness=1)
+    raise SystemExit("expected ValueError for all-rows at tau >= 1")
+except ValueError as e:
+    assert "elastic" in str(e)
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_pipeline_checkpoint_roundtrip_and_resume(subproc):
+    # mid-run save with both buffers in flight: restore must round-trip
+    # bit-exactly and a resumed run must land on the full run's state AND
+    # clock exactly (the simulated schedule replays from the saved
+    # dispatch/commit times); pipe_step_* dirs must be invisible to the
+    # synchronous checkpoint scanner
+    subproc(_SETUP + r"""
+import shutil
+from repro import checkpoint
+
+lat = faults.EmpiricalDelays([0.1, 0.2, 1.5], n=n, seed=5)
+_, mk, _, eng = build("masked_psum")
+ckdir = "/tmp/pipe_ck_test"
+shutil.rmtree(ckdir, ignore_errors=True)
+kw = dict(round_fn=eng, data=data, key=jax.random.key(7), rounds=8,
+          p=0.5, staleness=1, flush_every=2, latency=lat,
+          policy="quorum", quorum=1)
+st_full, last_full = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), **kw)
+st_a, _ = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), checkpoint_dir=ckdir,
+    checkpoint_every=4, **kw)
+step = rounds.pipeline_latest_step(ckdir)
+assert step is not None and 0 < step < 8
+assert checkpoint.latest_step(ckdir) is None  # sync scanner ignores pipe
+st_b, last_b = rounds.run_rounds_pipelined(
+    mk(), rng=np.random.default_rng(3), checkpoint_dir=ckdir,
+    resume=True, **kw)
+err = maxerr((st_full.x, st_full.h, st_full.opt),
+             (st_b.x, st_b.h, st_b.opt))
+assert err == 0.0, err  # bit-exact continuation
+assert last_b["commit_s"] == last_full["commit_s"]
+assert last_b["local_steps"] == last_full["local_steps"]
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_tau1_equals_perstep_reference_with_delayed_updates(subproc):
+    # the ISSUE's staleness-admission property, in its strongest form: at
+    # tau=1 the pipelined engine must equal a per-step reference replay
+    # in which every round's uplink/h-update/DownCom is applied ONE round
+    # late — round u's cohort gathers from the state holding commits
+    # <= u-2 and its trained rows sit in a pending buffer until commit.
+    # Same key schedule (data_step_key by global step, comm_round_key by
+    # commit index), same recorded cohorts, same geometric L draws.
+    subproc(_SETUP + r"""
+recorded = {}
+
+
+class Recording(cm.CohortPlan):
+    def cohort_excluding(self, rnd, busy, attempt=0):
+        out = super().cohort_excluding(rnd, busy, attempt)
+        recorded[int(rnd)] = out.copy()
+        return out
+
+
+tcfg, mk, _, eng = build("masked_psum")
+ROUNDS = 6
+st_p, _ = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, data=data, key=jax.random.key(7), rounds=ROUNDS,
+    p=0.5, flush_every=3, rng=np.random.default_rng(3), staleness=1,
+    policy="wait_all", plan=Recording(5, n, 2))
+
+# per-step reference on the identical schedule, updates delayed by one
+carry0 = rounds.init_carry(mk(), jax.random.key(7), flush_every=3)
+dk = np.asarray(carry0.data_key).copy()
+ck = np.asarray(carry0.comm_key).copy()
+local = jax.jit(tamuna_dp.make_local_step(cfg, tcfg))
+comm = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n))
+rng = np.random.default_rng(3)
+ref = mk()
+pend, tstep = {}, 0
+for u in range(ROUNDS + 1):
+    if u < ROUNDS:
+        L = tamuna_dp.sample_round_length(rng, 0.5, max_L=8)
+        cohort = recorded[u]
+        work = tamuna_dp.gather_cohort(ref, cohort)
+        for _ in range(L):
+            batch = sampler(data, rounds.data_step_key(dk, tstep),
+                            clients=cohort)
+            work, _m = local(work, **batch)
+            tstep += 1
+        pend[u] = (work, cohort)
+    rc = u - 1
+    if rc >= 0:
+        work, cohort = pend.pop(rc)
+        ref = tamuna_dp.scatter_cohort(ref, work, cohort)
+        down = tamuna_dp.member_mask(
+            jnp.asarray(recorded[rc + 2], jnp.int32), n)
+        ckey = rounds.comm_round_key(ck, rc)
+        ref = comm(ref, jax.random.key_data(ckey), cohort=cohort,
+                   down=down)
+
+err = maxerr((st_p.x, st_p.h, st_p.opt), (ref.x, ref.h, ref.opt))
+assert err <= 1e-6, err
+print("OK")
+""", devices=1, timeout=1500)
