@@ -165,6 +165,29 @@ def trajectory_rows() -> list:
             "(1=yes)",
             float(bool(pl["tail_loss_within_sync_band"])), 1.0)
 
+    rb = _load("BENCH_robust.json")
+    if rb:
+        acc = rb["acceptance"]
+        for key, ratio in sorted(rb["ratios"].items()):
+            add("robust", f"rounds-to-target ratio vs fault-free, {key} "
+                f"at f={rb['config']['f_byz']}",
+                ratio if ratio is not None else float("inf"),
+                acc["robust_ratio_max"], higher_is_better=False)
+        for attack, stalls in sorted(rb["mean_control_stalls"].items()):
+            add("robust", f"plain mean stalls under {attack} (1=yes)",
+                float(bool(stalls)), 1.0)
+        add("robust", "robust comm-step overhead vs mean, production "
+            "uplink shape",
+            rb["robust_overhead_ratio"], acc["overhead_ratio_max"],
+            higher_is_better=False)
+        add("robust", "trimmed k=0 bitwise == mean, all impls (1=yes)",
+            float(bool(rb["identity_bitwise_ok"])), 1.0)
+        add("robust", "fault/reputation schedule replay bitwise (1=yes)",
+            float(bool(rb["deterministic_replay_ok"])), 1.0)
+        add("robust", "int8-wire robust aggregate max dev vs f32 wire",
+            rb["int8_wire_max_dev"], acc["int8_wire_dev_max"],
+            higher_is_better=False)
+
     return rows
 
 

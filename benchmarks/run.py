@@ -29,7 +29,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="",
                     help="comma list: fig2,fig3,table1,table2,kernels,"
                          "dist_round,round_engine,comm_step,elastic,"
-                         "faults,quant_comm,pipeline,roofline")
+                         "faults,quant_comm,pipeline,robust,roofline")
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, no artifact writes; skips benches "
@@ -157,6 +157,12 @@ def main(argv=None) -> int:
 
     rows = section("pipeline", lambda: smoke_call(__import__(
         "benchmarks.pipeline_bench", fromlist=["run"]).run))
+    if rows:
+        for r in rows:
+            emit(r["name"], r["us_per_call"], r["derived"])
+
+    rows = section("robust", lambda: smoke_call(__import__(
+        "benchmarks.robust_bench", fromlist=["run"]).run))
     if rows:
         for r in rows:
             emit(r["name"], r["us_per_call"], r["derived"])

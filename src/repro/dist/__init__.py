@@ -6,7 +6,11 @@ family-dispatching model API.
   tamuna_dp    DistTamunaConfig / init_state / local + comm step builders,
                cohort gather/scatter (elastic PP, §11)
   cohort       host-side cohort plans + availability models (§11)
-  faults       deterministic fault plans: dropout / corruption / delays (§12)
+  faults       deterministic fault plans: dropout / corruption / delays /
+               Byzantine adversaries (§12/§15)
+  robust       per-coordinate robust combiners (trimmed / median), the
+               adaptive magnitude guard, anomaly scores + EWMA reputation
+               feeding quarantine (§15)
   rounds       donated scanned round engine (make_round_fn / run_rounds)
   comm_ws      flat comm workspace: the mask-free fused comm step (§9)
   block_uplink ``block_rs_aggregate``: contiguous-block ownership uplink
@@ -19,6 +23,7 @@ from repro.dist import (
     comm_ws,
     faults,
     model_api,
+    robust,
     rounds,
     sharding,
     tamuna_dp,
@@ -30,6 +35,7 @@ __all__ = [
     "comm_ws",
     "faults",
     "model_api",
+    "robust",
     "rounds",
     "sharding",
     "tamuna_dp",

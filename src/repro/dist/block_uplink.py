@@ -107,6 +107,7 @@ def block_rs_aggregate(
     wire: Optional[str] = None,
     wire_seed=None,
     wire_down: bool = False,
+    robust=None,
 ) -> Tuple[Any, Any]:
     """Aggregate client-stacked pytrees under the blocked template.
 
@@ -138,7 +139,8 @@ def block_rs_aggregate(
     participation, the original template.  ``arrived``/``correct`` are
     the fault-tolerant aggregation inputs (DESIGN.md §12, see
     ``comm_ws.blocked_comm``); ``wire``/``wire_seed``/``wire_down`` the
-    quantized wire (§13, see ``comm_ws.cyclic_comm``).
+    quantized wire (§13, see ``comm_ws.cyclic_comm``); ``robust`` the
+    normalized robust-combiner spec (§15, see ``comm_ws.cyclic_comm``).
     """
     del model_cfg
     if meshed is None:
@@ -149,4 +151,5 @@ def block_rs_aggregate(
         meshed=meshed, mesh=mesh, pspecs=pspecs,
         shard_kernels=shard_kernels,
         wire=wire, wire_seed=wire_seed, wire_down=wire_down,
+        robust=robust,
     )

@@ -126,6 +126,9 @@ class CohortPlan:
             np.asarray(weights, np.float64)
         )
         self._logw = logw
+        # non-uniform selection without 1/(n p_i) reweighting biases the
+        # aggregate; run_rounds reads this flag to warn (DESIGN.md §11)
+        self.weighted = weights is not None
         self._cache: Dict[tuple, np.ndarray] = {}
         # (ids, first, last) quarantine windows — payload-guard feedback
         self._quarantine: list = []

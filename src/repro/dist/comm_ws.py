@@ -117,6 +117,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import robust as _robust
 from repro.dist import wire as _wire
 
 __all__ = [
@@ -519,7 +520,7 @@ def _wire_pack(flats, leaf_ids, gdims, kind, seed, row0=None,
 
 def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
                         sanitize=False, survivor=False, quant=None,
-                        down_quant=None):
+                        down_quant=None, robust=None):
     """One leaf of the dense-mask blocked reference: materialized
     ``(n, D)`` ownership (``(slot_i + block(k)) mod m < s``, the shifted
     blocked template over the ``m`` cohort slots — under full
@@ -542,11 +543,16 @@ def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
     if sanitize:
         xf = jnp.where(sl >= 0, xf, 0.0)
     xq = xf if quant is None else quant(xf)
-    num = (xq * qf).sum(axis=0)
-    if survivor:
-        x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
+    if robust is not None:
+        # robust combine over the dense owner stack: the (n, D) mask IS
+        # the validity mask (robust stats on dequantized values, §13)
+        x_bar, rcnt = _robust.robust_combine_stack(xq, qf > 0, *robust)
+        covered = (rcnt > 0) if survivor else None
+    elif survivor:
+        x_bar, covered = _survivor_bar((xq * qf).sum(axis=0),
+                                       qf.sum(axis=0))
     else:
-        x_bar, covered = num / s, None
+        x_bar, covered = (xq * qf).sum(axis=0) / s, None
     if down_quant is not None:
         x_bar = down_quant(x_bar)
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
@@ -560,7 +566,7 @@ def _dense_blocked_leaf(xl, hl, slot, m: int, s: int, scale, down=None,
 
 def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None,
                        sanitize=False, survivor=False, quant=None,
-                       down_quant=None):
+                       down_quant=None, robust=None):
     """One leaf of the reference masked_psum comm step: materialized
     ``(n, D)`` mask (both template regimes of paper Fig. 1), masked sum,
     1/s rebuild, masked h-update, broadcast.  The mask is derived from the
@@ -584,11 +590,16 @@ def _dense_cyclic_leaf(xl, hl, slot, c: int, s: int, scale, down=None,
     if sanitize:
         xf = jnp.where(sl >= 0, xf, 0.0)
     xq = xf if quant is None else quant(xf)
-    num = (xq * qf).sum(axis=0)
-    if survivor:
-        x_bar, covered = _survivor_bar(num, qf.sum(axis=0))
+    if robust is not None:
+        # robust combine over the dense owner stack: the (n, D) mask IS
+        # the validity mask (robust stats on dequantized values, §13)
+        x_bar, rcnt = _robust.robust_combine_stack(xq, qf > 0, *robust)
+        covered = (rcnt > 0) if survivor else None
+    elif survivor:
+        x_bar, covered = _survivor_bar((xq * qf).sum(axis=0),
+                                       qf.sum(axis=0))
     else:
-        x_bar, covered = num / s, None
+        x_bar, covered = (xq * qf).sum(axis=0) / s, None
     if down_quant is not None:
         x_bar = down_quant(x_bar)
     h_new = hl.reshape(n, D).astype(jnp.float32) + scale * qf * (
@@ -670,7 +681,8 @@ def _survivor_bar(num, cnt):
 
 def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int,
                  down=None, survivor=False, wire_x=None, wire_scales=None,
-                 wire_chunk=None, xbar_tx=None):
+                 wire_chunk=None, xbar_tx=None, robust=None):
+    from repro.kernels import compress as _compress
     from repro.kernels import uplink  # lazy: keep dist importable w/o pallas
 
     def _msum(counts):
@@ -687,7 +699,21 @@ def _pallas_comm(xw, hw, slot, band, m: int, s: int, scale, block: int,
             xin, slot, band, m, s, counts=counts, block=block
         )
 
-    if survivor:
+    if robust is not None:
+        # robust stats run on DEQUANTIZED values (§13 rule): int-wire
+        # codes expand through the shared dequant before the kernel;
+        # narrow float lanes just cast — order statistics are per value,
+        # so there is no in-tile accumulation to keep quantized
+        if wire_scales is not None:
+            xin = _compress.wire_dequant(wire_x, wire_scales, wire_chunk)
+        else:
+            xin = xw if wire_x is None else wire_x.astype(jnp.float32)
+        x_bar, rcnt = uplink.robust_sum(
+            xin, slot, band, m, s, kind=robust[0], k=robust[1],
+            block=block,
+        )
+        covered = (rcnt > 0) if survivor else None
+    elif survivor:
         num, cnt = _msum(True)
         # survivor rebuild AFTER dequantization: PR 6 semantics unchanged
         x_bar, covered = _survivor_bar(num, cnt)
@@ -782,6 +808,7 @@ def _shard_comm(
     wire: Optional[str] = None,  # wire policy; None/"f32" = f32 lanes
     wire_seed=None,  # uint32 round seed for the stochastic draws
     wire_down: bool = False,  # quantize the DownCom broadcast too
+    robust: Optional[Tuple[str, int]] = None,  # normalized robust spec
 ) -> Tuple[Any, Any]:
     """The shard-resident comm step: one ``shard_map`` over the dp axes.
 
@@ -795,7 +822,18 @@ def _shard_comm(
     body comment), and ``h_update`` + the DownCom broadcast run per shard
     on local rows.  No ``(n, d)``-sized collective appears at any point
     (HLO-regression-tested); the client axis is padded to the dp extent
-    with idle rows when it does not divide."""
+    with idle rows when it does not divide.
+
+    ``robust`` (a normalized ``robust.normalize_robust`` spec) switches
+    the UpCom from the 1/s (or survivor) partial-sum rebuild to a
+    per-coordinate robust combine.  Order statistics do not decompose
+    over shards, so the partial-sum psum is replaced by an
+    ``(s, d_local)``-bounded owner-value exchange: each shard gathers
+    the owner rows it hosts into the stack (zeros elsewhere), ONE psum
+    of the stack assembles all ``s`` owner values per coordinate on
+    every shard — bounded by ``s``, never ``(n, d)`` — and the combine
+    runs in jnp per shard (kernel grouping is disabled for robust
+    leaves; the HLO regression test pins the collective bound)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.dist import sharding as _shr
@@ -1014,7 +1052,11 @@ def _shard_comm(
         # combiner can still merge the all-reduces on real backends.
         out_x: List[Any] = [None] * len(xs)
         out_h: List[Any] = [None] * len(xs)
-        covered = [i for i in range(len(xs)) if kernels and not tall[i]]
+        # robust leaves always take the jnp owner-value exchange: the
+        # kernel masked_sum psums a PARTIAL sum, but order statistics
+        # need the full owner stack on every shard
+        covered = [i for i in range(len(xs))
+                   if robust is None and kernels and not tall[i]]
         rest = [i for i in range(len(xs)) if i not in covered]
         if covered:
             from repro.kernels import uplink
@@ -1093,7 +1135,35 @@ def _shard_comm(
                 for j, i in enumerate(idxs):
                     out_x[i], out_h[i] = xs_un[j], hs_un[j]
         for i in rest:
-            if survivor:
+            if robust is not None:
+                # the (s, d_local)-bounded owner-value exchange: owner
+                # columns derive from the band ((t - band) mod m owns
+                # coordinate k at shift t — the inverse of the shared
+                # (slot + band) mod m < s predicate), each shard fills
+                # the stack rows whose owner it hosts, and ONE psum of
+                # the (s, d_local) stack replicates all owner values —
+                # never an (n, d)-sized collective
+                xf = xqs[i]
+                if tall[i]:
+                    kk = (jnp.asarray(np.arange(gD[i], dtype=np.int32))
+                          if coords[i] is None else coords[i])
+                    colz = jnp.stack(
+                        [kk + t * gD[i] for t in range(s)])
+                else:
+                    bd = _leaf_band(i, coords[i])
+                    colz = jnp.stack([(t - bd) % m for t in range(s)])
+                own = cof[colz]  # (s, d_local) global owner row
+                okm = (jnp.ones(colz.shape, bool) if cok is None
+                       else cok[colz])
+                loc = (own >= row0) & (own < row0 + rows) & okm
+                rr = jnp.clip(own - row0, 0, rows - 1)
+                stack = jnp.where(
+                    loc, jnp.take_along_axis(xf, rr, axis=0), 0.0)
+                stack = _psum(stack)
+                x_bar, rcnt = _robust.robust_combine_stack(
+                    stack, okm, *robust)
+                cov = (rcnt > 0) if survivor else None
+            elif survivor:
                 num, cnt = local_partial(i, counts=True)
                 x_bar, cov = _survivor_bar(_psum(num), _psum(cnt))
             else:
@@ -1152,6 +1222,7 @@ def cyclic_comm(
     wire: Optional[str] = None,
     wire_seed=None,
     wire_down: bool = False,
+    robust: Optional[Tuple[str, int]] = None,
 ) -> Tuple[Any, Any]:
     """masked_psum UpCom + h-update + DownCom for the cyclic template.
 
@@ -1176,6 +1247,14 @@ def cyclic_comm(
     DownCom broadcast.  All four impls quantize the same (row, coord)
     payload with the same counter-hash draw, so they agree to float-sum
     reordering exactly as on the f32 path.
+
+    ``robust`` replaces the arrived-owner mean with a per-coordinate
+    robust combine over the owner-value stack (DESIGN.md §15): pass the
+    normalized ``robust.normalize_robust(kind, k, s)`` spec — ``None``
+    (mean, or trimmed with k=0) runs the existing paths verbatim,
+    bitwise.  Robust stats are computed on DEQUANTIZED wire values and
+    compose with ``arrived``/``correct`` (uncovered coordinates still
+    pass through untouched) and ``down``.
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     faulted = arrived is not None
@@ -1190,6 +1269,7 @@ def cyclic_comm(
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
             down=down, faulted=faulted, survivor=survivor,
             wire=wire, wire_seed=wire_seed, wire_down=wire_down,
+            robust=robust,
         )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
@@ -1206,9 +1286,14 @@ def cyclic_comm(
     if impl == "ws":
         client_of = None
         col_ok = None
-        if not meshed:
+        if not meshed or robust is not None:
             # column -> client row of this round (idle writes land in the
-            # dropped overflow slot; every column has exactly one owner)
+            # dropped overflow slot; every column has exactly one owner).
+            # Robust combines need the owner-value STACK even when the
+            # client axis is meshed: the psum-shaped partial sum cannot
+            # express an order statistic, so the gather form applies
+            # (GSPMD pays gather collectives here; the HLO-gated meshed
+            # placement is the shard engine, not this path).
             client_of = (
                 jnp.zeros((c + 1,), jnp.int32)
                 .at[jnp.where(slot >= 0, slot, c)]
@@ -1239,7 +1324,41 @@ def cyclic_comm(
             else:
                 owned = _wrapped_lt(sl - jnp.asarray(band)[None, :], c, s)
             owned = owned & (sl >= 0)
-            if meshed:
+            if robust is not None:
+                if not faulted and not tall:
+                    # gather-free owner stack: the cyclic owner column
+                    # (s k + t) mod c only depends on k mod c, so stack
+                    # row t is a constant-mask select chain over the
+                    # slot-ordered rows xq[client_of] — all elementwise,
+                    # so the whole combine stays one parallelizable
+                    # fusion (an elementwise consumer of the (s, D)
+                    # take_along_axis form drags the per-element gather
+                    # into a serial loop body and costs ~3x the mean
+                    # step at production widths)
+                    xs = xq[client_of]  # (c, D) row permutation
+                    resid = np.arange(D, dtype=np.int64) % c
+                    masks = [resid == r for r in range(c)]
+                    stack = []
+                    for t in range(s):
+                        y = xs[(s * (c - 1) + t) % c]
+                        for r in range(c - 2, -1, -1):
+                            y = jnp.where(
+                                jnp.asarray(masks[r]),
+                                xs[(s * r + t) % c], y)
+                        stack.append(y)
+                    vals = jnp.stack(stack)
+                    ok = None
+                else:
+                    # robust combine over the (s, D) owner-row gather
+                    # stack (same gathers the mean path reads; tall
+                    # leaves use their explicit owner-column table)
+                    rows = client_of[jnp.asarray(cols)]
+                    vals = jnp.take_along_axis(xq, rows, axis=0)
+                    ok = col_ok[jnp.asarray(cols)] if faulted else None
+                x_bar, rcnt = _robust.robust_combine_stack(
+                    vals, ok, *robust)
+                cov = (rcnt > 0) if survivor else None
+            elif meshed:
                 # client axis sharded across devices: the owner rows live
                 # on other shards, so a gather would all-gather (n, D) --
                 # keep the psum shape (a d-sized all-reduce, the minimum)
@@ -1289,6 +1408,7 @@ def cyclic_comm(
             quant=_leaf_quant(kinds[i], wseed, i, dims[i]),
             down_quant=(_down_quant(kinds[i], wseed, i, dims[i])
                         if wdown else None),
+            robust=robust,
         )
 
     if covered:
@@ -1322,7 +1442,7 @@ def cyclic_comm(
             _, h_new_ws, x_new_ws = _pallas_comm(
                 xw, hw, slot, band, c, s, scale, block, down=down,
                 survivor=survivor, wire_x=wx, wire_scales=wsc,
-                wire_chunk=wcc, xbar_tx=tx,
+                wire_chunk=wcc, xbar_tx=tx, robust=robust,
             )
             xs = unpack(x_new_ws, spec)
             hs = unpack(h_new_ws, hspec)
@@ -1357,6 +1477,7 @@ def blocked_comm(
     wire: Optional[str] = None,
     wire_seed=None,
     wire_down: bool = False,
+    robust: Optional[Tuple[str, int]] = None,
 ) -> Tuple[Any, Any]:
     """block_rs UpCom + h-update + DownCom for the blocked template.
 
@@ -1385,7 +1506,8 @@ def blocked_comm(
     the true reduce-scatter decomposition of the blocked uplink.
 
     ``wire``/``wire_seed``/``wire_down``: the quantized wire (§13); see
-    ``cyclic_comm``.
+    ``cyclic_comm``.  ``robust``: the normalized robust-combiner spec
+    (§15); see ``cyclic_comm``.
     """
     impl = effective_impl(impl, meshed=meshed, mesh=mesh)
     off = jnp.asarray(off, jnp.int32)
@@ -1416,6 +1538,7 @@ def blocked_comm(
             pspecs=pspecs, block=block, use_kernels=shard_kernels,
             down=down, faulted=faulted, survivor=survivor,
             wire=wire, wire_seed=wire_seed, wire_down=wire_down,
+            robust=robust,
         )
     xflat, treedef = jax.tree.flatten(x)
     hflat = jax.tree.leaves(h)
@@ -1434,6 +1557,7 @@ def blocked_comm(
                 quant=_leaf_quant(kinds[i], wseed, i, dims[i]),
                 down_quant=(_down_quant(kinds[i], wseed, i, dims[i])
                             if wdown else None),
+                robust=robust,
             )
             for i, (xl, hl) in enumerate(zip(xflat, hflat))
         ]
@@ -1473,7 +1597,7 @@ def blocked_comm(
             _, h_new_ws, x_new_ws = _pallas_comm(
                 xw, hw, slot, band, m, s, scale, block, down=down,
                 survivor=survivor, wire_x=wx, wire_scales=wsc,
-                wire_chunk=wcc, xbar_tx=tx,
+                wire_chunk=wcc, xbar_tx=tx, robust=robust,
             )
             xs = unpack(x_new_ws, spec)
             hs = unpack(h_new_ws, hspec)
@@ -1488,9 +1612,11 @@ def blocked_comm(
     # + the fused h-update, leaf by leaf
     client_of = None
     col_ok = None
-    if not meshed:
+    if not meshed or robust is not None:
         # block-slot -> owner client row (idle writes land in the dropped
-        # overflow slot; cohort slots are a permutation of [0, m))
+        # overflow slot; cohort slots are a permutation of [0, m)).
+        # Robust combines need the owner-value stack even when meshed —
+        # see cyclic_comm.
         client_of = (
             jnp.zeros((m + 1,), jnp.int32)
             .at[jnp.where(slot >= 0, slot, m)]
@@ -1522,7 +1648,33 @@ def blocked_comm(
         own_nb = _wrapped_owned(sl, jb, m, s)
         owned = jnp.repeat(own_nb, chunk, axis=1)[:, :D]
         cov = None
-        if meshed:
+        if robust is not None:
+            # robust combine over the s contiguous shift-gathers: stack
+            # the per-shift owner rows (the same whole-chunk reads the
+            # mean path accumulates) instead of summing them
+            jf = jnp.arange(nf, dtype=jnp.int32)
+            xm = xq[:, :nf * chunk].reshape(n, nf, chunk)
+            vals_l, ok_l = [], []
+            for t in range(s):
+                cf = (t - jf) % m
+                v = xm[client_of[cf], jf].reshape(-1)
+                okv = (col_ok[cf] if faulted
+                       else jnp.ones((nf,), bool))
+                okv = jnp.repeat(okv, chunk)
+                if tail:
+                    ct = (t - nf) % m
+                    v = jnp.concatenate(
+                        [v, xq[client_of[ct], nf * chunk:]])
+                    okt = (col_ok[ct] if faulted else jnp.bool_(True))
+                    okv = jnp.concatenate(
+                        [okv, jnp.broadcast_to(okt, (tail,))])
+                vals_l.append(v)
+                ok_l.append(okv)
+            x_bar, rcnt = _robust.robust_combine_stack(
+                jnp.stack(vals_l), jnp.stack(ok_l), *robust)
+            if survivor:
+                cov = rcnt > 0
+        elif meshed:
             # sharded client axis: keep the d-sized all-reduce shape (see
             # cyclic_comm); the predicate fuses into the partial sum
             num = jnp.where(owned, xq, 0.0).sum(axis=0)

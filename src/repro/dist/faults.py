@@ -43,10 +43,17 @@ __all__ = [
     "EmpiricalDelays",
     "nonfinite_clients",
     "corrupt_rows",
+    "adversarial_rows",
     "CORRUPT_MODES",
+    "ADVERSARIES",
 ]
 
 CORRUPT_MODES = ("nan", "inf", "blowup")
+
+# Byzantine behaviours: unlike corruption (accidental, per-round draws),
+# adversaries are a *persistent* set of f_byz * n clients whose uplinks
+# arrive finite and plausible-looking every round they participate
+ADVERSARIES = ("none", "sign_flip", "scale", "inlier")
 
 # SeedSequence stream tags: disjoint from cohort.py's (53, 59, 211) so a
 # shared seed never correlates availability with faults
@@ -55,6 +62,7 @@ _TAG_CORRUPT = 103
 _TAG_DELAY = 107
 _TAG_BASE = 109
 _TAG_EMPIRICAL = 113
+_TAG_BYZ = 127
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +85,16 @@ class FaultModel:
                      replayable.  ``delays`` are in simulated seconds;
                      the ``deadline`` round policy admits uplinks under
                      its cutoff.
+    ``adversary``    Byzantine behaviour of a *persistent* ``f_byz``
+                     fraction of the fleet (DESIGN.md §15): "sign_flip"
+                     negates the payload, "scale" multiplies it by
+                     ``byz_scale``, "inlier" is the collusive ALIE-style
+                     attack — adversaries agree on ``honest_mean -
+                     byz_z * honest_std`` per coordinate, small enough
+                     to pass any magnitude guard while dragging the
+                     mean.  All finite: only the robust combiners
+                     (and, for large ``byz_scale``, the adaptive
+                     magnitude guard) catch them.
     """
 
     p_drop: float = 0.0
@@ -87,6 +105,10 @@ class FaultModel:
     delay_sigma: float = 0.2
     straggler_frac: float = 0.0
     straggler_scale: float = 10.0
+    adversary: str = "none"
+    f_byz: float = 0.0
+    byz_scale: float = -10.0
+    byz_z: float = 1.5
 
     def __post_init__(self):
         if not (0.0 <= self.p_drop <= 1.0):
@@ -98,6 +120,20 @@ class FaultModel:
                 f"unknown corrupt_mode {self.corrupt_mode!r}; want one of "
                 f"{CORRUPT_MODES}"
             )
+        if self.adversary not in ADVERSARIES:
+            raise ValueError(
+                f"unknown adversary {self.adversary!r}; want one of "
+                f"{ADVERSARIES}"
+            )
+        if not (0.0 <= self.f_byz < 1.0):
+            raise ValueError(f"f_byz={self.f_byz} outside [0, 1)")
+        if self.f_byz > 0.0 and self.adversary == "none":
+            raise ValueError("f_byz > 0 needs an adversary model")
+
+    @property
+    def adversarial(self) -> bool:
+        """Whether a Byzantine set actually exists under this model."""
+        return self.adversary != "none" and self.f_byz > 0.0
 
 
 class FaultPlan:
@@ -140,7 +176,26 @@ class FaultPlan:
     def is_zero(self) -> bool:
         m = self.model
         return (m.p_drop == 0.0 and m.p_corrupt == 0.0
-                and m.straggler_frac == 0.0)
+                and m.straggler_frac == 0.0 and not m.adversarial)
+
+    @property
+    def byzantine(self) -> np.ndarray:
+        """(n,) bool: the persistent Byzantine set — the first
+        ``round(f_byz * n)`` clients of a seeded permutation, a function
+        of the seed alone (an adversary stays an adversary across rounds
+        and checkpoint restores)."""
+        m = self.model
+        mask = np.zeros(self.n, bool)
+        if not m.adversarial:
+            return mask
+        k = int(round(m.f_byz * self.n))
+        if k == 0:
+            return mask
+        perm = np.random.default_rng(
+            np.random.SeedSequence([self.seed, _TAG_BYZ])
+        ).permutation(self.n)
+        mask[perm[:k]] = True
+        return mask
 
     def _rng(self, tag: int, rnd: int, attempt: int):
         return np.random.default_rng(
@@ -274,5 +329,43 @@ def corrupt_rows(tree: Any, mask, mode: str = "nan", blowup: float = 1e8):
             jnp.nan if mode == "nan" else jnp.inf, jnp.float32
         ).astype(a.dtype)
         return jnp.where(m, val, a)
+
+    return jax.tree.map(leaf, tree)
+
+
+def adversarial_rows(tree: Any, byz, honest, mode: str,
+                     byz_scale: float = -10.0, byz_z: float = 1.5):
+    """Inject Byzantine payloads into the ``byz`` client rows (what an
+    adversarial uplink looks like to the server).  ``honest`` masks the
+    rows the "inlier" attack colludes against (member & arrived & ~byz):
+    adversaries agree on ``mean(honest) - byz_z * std(honest)`` per
+    coordinate — finite, magnitude-plausible, invisible to any norm
+    guard, designed to drag the plain mean (the ALIE construction).
+    ``sign_flip`` negates, ``scale`` multiplies by ``byz_scale``.  Rows
+    outside ``byz`` pass through bit-exactly; pure jnp, jit/shard-safe.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if mode not in ADVERSARIES or mode == "none":
+        raise ValueError(f"unknown adversary mode {mode!r}")
+    byz = jnp.asarray(byz).astype(bool)
+    honest = jnp.asarray(honest).astype(bool) & ~byz
+
+    def leaf(a):
+        m = byz.reshape((a.shape[0],) + (1,) * (a.ndim - 1))
+        f = a.astype(jnp.float32)
+        if mode == "sign_flip":
+            v = -f
+        elif mode == "scale":
+            v = f * byz_scale
+        else:  # inlier: collude on honest_mean - z * honest_std
+            hm = honest.reshape(m.shape)
+            cnt = jnp.maximum(hm.sum(), 1).astype(jnp.float32)
+            mu = jnp.where(hm, f, 0.0).sum(axis=0, keepdims=True) / cnt
+            var = jnp.where(hm, (f - mu) ** 2, 0.0).sum(
+                axis=0, keepdims=True) / cnt
+            v = jnp.broadcast_to(mu - byz_z * jnp.sqrt(var), f.shape)
+        return jnp.where(m, v.astype(a.dtype), a)
 
     return jax.tree.map(leaf, tree)

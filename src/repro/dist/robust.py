@@ -1,0 +1,490 @@
+"""Byzantine-robust aggregation: per-coordinate robust combiners,
+adaptive payload guards, and reputation-driven quarantine (DESIGN.md §15).
+
+PR 6's survivor-aware aggregation handles *crash*-style faults: dropped
+uplinks demote to idle slots and nonfinite payloads are zeroed by the
+guard.  A *finite* adversarial uplink (sign-flip, scaling, collusive
+inliers, or a ``blowup`` row when ``guard_max_abs`` is unset) passes both
+and poisons every coordinate that client owns.  TAMUNA's sparse uplink
+gives each coordinate exactly ``s`` arrived-owner values, so coordinate-
+wise robust statistics are well-posed over the same ``(s, d)`` owner
+stacks ``comm_ws`` already materializes.  This module is the shared
+substrate:
+
+``normalize_robust``
+    config normalization with a hard bitwise contract: ``mean`` and
+    ``trimmed`` with ``k == 0`` normalize to ``None`` — the comm impls
+    take ``robust=None`` to mean "run the existing mean path verbatim"
+    (a sort-based k=0 trim would reassociate the float reduction), so
+    the robust feature at its identity settings is bitwise-invisible.
+
+``robust_combine_stack``
+    the one combiner every impl calls: coordinate-wise trimmed mean /
+    median over a stacked candidate axis with a validity mask —
+    non-arrived entries sort to ``+inf`` past the per-coordinate count,
+    trimmed means are prefix-sum windows (O(m log m), no host sync),
+    medians average the two middle order statistics.  Works on the
+    ``(s, D)`` owner-gather stacks (ws), the ``(n, D)`` masked dense
+    stacks, and the shard engine's psum'd ``(s, d_local)`` exchange.
+
+``magnitude_outliers`` / ``payload_norms`` / ``masked_median``
+    the adaptive magnitude guard: per-client payload L2 norms, flagged
+    above ``median + nu * 1.4826 * MAD`` of the arrived members (with a
+    relative floor so a zero-MAD fleet never flags itself).  Replaces
+    the static ``guard_max_abs`` threshold nobody sets correctly —
+    a 1e8-scaled row is ~1e8 fleet medians away regardless of scale.
+
+``anomaly_scores`` + ``Reputation``
+    the feedback loop: per-client distance to the coordinate-wise robust
+    aggregate (normalized by the cohort's median distance, so honest
+    clients score ~1), ridden through the device trace buffers into a
+    host-side EWMA reputation that emits escalating
+    ``CohortPlan.quarantine`` windows.  ``state_dict`` round-trips the
+    EWMA/strike state so restored checkpoints replay the identical
+    quarantine schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ROBUST_AGGS",
+    "normalize_robust",
+    "robust_combine_stack",
+    "payload_norms",
+    "masked_median",
+    "magnitude_outliers",
+    "anomaly_scores",
+    "recenter_h",
+    "Reputation",
+]
+
+ROBUST_AGGS = ("mean", "trimmed", "median")
+
+# MAD -> sigma consistency constant for a normal population; the guard's
+# threshold is med + nu * _MAD_SIGMA * MAD
+_MAD_SIGMA = 1.4826
+
+
+def normalize_robust(kind: str, k: int, s: int
+                     ) -> Optional[Tuple[str, int]]:
+    """Validate and normalize a robust-combiner spec to what the comm
+    impls consume: ``None`` (run the untouched mean path — bitwise
+    identity) or ``("trimmed", k)`` / ``("median", 0)``.
+
+    ``k`` values trimmed per *side*; TAMUNA guarantees at most ``s``
+    owner values per coordinate, so ``2 k < s`` keeps at least one
+    untrimmed value even at full arrival.
+    """
+    if kind not in ROBUST_AGGS:
+        raise ValueError(
+            f"unknown robust_agg {kind!r}; want one of {ROBUST_AGGS}")
+    k = int(k)
+    if k < 0:
+        raise ValueError(f"trim_k={k} must be >= 0")
+    if kind == "mean":
+        if k:
+            raise ValueError("robust_agg='mean' takes no trim_k")
+        return None
+    if kind == "median":
+        if k:
+            raise ValueError("robust_agg='median' takes no trim_k")
+        return ("median", 0)
+    if 2 * k >= int(s):
+        raise ValueError(
+            f"trimmed combiner needs 2*trim_k < s (k={k}, s={s}): "
+            f"trimming would discard every owner value")
+    if k == 0:
+        return None  # bitwise-mean contract (see module docstring)
+    return ("trimmed", k)
+
+
+def _oem_pairs(m: int):
+    """Batcher odd-even mergesort compare-exchange schedule for ``m``
+    lanes (O(m log^2 m) exchanges, each a vectorized min/max)."""
+    pairs = []
+    p = 1
+    while p < m:
+        k = p
+        while k >= 1:
+            for j in range(k % p, m - k, 2 * k):
+                for i in range(min(k, m - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return pairs
+
+
+# above this stack height the generic XLA sort wins over the unrolled
+# network (comm stacks are s- or n-sized, well below it)
+_NETWORK_MAX = 32
+
+
+def _sort_stack(v):
+    """Sort ``v`` along axis 0: an unrolled min/max sorting network for
+    small stacks (XLA's variadic sort is ~20x slower on the short-axis
+    (m, D) shapes the comm paths produce — the network fuses into plain
+    elementwise code), the generic sort beyond ``_NETWORK_MAX``."""
+    import jax.numpy as jnp
+
+    m = v.shape[0]
+    if m > _NETWORK_MAX:
+        return jnp.sort(v, axis=0)
+    rows = [v[i] for i in range(m)]
+    for a, b in _oem_pairs(m):
+        lo = jnp.minimum(rows[a], rows[b])
+        rows[b] = jnp.maximum(rows[a], rows[b])
+        rows[a] = lo
+    return jnp.stack(rows, axis=0)
+
+
+def robust_combine_stack(vals, ok, kind: str, k: int):
+    """Coordinate-wise robust combine over a stacked candidate axis.
+
+    ``vals``  (m, ...) candidate values, axis 0 the stack.
+    ``ok``    bool, broadcastable to ``vals``: which entries are real
+              (arrived owner values); the rest are ignored.  ``None``
+              declares every entry valid STATICALLY — the window indices
+              become Python constants and the whole combine collapses to
+              the sorting network plus one add chain (the fault-free
+              uplink path; an all-true array keeps the dynamic-count
+              machinery and costs ~3x more in per-op dispatch).
+    Returns ``(x_bar, cnt)``: the combined value per coordinate (0 where
+    ``cnt == 0`` — callers gate on coverage exactly like the survivor
+    mean) and the int32 valid count.
+
+    Invalid entries sort to ``+inf`` past ``cnt``; the trimmed mean sums
+    the order-statistic window ``[k_eff, cnt - k_eff)`` with ``k_eff =
+    min(k, (cnt-1)//2)`` so partially-arrived coordinates degrade to
+    shallower trims instead of empty windows; the median averages the
+    two middle order statistics (exact for odd counts).  Everything is
+    masked elementwise over the sorted stack — no gathers — so the whole
+    combine fuses into one elementwise pass after the sorting network.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if kind not in ("trimmed", "median"):
+        raise ValueError(f"robust_combine_stack kind {kind!r}")
+    vals = jnp.asarray(vals)
+    m = vals.shape[0]
+    zero = jnp.zeros((), vals.dtype)
+    pinf = jnp.asarray(jnp.inf, vals.dtype)
+    small = m <= _NETWORK_MAX
+    if ok is None:
+        # static full-stack window: cnt == m everywhere, so lo/hi are
+        # Python ints and the masked-window/extreme-count machinery
+        # drops out entirely — sort (network for small m) + add the
+        # kept rows in ascending order (matching the dynamic path's
+        # accumulation order bit for bit)
+        if kind == "median":
+            lo, hi = (m - 1) // 2, m // 2
+        else:
+            k_eff = min(max(k, 0), (m - 1) // 2)
+            lo, hi = k_eff, m - k_eff - 1
+        cnt = jnp.full(vals.shape[1:], m, jnp.int32)
+        den = jnp.asarray(hi - lo + 1, vals.dtype)
+        if small:
+            srows = [vals[i] for i in range(m)]
+            for a, b in _oem_pairs(m):
+                sa = jnp.minimum(srows[a], srows[b])
+                srows[b] = jnp.maximum(srows[a], srows[b])
+                srows[a] = sa
+            # the opaque window mask is load-bearing: with the window
+            # visible as a constant, the simplifier folds the sum into
+            # plain adds, the combine becomes pure elementwise, and the
+            # CPU emitter then re-computes it inside EVERY consumer
+            # fusion of the comm step (both (n, d) update fusions —
+            # ~2.3x the mean step).  Hidden behind the barrier the
+            # window sum stays a real reduce thunk whose output the
+            # consumers read once, and the robust step prices like the
+            # mean step.
+            win = jax.lax.optimization_barrier(
+                jnp.asarray([lo <= i <= hi for i in range(m)]).reshape(
+                    (m,) + (1,) * (vals.ndim - 1)))
+            num = jnp.where(win, jnp.stack(srows), zero).sum(axis=0)
+        else:
+            num = jnp.sort(vals, axis=0)[lo:hi + 1].sum(axis=0)
+        return num / den, cnt
+    ok = jnp.broadcast_to(jnp.asarray(ok, bool), vals.shape)
+    # XLA's axis-0 reductions (min/max/sort, and bool sums) lower to
+    # scalarized loops on short stacked shapes — unrolled per-row chains
+    # of vectorized ops are ~5x faster, so every small-m path below
+    # works on the row list, never a stacked (m, D) temporary
+    vrows = [vals[i] for i in range(m)] if small else None
+    orows = [ok[i] for i in range(m)] if small else None
+    if small:
+        cnt = orows[0].astype(jnp.int32)
+        for o in orows[1:]:
+            cnt = cnt + o.astype(jnp.int32)
+    else:
+        cnt = ok.sum(axis=0).astype(jnp.int32)
+    if small and (kind == "trimmed" and k == 1
+                  or kind == "median" and m <= 4):
+        # sort-free fast path: the k=1 trimmed window is "drop one min
+        # and one max" at every cnt (k_eff = 0 below cnt 3), and the
+        # median coincides with it for stacks of <= 4 (the two middles
+        # at cnt 4, the middle at 3, the full mean at 1-2).  Summing
+        # the total and subtracting the extremes would cancel
+        # catastrophically against a blowup-scale outlier (the honest
+        # mass vanishes below the outlier's ulp), so instead the sum
+        # covers only the STRICT middle (mn < v < mx) and the surplus
+        # extreme multiplicities are added back exactly — no term ever
+        # cancels, so any admitted magnitude (up to +-inf) combines as
+        # exactly as the sorted path.
+        mn = jnp.where(orows[0], vrows[0], pinf)
+        mx = jnp.where(orows[0], vrows[0], -pinf)
+        for v_, o_ in zip(vrows[1:], orows[1:]):
+            mn = jnp.minimum(mn, jnp.where(o_, v_, pinf))
+            mx = jnp.maximum(mx, jnp.where(o_, v_, -pinf))
+        c_mn = jnp.zeros((), jnp.int32)
+        c_mx = jnp.zeros((), jnp.int32)
+        mid = zero
+        for v_, o_ in zip(vrows, orows):
+            c_mn = c_mn + (o_ & (v_ == mn)).astype(jnp.int32)
+            c_mx = c_mx + (o_ & (v_ == mx)).astype(jnp.int32)
+            mid = mid + jnp.where(o_ & (v_ > mn) & (v_ < mx), v_, zero)
+        trim = (cnt >= 3).astype(jnp.int32)
+        # 0 * inf guards: only multiply an extreme by a nonzero count
+        keep_mn = c_mn - trim
+        keep_mx = c_mx - trim
+        ext = (jnp.where(keep_mn > 0, keep_mn.astype(vals.dtype) * mn,
+                         zero)
+               + jnp.where(keep_mx > 0, keep_mx.astype(vals.dtype) * mx,
+                           zero))
+        # all ok entries equal (mn == mx): both counts saw every entry
+        num = jnp.where(mn == mx,
+                        jnp.where(cnt - 2 * trim > 0,
+                                  (cnt - 2 * trim).astype(vals.dtype)
+                                  * mn, zero),
+                        mid + ext)
+        den = jnp.maximum(cnt - 2 * trim, 1).astype(vals.dtype)
+        return jnp.where(cnt > 0, num / den, zero), cnt
+    safe = jnp.maximum(cnt, 1)
+    if kind == "median":
+        # the median is the order-statistic window [(cnt-1)//2, cnt//2]
+        # — one entry at odd counts, the two middles at even counts —
+        # so it shares the single masked window-sum with the trimmed
+        # path (window < cnt wherever cnt > 0, so the +inf tail never
+        # lands in a kept lane)
+        lo, hi = (safe - 1) // 2, safe // 2
+    else:
+        k_eff = jnp.clip(jnp.minimum(k, (cnt - 1) // 2), 0)
+        lo, hi = k_eff, cnt - k_eff - 1
+    if small:
+        srows = [jnp.where(o_, v_, pinf) for v_, o_ in zip(vrows, orows)]
+        for a, b in _oem_pairs(m):
+            sa = jnp.minimum(srows[a], srows[b])
+            srows[b] = jnp.maximum(srows[a], srows[b])
+            srows[a] = sa
+        num = zero
+        for i, r in enumerate(srows):  # row index is static: the window
+            num = num + jnp.where((lo <= i) & (i <= hi), r, zero)
+    else:
+        v = jnp.sort(jnp.where(ok, vals, pinf), axis=0)
+        idx = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 0)
+        num = jnp.where((idx >= lo[None]) & (idx <= hi[None]),
+                        v, zero).sum(axis=0)
+    den = jnp.maximum(hi - lo + 1, 1).astype(vals.dtype)
+    return jnp.where(cnt > 0, num / den, zero), cnt
+
+
+# --------------------------------------------------------------------------
+# adaptive magnitude guard
+# --------------------------------------------------------------------------
+
+
+def payload_norms(tree):
+    """(n,) f32 per-client payload L2 norms over all leaves.  Nonfinite
+    entries count as 1e30 so a NaN/Inf row lands at the top of the norm
+    order (the nonfinite guard flags it anyway; this keeps the median/
+    MAD statistics of the *other* rows meaningful)."""
+    import jax
+    import jax.numpy as jnp
+
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    tot = jnp.zeros((n,), jnp.float32)
+    for a in leaves:
+        f = a.astype(jnp.float32).reshape(n, -1)
+        f = jnp.where(jnp.isfinite(f), f, 1e30)
+        tot = tot + (f * f).sum(axis=1)
+    return jnp.sqrt(tot)
+
+
+def masked_median(v, mask):
+    """Median of ``v`` over ``mask`` entries (0.0 when none)."""
+    import jax.numpy as jnp
+
+    v = jnp.asarray(v)
+    mask = jnp.asarray(mask, bool)
+    sv = jnp.sort(jnp.where(mask, v, jnp.asarray(jnp.inf, v.dtype)))
+    cnt = mask.sum()
+    safe = jnp.maximum(cnt, 1)
+    med = 0.5 * (sv[(safe - 1) // 2] + sv[safe // 2])
+    return jnp.where(cnt > 0, med, jnp.zeros((), v.dtype))
+
+
+def magnitude_outliers(tree, mask, nu: float = 6.0):
+    """(n,) bool adaptive magnitude guard: ``mask``'ed clients whose
+    payload norm exceeds ``median + nu * 1.4826 * MAD`` of the masked
+    norms, with a 5%-of-median floor on the band so a near-deterministic
+    fleet (MAD ~ 0) never flags honest jitter.  Scale-free: catches the
+    finite ``blowup`` rows the static ``guard_max_abs`` threshold misses
+    whenever nobody tuned it (faults.py's admitted gap)."""
+    import jax.numpy as jnp
+
+    mask = jnp.asarray(mask, bool)
+    norms = payload_norms(tree)
+    med = masked_median(norms, mask)
+    mad = masked_median(jnp.abs(norms - med), mask)
+    band = jnp.maximum(nu * _MAD_SIGMA * mad, 0.05 * med)
+    return mask & (norms > med + band)
+
+
+# --------------------------------------------------------------------------
+# anomaly scores + EWMA reputation -> quarantine windows
+# --------------------------------------------------------------------------
+
+
+def anomaly_scores(tree, mask):
+    """(n,) f32 per-client anomaly: L2 distance of the client's payload
+    to the coordinate-wise median of the ``mask``'ed rows, normalized by
+    the masked median distance (honest clients score ~1, a sign-flipped
+    or shifted row scores far above).  0 outside ``mask``; nonfinite
+    payload entries are treated as 0 (the nonfinite guard already flags
+    those rows — their distance should not poison the center).
+
+    The denominator is floored at 5% of the center-payload norm: once
+    the fleet reaches consensus the median distance collapses toward 0,
+    and a bare ``dist / med`` z-score would flag any honest client with
+    a slightly stale control variate as an extreme outlier (scores grow
+    without bound as the honest spread shrinks).  The floor keeps the
+    score scale-free while the updates are heterogeneous (``med``
+    dominates early) but pins "anomalous" to *payload-scale* deviation
+    at consensus — a sign-flipped row still sits O(2 ||center||) away
+    and scores ~40, while consensus-phase honest jitter scores << 1."""
+    import jax
+    import jax.numpy as jnp
+
+    mask = jnp.asarray(mask, bool)
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    d2 = jnp.zeros((n,), jnp.float32)
+    c2 = jnp.zeros((), jnp.float32)
+    for a in leaves:
+        f = a.astype(jnp.float32).reshape(n, -1)
+        f = jnp.where(jnp.isfinite(f), f, 0.0)
+        center, _ = robust_combine_stack(f, mask[:, None], "median", 0)
+        d2 = d2 + ((f - center[None, :]) ** 2).sum(axis=1)
+        c2 = c2 + (center * center).sum()
+    dist = jnp.sqrt(d2)
+    med = masked_median(dist, mask)
+    floor = 0.05 * jnp.sqrt(c2)
+    return jnp.where(mask, dist / (jnp.maximum(med, floor) + 1e-12), 0.0)
+
+
+def recenter_h(h_tree, active):
+    """Project the control variates back onto the zero-sum subspace over
+    the ``active`` clients: ``h_i <- h_i - mean_active(h)`` for active
+    rows, quarantined/inactive rows untouched.
+
+    TAMUNA's convergence to the population optimizer rides on the
+    invariant ``sum_i h_i = 0`` — with the *mean* combiner the comm
+    step's h update preserves it exactly (the update directions
+    ``x_bar - x_i`` sum to zero by construction).  A robust combiner
+    breaks that identity: whenever the trimmed/median aggregate differs
+    from the arrived mean (any round where clients still disagree), the
+    h updates acquire a common-mode component, the invariant drifts, and
+    the loop converges to a *biased* consensus point — the drift freezes
+    once the fleet agrees, so the bias is permanent, not transient.
+    Re-centering after each robust round continuously repairs the
+    invariant over the clients that still participate; at the fixed
+    point (consensus) it is a no-op.  Server-side: needs the per-client
+    h table, which the simulated engine and the §10 shard engine both
+    hold."""
+    import jax
+    import jax.numpy as jnp
+
+    active = jnp.asarray(active, bool)
+    cnt = jnp.maximum(active.sum(), 1)
+
+    def fix(a):
+        am = active.reshape((-1,) + (1,) * (a.ndim - 1))
+        mean = jnp.where(am, a, 0).sum(axis=0, keepdims=True) / cnt.astype(
+            a.dtype if jnp.issubdtype(a.dtype, jnp.floating) else jnp.float32
+        )
+        return jnp.where(am, a - mean.astype(a.dtype), a)
+
+    return jax.tree.map(fix, h_tree)
+
+
+class Reputation:
+    """Host-side EWMA reputation over per-round anomaly scores, emitting
+    escalating quarantine windows.
+
+    ``update(anomaly, arrived)`` folds a round's (n,) anomaly row into
+    per-client EWMAs (only arrived clients move — a quarantined or
+    dropped client's reputation neither decays nor grows) and returns
+    ``[(client, window_rounds), ...]`` for every client whose EWMA
+    crossed ``threshold``: window = ``base_rounds * 2**strikes`` (capped
+    at ``2**max_doublings``), the strike counter increments, and the
+    EWMA resets so the client re-earns its way back after the window.
+
+    Pure host state, deterministic in the update sequence; ``state_dict``
+    / ``from_state_dict`` round-trip everything, so a restored checkpoint
+    fed the identical trace replay emits the identical windows.
+    """
+
+    def __init__(self, n: int, *, alpha: float = 0.5,
+                 threshold: float = 3.0, base_rounds: int = 4,
+                 max_doublings: int = 6):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha={alpha} outside (0, 1]")
+        if threshold <= 1.0:
+            raise ValueError(
+                f"threshold={threshold} <= 1: honest clients score ~1")
+        self.n = int(n)
+        self.alpha = float(alpha)
+        self.threshold = float(threshold)
+        self.base_rounds = int(base_rounds)
+        self.max_doublings = int(max_doublings)
+        self.scores = np.zeros(self.n, np.float64)
+        self.strikes = np.zeros(self.n, np.int64)
+
+    def update(self, anomaly, arrived):
+        an = np.asarray(anomaly, np.float64)
+        arr = np.asarray(arrived, bool)
+        a = self.alpha
+        self.scores[arr] = (1.0 - a) * self.scores[arr] + a * an[arr]
+        out = []
+        for i in np.nonzero(arr & (self.scores > self.threshold))[0]:
+            w = self.base_rounds * (
+                2 ** min(int(self.strikes[i]), self.max_doublings))
+            self.strikes[i] += 1
+            self.scores[i] = 0.0
+            out.append((int(i), int(w)))
+        return out
+
+    def state_dict(self) -> dict:
+        return {
+            "n": self.n, "alpha": self.alpha,
+            "threshold": self.threshold,
+            "base_rounds": self.base_rounds,
+            "max_doublings": self.max_doublings,
+            "scores": self.scores.tolist(),
+            "strikes": self.strikes.tolist(),
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "Reputation":
+        rep = cls(d["n"], alpha=d["alpha"], threshold=d["threshold"],
+                  base_rounds=d["base_rounds"],
+                  max_doublings=d["max_doublings"])
+        rep.scores = np.asarray(d["scores"], np.float64).copy()
+        rep.strikes = np.asarray(d["strikes"], np.int64).copy()
+        return rep

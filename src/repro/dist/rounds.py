@@ -162,7 +162,8 @@ def comm_round_key(base: jax.Array, rnd) -> jax.Array:
 
 
 def _zero_traces(flush_every: int, robust_n: int = 0,
-                 coverage: bool = False) -> Dict[str, jax.Array]:
+                 coverage: bool = False,
+                 anomaly: bool = False) -> Dict[str, jax.Array]:
     traces = {
         "loss_sum": jnp.zeros((flush_every,), jnp.float32),
         "steps": jnp.zeros((flush_every,), jnp.int32),
@@ -180,6 +181,12 @@ def _zero_traces(flush_every: int, robust_n: int = 0,
             # left uncovered (no arrived owner) — the staleness/quality
             # signal of the pipelined driver (DESIGN.md §14)
             traces["uncovered"] = jnp.zeros((flush_every,), jnp.int32)
+        if anomaly:
+            # per-client distance-to-robust-aggregate scores
+            # (robust.anomaly_scores) feeding the EWMA reputation that
+            # drives escalating quarantine windows (DESIGN.md §15)
+            traces["anomaly"] = jnp.zeros((flush_every, robust_n),
+                                          jnp.float32)
     return traces
 
 
@@ -257,10 +264,13 @@ def make_round_fn(
     comm = tamuna_dp.make_comm_step(cfg, tcfg, mesh, n=n)
 
     def chunk_fn(B: int, carry: RoundCarry, data, do_comm, slot,
-                 cohort, down, arrived=None, corrupt=None, *,
+                 cohort, down, arrived=None, corrupt=None, byz=None, *,
                  correct: bool = True, guard: bool = False,
+                 guard_mode: str = "nonfinite",
                  corrupt_mode: str = "nan", blowup: float = 1e8,
-                 guard_max_abs: Optional[float] = None) -> RoundCarry:
+                 guard_max_abs: Optional[float] = None,
+                 adversary: str = "none", byz_scale: float = -10.0,
+                 byz_z: float = 1.5) -> RoundCarry:
         state, t, dk, ck, traces = carry
         if elastic:
             if cohort is None:
@@ -297,14 +307,17 @@ def make_round_fn(
             state = jax.lax.cond(do_comm, with_comm, lambda st: st, state)
             new_traces = None
         else:
-            # the fault-tolerant comm branch (DESIGN.md §12): corruption
-            # is injected into the would-be uplink payload, the payload
-            # guard demotes nonfinite members to non-arrived (and zeroes
-            # their rows so leftover garbage can't reach a later loss),
-            # and the comm step aggregates survivors only
+            # the fault-tolerant comm branch (DESIGN.md §12/§15):
+            # corruption and adversarial payloads are injected into the
+            # would-be uplink, the payload guard demotes nonfinite (and,
+            # in adaptive mode, magnitude-outlier) members to non-arrived
+            # (and zeroes their rows so leftover garbage can't reach a
+            # later loss), and the comm step aggregates survivors only
             from repro.dist import faults as faults_mod
+            from repro.dist import robust as robust_mod
 
             member = jnp.zeros((n,), bool).at[cohort].set(True)
+            want_anom = "anomaly" in traces
 
             def with_comm(st):
                 ckey = comm_round_key(ck, st.round)
@@ -314,10 +327,21 @@ def make_round_fn(
                         stx.x, corrupt, corrupt_mode, blowup
                     ))
                 arr = arrived & member
+                if byz is not None:
+                    # Byzantine rows only matter if they arrive; the
+                    # inlier attack colludes against the arrived honest
+                    stx = stx._replace(x=faults_mod.adversarial_rows(
+                        stx.x, byz & arr, arr & ~byz, adversary,
+                        byz_scale=byz_scale, byz_z=byz_z,
+                    ))
                 if guard:
                     bad = faults_mod.nonfinite_clients(
                         stx.x, guard_max_abs
                     ) & member
+                    if guard_mode == "adaptive":
+                        bad = bad | (robust_mod.magnitude_outliers(
+                            stx.x, arr & ~bad
+                        ) & member)
                     arr = arr & ~bad
                     stx = stx._replace(x=jax.tree.map(
                         lambda a: jnp.where(
@@ -328,14 +352,17 @@ def make_round_fn(
                     ))
                 else:
                     bad = jnp.zeros((n,), bool)
+                anom = (robust_mod.anomaly_scores(stx.x, arr)
+                        if want_anom else jnp.zeros((n,), jnp.float32))
                 st2 = comm(stx, jax.random.key_data(ckey), cohort=cohort,
                            down=down, arrived=arr, correct=correct)
-                return st2, arr.sum().astype(jnp.int32), bad
+                return st2, arr.sum().astype(jnp.int32), bad, anom
 
             def no_comm(st):
-                return st, jnp.int32(0), jnp.zeros((n,), bool)
+                return (st, jnp.int32(0), jnp.zeros((n,), bool),
+                        jnp.zeros((n,), jnp.float32))
 
-            state, arr_cnt, badm = jax.lax.cond(
+            state, arr_cnt, badm, anom = jax.lax.cond(
                 do_comm, with_comm, no_comm, state
             )
             new_traces = {
@@ -345,6 +372,10 @@ def make_round_fn(
                 ),
                 "bad": traces["bad"].at[slot].set(badm),
             }
+            if want_anom:
+                new_traces["anomaly"] = traces["anomaly"].at[slot].set(
+                    anom
+                )
         out_traces = {
             "loss_sum": traces["loss_sum"].at[slot].add(loss_sum),
             "steps": traces["steps"].at[slot].add(B),
@@ -371,20 +402,26 @@ def make_round_fn(
                     partial(chunk_fn, B), donate_argnums=(0,)
                 )
             else:
-                correct, guard, mode, blowup, gmax = fkey
+                (correct, guard, gmode, mode, blowup, gmax,
+                 adversary, bscale, bz) = fkey
                 cache[key] = jax.jit(
                     partial(chunk_fn, B, correct=correct, guard=guard,
-                            corrupt_mode=mode, blowup=blowup,
-                            guard_max_abs=gmax),
+                            guard_mode=gmode, corrupt_mode=mode,
+                            blowup=blowup, guard_max_abs=gmax,
+                            adversary=adversary, byz_scale=bscale,
+                            byz_z=bz),
                     donate_argnums=(0,),
                 )
         return cache[key]
 
     def round_fn(carry: RoundCarry, data, L: int, slot,
                  cohort=None, down=None, arrived=None, corrupt=None,
-                 correct: bool = True, guard: bool = False,
+                 byz=None, correct: bool = True, guard: bool = False,
+                 guard_mode: str = "nonfinite",
                  corrupt_mode: str = "nan", blowup: float = 1e8,
-                 guard_max_abs: Optional[float] = None) -> RoundCarry:
+                 guard_max_abs: Optional[float] = None,
+                 adversary: str = "none", byz_scale: float = -10.0,
+                 byz_z: float = 1.5) -> RoundCarry:
         chunks = round_chunks(L, max_L)
         slot = jnp.asarray(slot, jnp.int32)
         with_plan = cohort is not None
@@ -407,16 +444,20 @@ def make_round_fn(
         if not with_plan:
             raise ValueError("fault injection needs an explicit cohort "
                              "(resolve it host-side, see run_rounds)")
-        fkey = (bool(correct), bool(guard), str(corrupt_mode),
-                float(blowup),
-                None if guard_max_abs is None else float(guard_max_abs))
+        fkey = (bool(correct), bool(guard), str(guard_mode),
+                str(corrupt_mode), float(blowup),
+                None if guard_max_abs is None else float(guard_max_abs),
+                str(adversary), float(byz_scale), float(byz_z))
         arrived = jnp.asarray(arrived).astype(bool)
         if corrupt is not None:
             corrupt = jnp.asarray(corrupt).astype(bool)
+        if byz is not None:
+            byz = jnp.asarray(byz).astype(bool)
         for i, B in enumerate(chunks):
             do_comm = jnp.asarray(i == len(chunks) - 1)
             carry = program(B, with_plan, fkey)(
-                carry, data, do_comm, slot, cohort, down, arrived, corrupt
+                carry, data, do_comm, slot, cohort, down, arrived,
+                corrupt, byz
             )
         return carry
 
@@ -491,6 +532,7 @@ def init_carry(
     flush_every: int,
     robust_n: int = 0,
     coverage: bool = False,
+    anomaly: bool = False,
 ) -> RoundCarry:
     kd, kc = jax.random.split(_as_key(key))
     return RoundCarry(
@@ -498,7 +540,7 @@ def init_carry(
         t=jnp.zeros((), jnp.int32),
         data_key=jax.random.key_data(kd),
         comm_key=jax.random.key_data(kc),
-        traces=_zero_traces(flush_every, robust_n, coverage),
+        traces=_zero_traces(flush_every, robust_n, coverage, anomaly),
     )
 
 
@@ -573,6 +615,8 @@ def run_rounds(
     quarantine_rounds: int = 0,
     guard: Optional[bool] = None,
     guard_max_abs: Optional[float] = None,
+    guard_mode: Optional[str] = None,
+    reputation=None,
 ) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
     """Multi-round driver: geometric ``L`` per round (host ``rng``), fused
     rounds on device, metrics drained every ``flush_every`` rounds.
@@ -612,12 +656,26 @@ def run_rounds(
       deadline  admit only members whose drawn latency is ``<= deadline``
                 (and that didn't drop); survivor-aware aggregation.
 
-    ``guard`` (default: on iff the fault model corrupts payloads) enables
-    the nonfinite payload guard: corrupted members are demoted to
-    non-arrived before aggregation and, when ``quarantine_rounds > 0`` and
-    a ``plan`` is given, quarantined from selection for that many rounds
-    starting at detection + 2 (the next round's cohort is already
-    committed as this round's DownCom target).
+    ``guard`` (default: on iff the fault model corrupts payloads or
+    carries a Byzantine adversary) enables the payload guard: flagged
+    members are demoted to non-arrived before aggregation and, when
+    ``quarantine_rounds > 0`` and a ``plan`` is given, quarantined from
+    selection for that many rounds starting at detection + 2 (the next
+    round's cohort is already committed as this round's DownCom target).
+    ``guard_mode`` picks the detector: ``"nonfinite"`` (NaN/Inf rows
+    only) or ``"adaptive"`` (nonfinite plus the median + k·MAD payload
+    norm outlier band of ``robust.magnitude_outliers``).  The default is
+    adaptive whenever the fault model can emit FINITE garbage that the
+    nonfinite check waves through — ``corrupt_mode="blowup"`` with no
+    ``guard_max_abs``, or any adversary model (DESIGN.md §15).
+
+    ``reputation`` (``True`` or a ``robust.Reputation``; needs ``plan``
+    and ``faults``) turns on the anomaly feedback loop: each round's
+    per-client distance-to-robust-aggregate scores
+    (``robust.anomaly_scores``, traced on device) feed an EWMA; clients
+    whose EWMA crosses the threshold are quarantined for escalating
+    windows (``base_rounds * 2**strikes``).  Pass a ``Reputation``
+    restored via ``from_state_dict`` to resume the schedule bit-exactly.
     """
     # never sample past the engine's bucket cap: round_fn silently clamps
     # executed steps to its own max_L, so a larger caller cap would desync
@@ -635,8 +693,24 @@ def run_rounds(
     if policy not in ROUND_POLICIES:
         raise ValueError(f"unknown policy {policy!r}; pick from "
                          f"{ROUND_POLICIES}")
+    adversarial = faults is not None and faults.model.adversarial
     if guard is None:
-        guard = faults is not None and faults.model.p_corrupt > 0
+        guard = faults is not None and (faults.model.p_corrupt > 0
+                                        or adversarial)
+    if guard_mode is None:
+        # ISSUE 9 fix: the nonfinite check admits FINITE corruption —
+        # blowup rows (1e8-scaled, faults.py corrupt_rows) and
+        # adversarial payloads pass it whenever guard_max_abs is unset,
+        # so those models default to the adaptive magnitude guard
+        guard_mode = ("adaptive" if bool(guard) and guard_max_abs is None
+                      and faults is not None
+                      and (adversarial
+                           or (faults.model.p_corrupt > 0
+                               and faults.model.corrupt_mode == "blowup"))
+                      else "nonfinite")
+    if guard_mode not in ("nonfinite", "adaptive"):
+        raise ValueError(f"unknown guard_mode {guard_mode!r}; pick "
+                         "'nonfinite' or 'adaptive'")
     faulted = faults is not None and (
         not faults.is_zero or policy != "wait_all"
         or quarantine_rounds > 0 or bool(guard)
@@ -654,10 +728,41 @@ def run_rounds(
         if faults.n != n:
             raise ValueError(f"fault plan covers {faults.n} clients, "
                              f"round_fn has n={n}")
+    if plan is not None and getattr(plan, "weighted", False):
+        import warnings
+
+        # known bias, documented in DESIGN.md §11: aggregation never
+        # reweights by 1/(n p_i), so non-uniform selection pulls the
+        # fixed point toward frequently-sampled clients (full fix is a
+        # future PR — this warning pins the gap)
+        warnings.warn(
+            "CohortPlan has non-uniform selection weights but run_rounds "
+            "aggregates without 1/(n p_i) importance reweighting; the "
+            "fixed point is biased toward frequently-sampled clients "
+            "(DESIGN.md §11)",
+            UserWarning, stacklevel=2,
+        )
+    rep = None
+    if reputation is not None and reputation is not False:
+        if plan is None or faults is None or not faulted:
+            raise ValueError("reputation feedback needs a CohortPlan and "
+                             "a fault plan")
+        from repro.dist import robust as robust_mod
+
+        rep = (reputation
+               if isinstance(reputation, robust_mod.Reputation)
+               else robust_mod.Reputation(n))
+        if rep.n != n:
+            raise ValueError(f"reputation covers {rep.n} clients, "
+                             f"round_fn has n={n}")
 
     start_round = int(state.round) if (plan is not None or faulted) else 0
-    carry = init_carry(state, key, flush_every, robust_n=n if faulted else 0)
+    carry = init_carry(state, key, flush_every,
+                       robust_n=n if faulted else 0,
+                       anomaly=rep is not None)
     q = quorum if quorum is not None else (c // 2 + 1 if c else None)
+    byz_mask = (jnp.asarray(faults.byzantine) if faulted and adversarial
+                else None)
 
     if faulted and plan is None:
         # replay the engine's on-device uniform cohorts host-side so the
@@ -697,11 +802,16 @@ def run_rounds(
                 arrived=jnp.asarray(res["arrived"]),
                 corrupt=(jnp.asarray(res["corrupt"])
                          if faults.model.p_corrupt > 0 else None),
+                byz=byz_mask,
                 correct=(policy != "wait_all"),
                 guard=bool(guard),
+                guard_mode=guard_mode,
                 corrupt_mode=faults.model.corrupt_mode,
                 blowup=faults.model.blowup,
                 guard_max_abs=guard_max_abs,
+                adversary=faults.model.adversary,
+                byz_scale=faults.model.byz_scale,
+                byz_z=faults.model.byz_z,
             )
             fmeta.append({
                 "retries": res["retries"],
@@ -721,6 +831,23 @@ def run_rounds(
                 if bad.any():
                     ids = np.where(bad)[0]
                     plan.quarantine(ids, g + 2, g + 1 + quarantine_rounds)
+                    for k in [k for k in resolve.cache if k >= g + 2]:
+                        del resolve.cache[k]
+            if rep is not None:
+                # same timing constraint as the guard feedback: the EWMA
+                # verdict must land before round g+2's cohort resolves
+                anom = np.asarray(
+                    jax.device_get(carry.traces["anomaly"][slot])
+                )
+                badr = np.asarray(
+                    jax.device_get(carry.traces["bad"][slot])
+                )
+                # guard-demoted rows were zeroed on device — their score
+                # is a meaningless 0, so keep them out of the EWMA
+                wins = rep.update(anom, res["arrived"] & ~badr)
+                if wins:
+                    for cid, w in wins:
+                        plan.quarantine([cid], g + 2, g + 1 + w)
                     for k in [k for k in resolve.cache if k >= g + 2]:
                         del resolve.cache[k]
         elif plan is not None:
@@ -753,12 +880,15 @@ def run_rounds(
                         "corrupted": int(tr["corrupted"][i]),
                         **fmeta[i],
                     })
+                    if rep is not None:
+                        last["anomaly_max"] = float(tr["anomaly"][i].max())
                 if logger is not None:
                     logger.log(gr, last)
             pending = []
             fmeta = []
             carry = carry._replace(
-                traces=_zero_traces(flush_every, n if faulted else 0)
+                traces=_zero_traces(flush_every, n if faulted else 0,
+                                    anomaly=rep is not None)
             )
         if (checkpoint_dir and checkpoint_every
                 and (r + 1) % checkpoint_every == 0):
@@ -860,10 +990,13 @@ def make_pipelined_round_fn(
         return RoundCarry(state, t, dk, ck, traces), loss + ls
 
     def commit_fn(carry: RoundCarry, compact, loss, steps, slot, cohort,
-                  down, arrived=None, corrupt=None, *,
+                  down, arrived=None, corrupt=None, byz=None, *,
                   correct: bool = True, guard: bool = False,
+                  guard_mode: str = "nonfinite",
                   corrupt_mode: str = "nan", blowup: float = 1e8,
-                  guard_max_abs: Optional[float] = None) -> RoundCarry:
+                  guard_max_abs: Optional[float] = None,
+                  adversary: str = "none", byz_scale: float = -10.0,
+                  byz_z: float = 1.5) -> RoundCarry:
         state, t, dk, ck, traces = carry
         if elastic:
             state = tamuna_dp.scatter_cohort(state, compact, cohort)
@@ -877,6 +1010,7 @@ def make_pipelined_round_fn(
             new_traces = None
         else:
             from repro.dist import faults as faults_mod
+            from repro.dist import robust as robust_mod
 
             member = jnp.zeros((n,), bool).at[cohort].set(True)
             stx = state
@@ -885,10 +1019,19 @@ def make_pipelined_round_fn(
                     stx.x, corrupt, corrupt_mode, blowup
                 ))
             arr = arrived & member
+            if byz is not None:
+                stx = stx._replace(x=faults_mod.adversarial_rows(
+                    stx.x, byz & arr, arr & ~byz, adversary,
+                    byz_scale=byz_scale, byz_z=byz_z,
+                ))
             if guard:
                 bad = faults_mod.nonfinite_clients(
                     stx.x, guard_max_abs
                 ) & member
+                if guard_mode == "adaptive":
+                    bad = bad | (robust_mod.magnitude_outliers(
+                        stx.x, arr & ~bad
+                    ) & member)
                 arr = arr & ~bad
                 stx = stx._replace(x=jax.tree.map(
                     lambda a: jnp.where(
@@ -961,11 +1104,14 @@ def make_pipelined_round_fn(
             if fkey is None:
                 cache[key] = jax.jit(commit_fn, donate_argnums=(0,))
             else:
-                correct, guard, mode, blowup, gmax = fkey
+                (correct, guard, gmode, mode, blowup, gmax,
+                 adversary, bscale, bz) = fkey
                 cache[key] = jax.jit(
                     partial(commit_fn, correct=correct, guard=guard,
-                            corrupt_mode=mode, blowup=blowup,
-                            guard_max_abs=gmax),
+                            guard_mode=gmode, corrupt_mode=mode,
+                            blowup=blowup, guard_max_abs=gmax,
+                            adversary=adversary, byz_scale=bscale,
+                            byz_z=bz),
                     donate_argnums=(0,),
                 )
         return cache[key]
@@ -990,10 +1136,13 @@ def make_pipelined_round_fn(
         return carry, {"compact": None, "loss": loss, "steps": sum(chunks)}
 
     def commit(carry: RoundCarry, buf, slot, cohort=None, down=None,
-               arrived=None, corrupt=None, correct: bool = True,
-               guard: bool = False, corrupt_mode: str = "nan",
-               blowup: float = 1e8,
-               guard_max_abs: Optional[float] = None) -> RoundCarry:
+               arrived=None, corrupt=None, byz=None,
+               correct: bool = True,
+               guard: bool = False, guard_mode: str = "nonfinite",
+               corrupt_mode: str = "nan", blowup: float = 1e8,
+               guard_max_abs: Optional[float] = None,
+               adversary: str = "none", byz_scale: float = -10.0,
+               byz_z: float = 1.5) -> RoundCarry:
         slot = jnp.asarray(slot, jnp.int32)
         steps = jnp.asarray(buf["steps"], jnp.int32)
         if elastic and cohort is None:
@@ -1012,15 +1161,18 @@ def make_pipelined_round_fn(
         if cohort is None:
             raise ValueError("fault-tolerant commit needs an explicit "
                              "cohort (resolve it host-side)")
-        fkey = (bool(correct), bool(guard), str(corrupt_mode),
-                float(blowup),
-                None if guard_max_abs is None else float(guard_max_abs))
+        fkey = (bool(correct), bool(guard), str(guard_mode),
+                str(corrupt_mode), float(blowup),
+                None if guard_max_abs is None else float(guard_max_abs),
+                str(adversary), float(byz_scale), float(byz_z))
         arrived = jnp.asarray(arrived).astype(bool)
         if corrupt is not None:
             corrupt = jnp.asarray(corrupt).astype(bool)
+        if byz is not None:
+            byz = jnp.asarray(byz).astype(bool)
         return commit_prog(fkey)(
             carry, buf["compact"], buf["loss"], steps, slot, cohort, down,
-            arrived, corrupt,
+            arrived, corrupt, byz,
         )
 
     return types.SimpleNamespace(
@@ -1094,6 +1246,7 @@ def run_rounds_pipelined(
     deadline: Optional[float] = None,
     guard: Optional[bool] = None,
     guard_max_abs: Optional[float] = None,
+    guard_mode: Optional[str] = None,
     resume: bool = False,
 ) -> Tuple[tamuna_dp.DistTamunaState, Dict[str, Any]]:
     """Pipelined multi-round driver: overlap local compute with
@@ -1189,8 +1342,23 @@ def run_rounds_pipelined(
                 f"staleness {tau} needs c*(tau+1) <= n "
                 f"(got c={c}, n={n}): in-flight cohorts must be disjoint"
             )
+    adversarial = faults is not None and faults.model.adversarial
     if guard is None:
-        guard = faults is not None and faults.model.p_corrupt > 0
+        guard = faults is not None and (faults.model.p_corrupt > 0
+                                        or adversarial)
+    if guard_mode is None:
+        # same ISSUE 9 default as run_rounds: finite corruption needs
+        # the adaptive magnitude guard, not just the nonfinite check
+        guard_mode = ("adaptive" if bool(guard) and guard_max_abs is None
+                      and faults is not None
+                      and (adversarial
+                           or (faults.model.p_corrupt > 0
+                               and faults.model.corrupt_mode == "blowup"))
+                      else "nonfinite")
+    if guard_mode not in ("nonfinite", "adaptive"):
+        raise ValueError(f"unknown guard_mode {guard_mode!r}; pick "
+                         "'nonfinite' or 'adaptive'")
+    byz_mask = jnp.asarray(faults.byzantine) if adversarial else None
     if faults is not None and faults.n != n:
         raise ValueError(f"fault plan covers {faults.n} clients, "
                          f"engine has n={n}")
@@ -1348,9 +1516,14 @@ def run_rounds_pipelined(
                 arrived=res["arrived"],
                 corrupt=(res["corrupt"]
                          if faults.model.p_corrupt > 0 else None),
+                byz=byz_mask,
                 correct=(policy != "wait_all"), guard=bool(guard),
+                guard_mode=guard_mode,
                 corrupt_mode=faults.model.corrupt_mode,
                 blowup=faults.model.blowup, guard_max_abs=guard_max_abs,
+                adversary=faults.model.adversary,
+                byz_scale=faults.model.byz_scale,
+                byz_z=faults.model.byz_z,
             )
             meta.update(
                 retries=res["retries"], backoff_s=res["backoff"],
@@ -1387,12 +1560,20 @@ def run_rounds_pipelined(
                 corrupt=(faults.corrupts(g, 0) & member
                          if faults is not None
                          and faults.model.p_corrupt > 0 else None),
+                byz=byz_mask,
                 correct=(policy != "wait_all"), guard=bool(guard),
+                guard_mode=guard_mode,
                 corrupt_mode=(faults.model.corrupt_mode
                               if faults is not None else "nan"),
                 blowup=(faults.model.blowup
                         if faults is not None else 1e8),
                 guard_max_abs=guard_max_abs,
+                adversary=(faults.model.adversary
+                           if faults is not None else "none"),
+                byz_scale=(faults.model.byz_scale
+                           if faults is not None else -10.0),
+                byz_z=(faults.model.byz_z
+                       if faults is not None else 1.5),
             )
             meta.update(
                 retries=0, backoff_s=0.0,

@@ -46,7 +46,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import masks, theory
-from repro.dist import comm_ws, model_api, sharding, wire
+from repro.dist import comm_ws, model_api, robust as _robust, \
+    sharding, wire
 from repro.models.transformer import ModelConfig
 from repro.optim import optimizers
 
@@ -81,6 +82,10 @@ class DistTamunaConfig:
     #   "f32" | "bf16" | "f16" | "int8" | "int4" — "f32" is bitwise the
     #   unquantized path, "auto" resolves per leaf size
     wire_down: bool = False  # also quantize the DownCom broadcast (§13)
+    robust_agg: str = "mean"  # per-coordinate combiner (§15): "mean" |
+    #   "trimmed" (trim_k per side) | "median" — "mean" (and trimmed at
+    #   k=0) is bitwise the existing arrived-owner-mean path
+    trim_k: int = 0  # values trimmed per side under robust_agg="trimmed"
 
     def __post_init__(self):
         if not (2 <= self.s <= self.c):
@@ -109,6 +114,15 @@ class DistTamunaConfig:
                 "use_kernel fuses the paper's SGD rule; it does not apply "
                 f"to local_opt={self.local_opt!r}"
             )
+        # validates robust_agg/trim_k against s (raises on bad specs)
+        _robust.normalize_robust(self.robust_agg, self.trim_k, self.s)
+
+    def robust_(self):
+        """The normalized robust-combiner spec the comm impls consume:
+        ``None`` (bitwise mean path) or ``("trimmed", k)``/``("median",
+        0)`` — see ``repro.dist.robust.normalize_robust``."""
+        return _robust.normalize_robust(self.robust_agg, self.trim_k,
+                                        self.s)
 
     def eta_(self, n: int) -> float:
         """Control-variate stepsize: Remark 2's largest valid
@@ -460,6 +474,10 @@ def make_comm_step(
     # leaf_up_bytes at c=1 is one client's codes + (int kinds) its own
     # per-chunk scales; f32 resolves byte-identical to floats * 4.
     wire_active = wire.is_wire(tcfg.wire_precision)
+    # the robust-combiner spec bakes into the built fn (a static python
+    # tuple): mean/trimmed-k=0 normalize to None, so the default program
+    # is the untouched PR 6/7 lowering, bitwise
+    rspec = tcfg.robust_()
     kinds = tuple(
         wire.resolve_kind(D, tcfg.wire_precision) for D in dims
     )
@@ -536,6 +554,7 @@ def make_comm_step(
                 c=c, slot_of=slot_of, down=down, arrived=arrived,
                 correct=correct, wire=tcfg.wire_precision,
                 wire_seed=wire_seed_(key), wire_down=tcfg.wire_down,
+                robust=rspec,
             )
             up, upb = up_arrived(slot_of, arrived)
             out = bump(state, xb, hb, up, upb)
@@ -579,7 +598,7 @@ def make_comm_step(
             down=down, arrived=arrived, correct=correct,
             meshed=True, mesh=mesh, pspecs=stacked_specs,
             wire=tcfg.wire_precision, wire_seed=wire_seed_(key),
-            wire_down=tcfg.wire_down,
+            wire_down=tcfg.wire_down, robust=rspec,
         )
         up, upb = up_arrived(slot_of, arrived)
         out = bump(state, x_new, h_new, up, upb)

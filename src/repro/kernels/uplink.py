@@ -49,7 +49,7 @@ from repro.kernels.compress import (
     wire_dequant,
 )
 
-__all__ = ["masked_sum", "masked_sum_dequant", "h_update"]
+__all__ = ["masked_sum", "masked_sum_dequant", "robust_sum", "h_update"]
 
 
 def _masked_sum_kernel(slot_ref, band_ref, x_ref, o_ref, *, m: int, s: int):
@@ -101,6 +101,53 @@ def _masked_sum_dequant_counts_kernel(
     v = wire_dequant(codes_ref[...], scales_ref[...], chunk_ref[...])
     num_ref[...] = jnp.where(owned, v, 0.0).sum(axis=0)
     cnt_ref[...] = owned.astype(jnp.float32).sum(axis=0)
+
+
+def _robust_sum_kernel(
+    slot_ref, band_ref, x_ref, bar_ref, cnt_ref,
+    *, m: int, s: int, kind: str, k: int,
+):
+    # Byzantine-robust UpCom (DESIGN.md §15): per-coordinate trimmed
+    # mean / median over the arrived owner values, fused in-tile.  The
+    # owner stack is sorted by s passes of masked-min extraction
+    # (argmin-free: ties break by first row, one occurrence removed per
+    # pass) — s is small and static, so the per-tile cost is s
+    # client-axis reductions instead of a full sort network, and the
+    # loop unrolls into pure VPU selects.  Values past the arrived
+    # count never enter the combine.
+    owned = owned_from_band(
+        slot_ref[...][:, None], band_ref[...][None, :], m, s
+    )
+    x = x_ref[...].astype(jnp.float32)
+    cnt = owned.astype(jnp.int32).sum(axis=0)
+    big = jnp.asarray(jnp.inf, jnp.float32)
+    active = owned
+    order = []  # order[t] = t-th smallest arrived owner value (+inf past cnt)
+    for _ in range(s):
+        v = jnp.where(active, x, big)
+        mn = v.min(axis=0)
+        hit = (v == mn[None, :]) & active
+        first = (jnp.cumsum(hit.astype(jnp.int32), axis=0) == 1) & hit
+        active = active & ~first
+        order.append(mn)
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "median":
+        loi = jnp.maximum((cnt - 1) // 2, 0)
+        hii = cnt // 2
+        lo = hi = zero
+        for t, mn in enumerate(order):
+            lo = jnp.where(loi == t, mn, lo)
+            hi = jnp.where(hii == t, mn, hi)
+        bar = 0.5 * (lo + hi)  # lo == hi at odd counts: exact
+    else:  # trimmed
+        k_eff = jnp.clip(jnp.minimum(k, (cnt - 1) // 2), 0)
+        num = zero
+        for t, mn in enumerate(order):
+            use = (t >= k_eff) & (t < cnt - k_eff)
+            num = num + jnp.where(use, mn, zero)
+        bar = num / jnp.maximum(cnt - 2 * k_eff, 1).astype(jnp.float32)
+    bar_ref[...] = jnp.where(cnt > 0, bar, zero)
+    cnt_ref[...] = cnt.astype(jnp.float32)
 
 
 def _h_update_kernel(
@@ -250,6 +297,57 @@ def masked_sum_dequant(
         interpret=resolve_interpret(interpret),
     )(slot, band, chunk_ids, codes, scales)
     return out[:d] if pad else out
+
+
+def robust_sum(
+    x: jax.Array,  # (n, d) f32 (or float-wire) workspace
+    slot: jax.Array,  # (n,) int32; outside [0, m) -> contributes nothing
+    band: jax.Array,  # (d,) int32 per-coordinate owner band
+    m: int,
+    s: int,
+    *,
+    kind: str,  # "trimmed" | "median"
+    k: int = 0,  # values trimmed per side (trimmed only)
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Byzantine-robust UpCom: per-coordinate trimmed mean / median over
+    the arrived owner values, in-tile (the ``masked_sum(counts=True)``
+    robust sibling).  Returns ``(x_bar, cnt)`` — the already-combined
+    value (0 where no owner arrived; callers gate on ``cnt > 0`` exactly
+    like the survivor path, and do NOT divide) and the f32 arrived-owner
+    count.  Int-wire lanes must be dequantized before the call: robust
+    order statistics are defined on dequantized values (DESIGN.md §15).
+    """
+    if kind not in ("trimmed", "median"):
+        raise ValueError(f"robust_sum kind {kind!r}")
+    if not (0 <= 2 * int(k) < s):
+        if kind == "trimmed":
+            raise ValueError(f"robust_sum needs 0 <= 2k < s (k={k}, s={s})")
+    n, d = x.shape
+    blk = min(block, d)
+    pad = (-d) % blk
+    x = _pad_cols(x, pad)
+    band = jnp.pad(band, (0, pad)) if pad else band
+    in_specs = [
+        pl.BlockSpec((n,), lambda i: (0,)),
+        pl.BlockSpec((blk,), lambda i: (i,)),
+        pl.BlockSpec((n, blk), lambda i: (0, i)),
+    ]
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    bar, cnt = pl.pallas_call(
+        functools.partial(_robust_sum_kernel, m=m, s=s, kind=kind,
+                          k=int(k)),
+        grid=(x.shape[1] // blk,),
+        in_specs=in_specs,
+        out_specs=(vec, vec),
+        out_shape=(
+            jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[1],), jnp.float32),
+        ),
+        interpret=resolve_interpret(interpret),
+    )(slot, band, x)
+    return (bar[:d], cnt[:d]) if pad else (bar, cnt)
 
 
 def h_update(

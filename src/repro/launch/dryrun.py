@@ -32,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.dist import comm_ws, wire as wire_lib
+from repro.dist import comm_ws, robust as robust_lib, wire as wire_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 
@@ -139,6 +139,8 @@ def run_one(
     uplink: str = "masked_psum",
     comm_impl: str = "auto",
     wire_precision: str = "f32",
+    robust_agg: str = "mean",
+    trim_k: int = 0,
     out_dir: Optional[str] = None,
     verbose: bool = True,
 ) -> Dict[str, dict]:
@@ -147,7 +149,9 @@ def run_one(
     n_chips = int(np.prod(list(mesh.shape.values())))
     tcfg = steps_lib.default_tamuna_cfg(mesh, uplink=uplink,
                                         comm_impl=comm_impl,
-                                        wire_precision=wire_precision)
+                                        wire_precision=wire_precision,
+                                        robust_agg=robust_agg,
+                                        trim_k=trim_k)
     built = steps_lib.build(arch, shape_name, mesh, **(
         {"tcfg": tcfg} if registry.SHAPES[shape_name].kind == "train" else {}
     ))
@@ -207,6 +211,13 @@ def run_one(
             # actually ships, not just the policy name
             "wire": (
                 wire_summary(arch, shape_name, tcfg)
+                if step_name in ("comm", "round") else None
+            ),
+            # robust combiner over the s owner values (DESIGN.md §15):
+            # mean / trimmed-k / median; mean (and trimmed k=0) lowers
+            # the bitwise legacy aggregation
+            "robust": (
+                {"agg": tcfg.robust_agg, "trim_k": tcfg.trim_k}
                 if step_name in ("comm", "round") else None
             ),
             "compile_s": round(t1 - t0, 2),
@@ -277,6 +288,14 @@ def main(argv=None) -> int:
                     choices=list(wire_lib.WIRE_POLICIES),
                     help="UpCom payload width (DESIGN.md §13); the "
                          "artifact records the resolved per-leaf kinds")
+    ap.add_argument("--robust-agg", default="mean",
+                    choices=list(robust_lib.ROBUST_AGGS),
+                    help="per-coordinate combiner over the s owner "
+                         "values (DESIGN.md §15); the artifact records "
+                         "the lowered aggregation")
+    ap.add_argument("--trim-k", type=int, default=0,
+                    help="values trimmed per side for --robust-agg "
+                         "trimmed (needs 2k < s)")
     ap.add_argument("--out-dir", default="benchmarks/artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args(argv)
@@ -315,6 +334,7 @@ def main(argv=None) -> int:
                 run_one(a, s, mp, uplink=args.uplink,
                         comm_impl=args.comm_impl,
                         wire_precision=args.wire_precision,
+                        robust_agg=args.robust_agg, trim_k=args.trim_k,
                         out_dir=args.out_dir)
             except Exception:
                 traceback.print_exc()

@@ -76,6 +76,8 @@ def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
                        s: int = 4,
                        comm_impl: str = "auto",
                        wire_precision: str = "f32",
+                       robust_agg: str = "mean",
+                       trim_k: int = 0,
                        ) -> tamuna_dp.DistTamunaConfig:
     n = sharding.n_clients(mesh)
     # both uplinks run partial participation (the blocked bands lie over
@@ -86,6 +88,7 @@ def default_tamuna_cfg(mesh: Mesh, uplink: str = "masked_psum",
         gamma=0.02, c=c, s=min(s, c), p=0.25, uplink=uplink,
         microbatches=int(os.environ.get("REPRO_MICROBATCHES", "1")),
         comm_impl=comm_impl, wire_precision=wire_precision,
+        robust_agg=robust_agg, trim_k=trim_k,
     )
 
 

@@ -98,6 +98,28 @@ def main(argv=None) -> int:
     ap.add_argument("--quorum", type=int, default=0,
                     help="quorum size for --round-policy quorum "
                          "(0 = c//2 + 1)")
+    # literal list (= robust.ROBUST_AGGS): same no-early-jax rule as above
+    ap.add_argument("--robust-agg", default="mean",
+                    choices=["mean", "trimmed", "median"],
+                    help="per-coordinate combiner over the s arrived "
+                         "owner values (DESIGN.md §15): trimmed drops "
+                         "--trim-k per side, median takes the middle; "
+                         "mean (or trimmed with k=0) is the bitwise "
+                         "legacy path")
+    ap.add_argument("--trim-k", type=int, default=0,
+                    help="values trimmed per side for --robust-agg "
+                         "trimmed (needs 2k < sparsity)")
+    ap.add_argument("--adversary", default="none",
+                    choices=["none", "sign_flip", "scale", "inlier"],
+                    help="simulate a Byzantine fraction of clients "
+                         "(deterministic in --seed): sign-flipped, "
+                         "scaled, or collusive-inlier uplinks")
+    ap.add_argument("--f-byz", type=float, default=0.0,
+                    help="Byzantine client fraction for --adversary")
+    ap.add_argument("--reputation", action="store_true",
+                    help="EWMA anomaly reputation driving escalating "
+                         "quarantine windows (needs --adversary; fused "
+                         "synchronous driver only)")
     args = ap.parse_args(argv)
 
     n_dev = args.data_parallel * args.model_parallel
@@ -128,7 +150,14 @@ def main(argv=None) -> int:
         gamma=args.gamma, c=c, s=min(args.sparsity, c), p=args.p,
         uplink=args.uplink, comm_impl=args.comm_impl,
         wire_precision=args.wire_precision, wire_down=args.wire_down,
+        robust_agg=args.robust_agg, trim_k=args.trim_k,
     )
+    adversarial = args.adversary != "none" and args.f_byz > 0.0
+    if args.reputation and not adversarial:
+        ap.error("--reputation needs --adversary and --f-byz > 0")
+    if adversarial and (args.no_fuse or args.pipeline):
+        ap.error("--adversary runs on the fused synchronous driver "
+                 "(drop --no-fuse/--pipeline)")
 
     state = tamuna_dp.init_state(jax.random.key(args.seed), cfg, mesh,
                                  tcfg, n=n)
@@ -253,6 +282,20 @@ def main(argv=None) -> int:
             sample_batch=device_sampler(pipe.dcfg, cfg, mesh),
             max_L=args.max_L, n=n,
         )
+        fkw = {}
+        if adversarial:
+            from repro.dist import cohort as cohort_mod
+            from repro.dist import faults as faults_mod
+
+            fkw["faults"] = faults_mod.FaultPlan(
+                seed=args.seed, n=n,
+                model=faults_mod.FaultModel(
+                    adversary=args.adversary, f_byz=args.f_byz,
+                ),
+            )
+            if args.reputation:
+                fkw["plan"] = cohort_mod.CohortPlan(args.seed, n, tcfg.c)
+                fkw["reputation"] = True
         state, last = rounds.run_rounds(
             state,
             round_fn=round_fn,
@@ -265,6 +308,7 @@ def main(argv=None) -> int:
             logger=logger,
             checkpoint_dir=args.checkpoint_dir or None,
             checkpoint_every=args.checkpoint_every,
+            **fkw,
         )
         total_steps = last.get("local_steps", 0)
         final_loss = last.get("loss", float("nan"))

@@ -162,6 +162,38 @@ assert rc == 0
             f"--smoke must not overwrite the measured artifact {p}"
 
 
+def test_run_smoke_robust_emits_rows_and_preserves_artifacts(subproc):
+    guarded = [
+        os.path.join(REPO, "BENCH_robust.json"),
+        os.path.join(REPO, "benchmarks", "artifacts", "results.json"),
+    ]
+    before = {
+        p: os.path.getmtime(p) for p in guarded if os.path.exists(p)
+    }
+    out = subproc("""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import run
+rc = run.main(["--smoke", "--only", "robust"])
+assert rc == 0
+""", devices=1, timeout=1500)
+    # the fault-free baseline, each attack under plain mean (the stall
+    # control) and under both robust combiners, plus the overhead and
+    # acceptance summary rows
+    assert "robust/none/mean," in out, out[-2000:]
+    assert "robust/sign_flip/mean," in out, out[-2000:]
+    assert "robust/sign_flip/trimmed," in out, out[-2000:]
+    assert "robust/sign_flip/median," in out, out[-2000:]
+    assert "robust/blowup/trimmed," in out, out[-2000:]
+    assert "robust/comm_overhead_ratio," in out
+    assert "robust/acceptance," in out
+    assert "identity=True" in out
+    assert "replay=True" in out
+    for p, mtime in before.items():
+        assert os.path.getmtime(p) == mtime, \
+            f"--smoke must not overwrite the measured artifact {p}"
+
+
 def test_trajectory_emits_machine_readable_json(tmp_path):
     if REPO not in sys.path:
         sys.path.insert(0, REPO)

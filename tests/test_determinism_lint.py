@@ -1,0 +1,69 @@
+"""Static determinism lint over the simulated-engine sources (ISSUE 9
+satellite): every random draw in ``repro.dist`` / ``repro.core`` must be
+SeedSequence-keyed and every clock simulated — checkpoint-resume replays
+(fault schedules, cohort plans, reputation windows) depend on it.
+
+Flags, per source line:
+  * legacy global-state numpy RNG (``np.random.random`` etc. — anything
+    under ``np.random.`` other than ``default_rng`` / ``SeedSequence`` /
+    the ``Generator`` type),
+  * OS-entropy seeding (``default_rng()`` / ``SeedSequence()`` with no
+    arguments),
+  * the stdlib ``random`` module,
+  * wall clocks (``time.time`` / ``monotonic`` / ``perf_counter``,
+    ``datetime.now`` / ``utcnow``) — simulated time must come from the
+    delay models, never the host.
+
+An ``_ALLOW`` table exists for future deliberate exceptions (none today);
+additions need a justification comment here.
+"""
+
+import os
+import re
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src", "repro")
+_SCOPES = ("dist", "core")
+
+_RULES = (
+    ("unseeded-numpy-rng",
+     re.compile(r"np\.random\.(?!default_rng\b|SeedSequence\b|Generator\b)"
+                r"[A-Za-z_]+")),
+    ("os-entropy-default_rng", re.compile(r"default_rng\(\s*\)")),
+    ("os-entropy-seedsequence", re.compile(r"SeedSequence\(\s*\)")),
+    ("stdlib-random",
+     re.compile(r"^\s*(?:import random\b|from random import\b)")),
+    ("wall-clock",
+     re.compile(r"\btime\.(?:time|monotonic|perf_counter)\s*\(|"
+                r"\bdatetime\.(?:now|utcnow)\s*\(")),
+)
+
+# (relative path, rule name) pairs deliberately exempted — keep empty
+# unless a line is genuinely outside the simulated/replayed paths
+_ALLOW = frozenset()
+
+
+def test_dist_and_core_have_no_unseeded_randomness_or_wall_clock():
+    hits = []
+    for scope in _SCOPES:
+        root = os.path.join(SRC, scope)
+        assert os.path.isdir(root), root
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, SRC)
+                with open(path, encoding="utf-8") as f:
+                    for lineno, line in enumerate(f, 1):
+                        code = line.split("#", 1)[0]
+                        for rule, rx in _RULES:
+                            if rx.search(code) and (rel, rule) not in _ALLOW:
+                                hits.append(
+                                    f"{rel}:{lineno} [{rule}] "
+                                    f"{line.strip()}"
+                                )
+    assert not hits, (
+        "non-replayable randomness / wall-clock in simulated paths:\n"
+        + "\n".join(hits)
+    )

@@ -1,0 +1,760 @@
+"""Byzantine-robust aggregation (DESIGN.md §15).
+
+* ``normalize_robust`` contract: ``mean`` / ``trimmed k=0`` normalize to
+  ``None`` (the comm impls run the untouched mean path — bitwise
+  identity), invalid specs raise,
+* ``robust_combine_stack`` matches a per-coordinate numpy reference
+  (trimmed / median, ragged validity masks, cnt == 0 coords, shallow-trim
+  degradation when cnt < 2k+1),
+* trimmed / median reject adversarial rows the plain mean absorbs,
+* the adaptive magnitude guard flags finite blowup rows and nothing else;
+  anomaly scores separate a hostile row from the honest cluster,
+* ``Reputation``: escalating windows (base * 2**strikes, capped), EWMA
+  reset on strike, non-arrived clients frozen, and a JSON ``state_dict``
+  round-trip mid-stream replays the identical window schedule,
+* fault-model determinism: the Byzantine set and ``adversarial_rows``
+  are pure functions of the seed (honest rows pass through bit-exactly),
+* comm-impl equivalence: all four impls (dense reference, ws, pallas,
+  and the shard engine in both per-shard modes) agree under
+  ``robust=("trimmed", k)`` / ``("median", 0)`` with an adversarial
+  cohort member,
+* quarantine composition (ISSUE 9 satellite): overlapping / repeated
+  windows stack, cached draws inside a new window are purged, and the
+  soft floor keeps the exactly-``c`` invariant even when quarantine +
+  unavailability starve the healthy pool,
+* e2e (subproc): the satellite-1 regression — a finite ``blowup`` fault
+  with ``guard_max_abs`` unset is caught by the now-default adaptive
+  guard, while ``guard_mode="nonfinite"`` (the old default) admits the
+  rows and the run degenerates; weighted-plan bias warning; fresh-seed
+  replay determinism of the fault/reputation schedule; pipelined tau=0
+  bit-equivalence under adversaries + robust combiners,
+* HLO regression (subproc): the robust shard engine exchanges
+  ``(s, d_local)``-bounded owner-value stacks — no ``(n, d)`` collective
+  ever lowers (the non-meshed ws gather on a dp-sharded axis is the
+  positive control validating the parser).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import cohort, comm_ws, faults, robust, tamuna_dp
+
+
+def _mesh_1x1():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def _tree(rng, n):
+    x = {
+        "w": jnp.asarray(rng.normal(size=(n, 13, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(n, 1)), jnp.bfloat16),
+        "v": jnp.asarray(rng.normal(size=(n, 29)), jnp.float32),
+    }
+    h = {
+        k: jnp.asarray(rng.normal(size=a.shape), jnp.float32)
+        for k, a in x.items()
+    }
+    h = jax.tree.map(lambda a: a - a.mean(axis=0, keepdims=True), h)
+    return x, h
+
+
+def _slot(rng, n, c):
+    cohort_ids = rng.choice(n, size=c, replace=False)
+    out = np.full((n,), -1, np.int32)
+    out[cohort_ids] = rng.permutation(c)
+    return jnp.asarray(out)
+
+
+def _maxerr(a, b):
+    return max(
+        float(jnp.abs(u.astype(jnp.float32) - v.astype(jnp.float32)).max())
+        for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# --------------------------------------------------------------------------
+# combiner contract + numpy reference
+# --------------------------------------------------------------------------
+
+
+def test_normalize_robust_contract():
+    # identity settings -> None: the impls run the mean path verbatim
+    assert robust.normalize_robust("mean", 0, 4) is None
+    assert robust.normalize_robust("trimmed", 0, 4) is None
+    assert robust.normalize_robust("trimmed", 1, 4) == ("trimmed", 1)
+    assert robust.normalize_robust("trimmed", 2, 5) == ("trimmed", 2)
+    assert robust.normalize_robust("median", 0, 2) == ("median", 0)
+    with pytest.raises(ValueError):
+        robust.normalize_robust("krum", 0, 4)
+    with pytest.raises(ValueError):
+        robust.normalize_robust("trimmed", 2, 4)  # 2k >= s
+    with pytest.raises(ValueError):
+        robust.normalize_robust("trimmed", -1, 4)
+    with pytest.raises(ValueError):
+        robust.normalize_robust("mean", 1, 4)
+    with pytest.raises(ValueError):
+        robust.normalize_robust("median", 1, 4)
+
+
+def test_config_identity_spec_is_none():
+    tcfg = tamuna_dp.DistTamunaConfig(
+        gamma=0.05, c=3, s=2, p=0.5, robust_agg="trimmed", trim_k=0
+    )
+    assert tcfg.robust_() is None
+    tcfg = tamuna_dp.DistTamunaConfig(
+        gamma=0.05, c=4, s=3, p=0.5, robust_agg="trimmed", trim_k=1
+    )
+    assert tcfg.robust_() == ("trimmed", 1)
+
+
+def _np_combine(vals, ok, kind, k):
+    m, d = vals.shape
+    bar = np.zeros(d, vals.dtype)
+    cnt = np.zeros(d, np.int32)
+    for j in range(d):
+        v = np.sort(vals[ok[:, j], j])
+        c = len(v)
+        cnt[j] = c
+        if c == 0:
+            continue
+        if kind == "median":
+            bar[j] = 0.5 * (v[(c - 1) // 2] + v[c // 2])
+        else:
+            ke = min(k, (c - 1) // 2)
+            bar[j] = v[ke:c - ke].mean()
+    return bar, cnt
+
+
+_combos = st.tuples(
+    st.integers(1, 7),            # stack size m
+    st.integers(1, 33),           # width d
+    st.integers(0, 3),            # trim k
+    st.sampled_from(["trimmed", "median"]),
+    st.integers(0, 2**16),        # seed
+)
+
+
+@given(_combos)
+@settings(max_examples=30, deadline=None)
+def test_robust_combine_stack_matches_numpy(t):
+    m, d, k, kind, seed = t
+    if kind == "median":
+        k = 0
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(m, d)).astype(np.float32)
+    ok = rng.random((m, d)) < 0.7  # ragged validity incl. empty coords
+    bar, cnt = robust.robust_combine_stack(
+        jnp.asarray(vals), jnp.asarray(ok), kind, k
+    )
+    rbar, rcnt = _np_combine(vals, ok, kind, k)
+    np.testing.assert_array_equal(np.asarray(cnt), rcnt)
+    np.testing.assert_allclose(np.asarray(bar), rbar, rtol=1e-5, atol=1e-6)
+    assert (np.asarray(bar)[rcnt == 0] == 0.0).all()
+
+
+def test_trimmed_and_median_reject_adversarial_rows():
+    rng = np.random.default_rng(0)
+    honest = rng.normal(size=(5, 17)).astype(np.float32)
+    vals = np.concatenate(
+        [honest, np.full((1, 17), -50.0, np.float32)], axis=0
+    )
+    ok = np.ones((6, 17), bool)
+    mean = vals.mean(axis=0)
+    assert np.abs(mean).max() > 5.0  # the plain mean is dragged
+    for kind, k in (("trimmed", 1), ("median", 0)):
+        bar, _ = robust.robust_combine_stack(
+            jnp.asarray(vals), jnp.asarray(ok), kind, k
+        )
+        assert np.abs(np.asarray(bar)).max() < 4.0, kind
+
+
+# --------------------------------------------------------------------------
+# adaptive guard + anomaly + reputation
+# --------------------------------------------------------------------------
+
+
+def test_magnitude_outliers_flags_blowup_only():
+    rng = np.random.default_rng(1)
+    x = {"w": jnp.asarray(rng.normal(size=(6, 40)), jnp.float32)}
+    mask = np.ones(6, bool)
+    mask[5] = False
+    # a clean fleet never flags itself (relative floor on the MAD band)
+    assert not np.asarray(
+        robust.magnitude_outliers(x, jnp.asarray(mask))
+    ).any()
+    blown = jax.tree.map(lambda a: a.at[2].mul(1e8), x)
+    out = np.asarray(robust.magnitude_outliers(blown, jnp.asarray(mask)))
+    assert out.tolist() == [False, False, True, False, False, False]
+    # a row outside the mask is never flagged, however large
+    blown5 = jax.tree.map(lambda a: a.at[5].mul(1e8), x)
+    assert not np.asarray(
+        robust.magnitude_outliers(blown5, jnp.asarray(mask))
+    ).any()
+
+
+def test_anomaly_scores_separate_hostile_row():
+    rng = np.random.default_rng(2)
+    base = rng.normal(size=(8, 31)).astype(np.float32)
+    base[3] = -20.0 * np.abs(base[3])
+    mask = np.ones(8, bool)
+    mask[7] = False
+    sc = np.asarray(
+        robust.anomaly_scores({"w": jnp.asarray(base)}, jnp.asarray(mask))
+    )
+    assert sc[7] == 0.0  # outside the mask
+    honest = sc[np.array([0, 1, 2, 4, 5, 6])]
+    assert sc[3] > 3.0 * honest.max()
+    assert 0.2 < np.median(honest) < 2.5  # honest cluster scores ~1
+
+
+def test_reputation_escalating_windows():
+    rep = robust.Reputation(4, alpha=1.0, threshold=3.0, base_rounds=4,
+                            max_doublings=2)
+    anom = np.array([1.0, 1.0, 10.0, 1.0])
+    arr = np.ones(4, bool)
+    assert rep.update(anom, arr) == [(2, 4)]
+    assert rep.scores[2] == 0.0  # EWMA resets after a strike
+    assert rep.update(anom, arr) == [(2, 8)]
+    assert rep.update(anom, arr) == [(2, 16)]
+    assert rep.update(anom, arr) == [(2, 16)]  # capped at 2**max_doublings
+    # non-arrived clients neither decay nor grow
+    before = rep.scores.copy()
+    assert rep.update(np.full(4, 100.0), np.zeros(4, bool)) == []
+    assert (rep.scores == before).all()
+    with pytest.raises(ValueError):
+        robust.Reputation(4, threshold=0.5)
+    with pytest.raises(ValueError):
+        robust.Reputation(4, alpha=0.0)
+
+
+def test_reputation_state_dict_resume_replays_bitexact():
+    rng = np.random.default_rng(3)
+    stream = [(rng.random(6) * 4.0, rng.random(6) < 0.8)
+              for _ in range(30)]
+    live = robust.Reputation(6, alpha=0.5, threshold=2.0, base_rounds=3)
+    for a, m in stream[:15]:
+        live.update(a, m)
+    # snapshot through JSON: exactly what a checkpoint stores
+    snap = json.loads(json.dumps(live.state_dict()))
+    restored = robust.Reputation.from_state_dict(snap)
+    tail_live = [live.update(a, m) for a, m in stream[15:]]
+    tail_rest = [restored.update(a, m) for a, m in stream[15:]]
+    assert tail_live == tail_rest
+    assert (live.scores == restored.scores).all()
+    assert (live.strikes == restored.strikes).all()
+
+
+# --------------------------------------------------------------------------
+# fault-model determinism
+# --------------------------------------------------------------------------
+
+
+def test_byzantine_set_deterministic_and_sized():
+    mk = lambda: faults.FaultPlan(
+        7, 12, model=faults.FaultModel(adversary="sign_flip", f_byz=0.25)
+    )
+    b1, b2 = mk().byzantine, mk().byzantine
+    assert (b1 == b2).all() and b1.sum() == 3
+    assert not faults.FaultPlan.zero(12).byzantine.any()
+    assert faults.FaultPlan(
+        7, 12, model=faults.FaultModel(adversary="inlier", f_byz=0.5)
+    ).byzantine.sum() == 6
+    with pytest.raises(ValueError):
+        faults.FaultModel(f_byz=0.25)  # f_byz needs an adversary
+    with pytest.raises(ValueError):
+        faults.FaultModel(adversary="alie", f_byz=0.25)
+
+
+def test_adversarial_rows_modes():
+    rng = np.random.default_rng(4)
+    x = {"w": jnp.asarray(rng.normal(size=(6, 9)), jnp.float32)}
+    byz = np.zeros(6, bool)
+    byz[[1, 4]] = True
+    w = np.asarray(x["w"])
+    flip = np.asarray(
+        faults.adversarial_rows(x, byz, ~byz, "sign_flip")["w"]
+    )
+    np.testing.assert_array_equal(flip[byz], -w[byz])
+    np.testing.assert_array_equal(flip[~byz], w[~byz])  # honest bit-exact
+    scaled = np.asarray(
+        faults.adversarial_rows(x, byz, ~byz, "scale", byz_scale=-3.0)["w"]
+    )
+    np.testing.assert_allclose(scaled[byz], -3.0 * w[byz], rtol=1e-6)
+    inl = np.asarray(
+        faults.adversarial_rows(x, byz, ~byz, "inlier", byz_z=1.5)["w"]
+    )
+    h = w[~byz]
+    target = h.mean(axis=0) - 1.5 * h.std(axis=0)
+    np.testing.assert_allclose(
+        inl[byz], np.broadcast_to(target, (2, 9)), rtol=1e-4, atol=1e-5
+    )
+    assert np.isfinite(inl).all()  # inlier passes any magnitude guard
+    with pytest.raises(ValueError):
+        faults.adversarial_rows(x, byz, ~byz, "none")
+
+
+# --------------------------------------------------------------------------
+# comm-impl equivalence under robust combiners
+# --------------------------------------------------------------------------
+
+_IMPLS = (
+    ("ws", False, {}),
+    ("ws", True, {}),
+    ("pallas", False, {}),
+    ("pallas", True, {"shard_kernels": False}),
+    ("pallas", True, {"shard_kernels": True}),
+)
+
+_ncs_robust = st.tuples(
+    st.integers(3, 9),   # n
+    st.integers(3, 9),   # c
+    st.integers(3, 9),   # s (>= 3 so trimmed k=1 keeps a window)
+    st.integers(0, 2**16),
+    st.sampled_from([("trimmed", 1), ("median", 0)]),
+).filter(lambda t: t[1] <= t[0] and t[2] <= t[1])
+
+
+@given(_ncs_robust)
+@settings(max_examples=12, deadline=None)
+def test_cyclic_robust_impls_match_dense(t):
+    n, c, s, seed, spec = t
+    rng = np.random.default_rng(seed)
+    x, h = _tree(rng, n)
+    slot = _slot(rng, n, c)
+    # one cohort member turns adversarial so the robust path actually
+    # diverges from the mean (trimming must agree on what it discards)
+    byz = np.zeros(n, bool)
+    byz[np.nonzero(np.asarray(slot) >= 0)[0][0]] = True
+    x = faults.adversarial_rows(x, byz, ~byz, "sign_flip")
+    xd, hd = jax.jit(
+        lambda x, h: comm_ws.cyclic_comm(x, h, slot, c, s, 0.37,
+                                         impl="dense", robust=spec)
+    )(x, h)
+    mesh = _mesh_1x1()
+    for impl, meshed, kw in _IMPLS:
+        if meshed:
+            kw = dict(kw, mesh=mesh, block=16)
+        xn, hn = jax.jit(
+            lambda x, h, impl=impl, meshed=meshed, kw=kw:
+            comm_ws.cyclic_comm(x, h, slot, c, s, 0.37, impl=impl,
+                                meshed=meshed, robust=spec, **kw)
+        )(x, h)
+        assert _maxerr(xd, xn) <= 1e-6, (impl, meshed, kw, spec)
+        assert _maxerr(hd, hn) <= 1e-6, (impl, meshed, kw, spec)
+
+
+def test_identity_spec_bitwise_mean_all_impls():
+    """``robust_agg="trimmed", trim_k=0`` must be bitwise-invisible: the
+    normalized spec is ``None``, so every impl literally runs its mean
+    path (a sort-based k=0 trim would reassociate the reduction).  Pins
+    ``normalize_robust`` against ever leaking ``("trimmed", 0)``."""
+    rng = np.random.default_rng(7)
+    n, c, s = 6, 4, 3
+    x, h = _tree(rng, n)
+    slot = _slot(rng, n, c)
+    spec = robust.normalize_robust("trimmed", 0, s)
+    mesh = _mesh_1x1()
+    for impl, meshed, kw in (("dense", False, {}),) + _IMPLS:
+        if meshed:
+            kw = dict(kw, mesh=mesh, block=16)
+        run = lambda rb, impl=impl, meshed=meshed, kw=kw: jax.jit(
+            lambda x, h: comm_ws.cyclic_comm(x, h, slot, c, s, 0.37,
+                                             impl=impl, meshed=meshed,
+                                             robust=rb, **kw)
+        )(x, h)
+        a, b = run(None), run(spec)
+        for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(
+                np.asarray(u, np.float32), np.asarray(v, np.float32)
+            )
+
+
+# --------------------------------------------------------------------------
+# quarantine composition (satellite: overlapping windows / soft floor)
+# --------------------------------------------------------------------------
+
+
+def test_quarantine_overlap_purges_cache_and_stacks():
+    plan = cohort.CohortPlan(0, 8, 3)
+    plan.cohort(6)
+    plan.cohort(9)
+    plan.quarantine([1], 5, 10)
+    assert (6, 0) not in plan._cache and (9, 0) not in plan._cache
+    a = plan.cohort(8).copy()
+    assert 1 not in a
+    # overlapping second window for the same client: cached draws inside
+    # the new window are purged again, the draw itself is unchanged (same
+    # exclusion set, doubled penalty is still far below the floor)
+    plan.quarantine([1], 7, 12)
+    assert (8, 0) not in plan._cache
+    np.testing.assert_array_equal(plan.cohort(8), a)
+    for r in range(5, 13):
+        got = plan.cohort(r)
+        assert 1 not in got and len(got) == 3
+    # outside the union of windows the client is eligible again
+    assert any(1 in plan.cohort(r) for r in range(13, 40))
+    # repeated identical window: idempotent on the selections
+    plan.quarantine([1], 7, 12)
+    np.testing.assert_array_equal(plan.cohort(8), a)
+
+
+def test_quarantine_soft_floor_keeps_exactly_c():
+    # quarantine + unavailability leave ONE healthy client; the plan must
+    # still field exactly c participants by drafting floored clients
+    avail = cohort.BernoulliAvailability(
+        p_up=np.array([1.0, 1.0, 0.0, 1.0]), seed=5
+    )
+    plan = cohort.CohortPlan(0, 4, 3, availability=avail)
+    plan.quarantine([0, 1], 0, 50)
+    for r in range(8):
+        got = plan.cohort(r)
+        assert len(got) == 3 and len(set(got.tolist())) == 3
+        assert 3 in got  # the sole healthy client always participates
+    # hard-floor interplay: a busy client is NEVER drafted, quarantined
+    # ones still are
+    busy = np.zeros(4, bool)
+    busy[3] = True
+    got = plan.cohort_excluding(2, busy)
+    assert 3 not in got and len(got) == 3
+
+
+def test_cohort_plan_weighted_flag():
+    assert not cohort.CohortPlan(0, 4, 2).weighted
+    assert cohort.CohortPlan(0, 4, 2, weights=[1, 2, 3, 4]).weighted
+
+
+# --------------------------------------------------------------------------
+# e2e through the round engine (subproc: multi-device + fresh jax)
+# --------------------------------------------------------------------------
+
+_E2E_SETUP = """
+import warnings
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import cohort as cm
+from repro.dist import robust as rb
+from repro.dist import rounds, sharding, tamuna_dp
+from repro.dist.faults import FaultPlan, FaultModel
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=n)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+sampler = device_sampler(dcfg, cfg, mesh)
+
+
+def build(uplink, elastic=True, c=2, **tkw):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=2, p=0.5,
+                                      uplink=uplink, **tkw)
+    state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      tamuna_dp.state_pspecs(state, cfg, mesh),
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, sh)
+    round_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
+                                    max_L=4, elastic=elastic)
+    return tcfg, state, round_fn
+
+
+class Rows:
+    def __init__(self):
+        self.rows = []
+
+    def log(self, step, m):
+        self.rows.append(dict(m))
+"""
+
+
+def test_adaptive_guard_catches_finite_blowup(subproc):
+    """ISSUE 9 satellite 1: ``corrupt_mode="blowup"`` with
+    ``guard_max_abs`` unset used to sail through the nonfinite-only
+    guard default and poison the aggregate.  The default is now the
+    adaptive magnitude guard whenever the fault model corrupts; the
+    old default is pinned as the poisoned contrast."""
+    subproc(_E2E_SETUP + """
+# seed 34: <= 1 of the 4 cohort members corrupted per round, keeping the
+# corrupted fraction below the median/MAD 50% breakdown point
+fp = FaultPlan(seed=34, n=n,
+               model=FaultModel(p_corrupt=0.3, corrupt_mode="blowup",
+                                blowup=1e8))
+plan = cm.CohortPlan(seed=17, n=n, c=4)
+log = Rows()
+tcfg, state, round_fn = build("masked_psum", elastic=False, c=4)
+final, last = rounds.run_rounds(
+    state, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(3), rounds=4, rng=np.random.default_rng(0),
+    p=tcfg.p, flush_every=2, logger=log, plan=plan, faults=fp,
+    policy="quorum", quorum=1)
+assert sum(r["corrupted"] for r in log.rows) > 0, log.rows
+for leaf in jax.tree.leaves(final.x):
+    a = np.asarray(leaf)
+    assert np.isfinite(a).all() and np.abs(a).max() < 1e4, np.abs(a).max()
+
+# contrast: the old nonfinite-only default admits the finite 1e8 rows
+plan = cm.CohortPlan(seed=17, n=n, c=4)
+log2 = Rows()
+tcfg, state, round_fn = build("masked_psum", elastic=False, c=4)
+rounds.run_rounds(
+    state, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(3), rounds=4, rng=np.random.default_rng(0),
+    p=tcfg.p, flush_every=2, logger=log2, plan=plan, faults=fp,
+    policy="quorum", quorum=1, guard_mode="nonfinite")
+# the corrupting round reported 0 corrupted (the guard saw nothing)...
+assert log2.rows[0]["corrupted"] == 0 and fp.corrupts(0).any()
+# ...and the poisoned aggregate degenerated downstream
+assert any(not np.isfinite(r["loss"]) for r in log2.rows)
+print("OK")
+""", devices=4)
+
+
+def test_reputation_weighted_and_replay_e2e(subproc):
+    """Reputation rides the trace buffers (anomaly_max surfaces in the
+    logs, final state stays finite), a weighted plan warns about the
+    missing 1/(n p_i) reweighting, the zero-fault plan stays bitwise
+    identical to the legacy path, and a fresh-seeded rerun replays the
+    identical fault/reputation schedule bit-exactly."""
+    subproc(_E2E_SETUP + """
+def rep_run():
+    fp = FaultPlan(seed=11, n=n,
+                   model=FaultModel(adversary="sign_flip", f_byz=0.25))
+    assert fp.byzantine.sum() == 1
+    plan = cm.CohortPlan(seed=17, n=n, c=2)
+    rep = rb.Reputation(n, threshold=1.5, base_rounds=2)
+    log = Rows()
+    tcfg, state, round_fn = build("masked_psum")
+    final, _ = rounds.run_rounds(
+        state, round_fn=round_fn, data=pipe.device_data(),
+        key=jax.random.key(3), rounds=6, rng=np.random.default_rng(0),
+        p=tcfg.p, flush_every=2, logger=log, plan=plan, faults=fp,
+        reputation=rep)
+    return final, log, plan, rep
+
+final, log, plan, rep = rep_run()
+assert "anomaly_max" in log.rows[0], log.rows[0]
+for leaf in jax.tree.leaves(final.x):
+    assert np.isfinite(np.asarray(leaf)).all()
+
+# replay determinism: a fresh run from the same seeds emits the same
+# quarantine windows, reputation state, and bitwise-identical params
+final2, log2, plan2, rep2 = rep_run()
+assert len(plan._quarantine) == len(plan2._quarantine)
+for (i1, f1, l1), (i2, f2, l2) in zip(plan._quarantine, plan2._quarantine):
+    assert (i1 == i2).all() and f1 == f2 and l1 == l2
+assert (rep.scores == rep2.scores).all()
+assert (rep.strikes == rep2.strikes).all()
+for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(final2)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# satellite 2: weighted plan -> bias warning (no 1/(n p_i) reweighting)
+planw = cm.CohortPlan(seed=17, n=n, c=2, weights=[1.0, 2.0, 3.0, 4.0])
+tcfg, state, round_fn = build("masked_psum")
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    rounds.run_rounds(
+        state, round_fn=round_fn, data=pipe.device_data(),
+        key=jax.random.key(3), rounds=2, rng=np.random.default_rng(0),
+        p=tcfg.p, flush_every=2, plan=planw)
+assert any("1/(n p_i)" in str(x.message) for x in w), \\
+    [str(x.message) for x in w]
+
+# zero-fault plan: still bitwise identical to the legacy engine
+plan = cm.CohortPlan(seed=17, n=n, c=2)
+tcfg, state, round_fn = build("masked_psum")
+legacy, _ = rounds.run_rounds(
+    state, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(3), rounds=4, rng=np.random.default_rng(0),
+    p=tcfg.p, flush_every=2, plan=plan)
+plan = cm.CohortPlan(seed=17, n=n, c=2)
+tcfg, state, round_fn = build("masked_psum")
+faulted, _ = rounds.run_rounds(
+    state, round_fn=round_fn, data=pipe.device_data(),
+    key=jax.random.key(3), rounds=4, rng=np.random.default_rng(0),
+    p=tcfg.p, flush_every=2, plan=plan, faults=FaultPlan.zero(n),
+    policy="wait_all")
+for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(faulted)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK")
+""", devices=4)
+
+
+def test_pipelined_tau0_equivalence_under_robust(subproc):
+    """The pipelined driver at tau=0 reuses the synchronous resolver, so
+    adversaries + adaptive guard + robust combiners stay bit-equivalent
+    to ``run_rounds``; tau=1 under blowup faults stays finite."""
+    subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.models.transformer import ModelConfig
+from repro.data import DataConfig, device_sampler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist import rounds, tamuna_dp
+from repro.dist.faults import FaultPlan, FaultModel
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = ModelConfig(family="dense", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32,
+                  remat=False)
+n = 8
+dcfg = DataConfig(seq_len=8, per_client_batch=1, vocab=64, seed=0,
+                  n_clients=n)
+pipe = SyntheticTokenPipeline(dcfg, cfg, mesh)
+data = pipe.device_data()
+sampler = device_sampler(dcfg, cfg, mesh)
+
+
+def build(c, s, **tkw):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=s, p=0.5,
+                                      uplink="masked_psum", **tkw)
+    sync_fn = rounds.make_round_fn(cfg, tcfg, mesh, sample_batch=sampler,
+                                   max_L=8, n=n)
+    eng = rounds.make_pipelined_round_fn(cfg, tcfg, mesh,
+                                         sample_batch=sampler, max_L=8,
+                                         n=n)
+    mk = lambda: tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg,
+                                      n=n)
+    return mk, sync_fn, eng
+
+
+def maxerr(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda u, v: float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                           - v.astype(jnp.float32)))),
+        a, b)), default=0.0)
+
+# blowup + adaptive guard + trimmed combiner
+fp = FaultPlan(seed=13, n=n,
+               model=FaultModel(p_drop=0.2, p_corrupt=0.3,
+                                corrupt_mode="blowup"))
+mk, sync_fn, eng = build(4, 3, robust_agg="trimmed", trim_k=1)
+kw = dict(data=data, key=jax.random.key(7), rounds=6, p=0.5,
+          flush_every=3, faults=fp, policy="quorum", quorum=1)
+st_s, last_s = rounds.run_rounds(mk(), round_fn=sync_fn,
+                                 rng=np.random.default_rng(3), **kw)
+st_p, last_p = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, rng=np.random.default_rng(3), staleness=0, **kw)
+err = maxerr((st_s.x, st_s.h, st_s.opt), (st_p.x, st_p.h, st_p.opt))
+assert err <= 1e-6, err
+assert last_s["corrupted"] == last_p["corrupted"]
+
+# sign_flip adversary + median combiner
+fp = FaultPlan(seed=21, n=n,
+               model=FaultModel(adversary="sign_flip", f_byz=0.25))
+mk, sync_fn, eng = build(4, 3, robust_agg="median")
+kw = dict(data=data, key=jax.random.key(7), rounds=6, p=0.5,
+          flush_every=3, faults=fp)
+st_s, _ = rounds.run_rounds(mk(), round_fn=sync_fn,
+                            rng=np.random.default_rng(3), **kw)
+st_p, _ = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, rng=np.random.default_rng(3), staleness=0, **kw)
+assert maxerr((st_s.x, st_s.h), (st_p.x, st_p.h)) <= 1e-6
+
+# tau=1 under blowup faults: in-flight rounds stay finite
+fp = FaultPlan(seed=13, n=n,
+               model=FaultModel(p_drop=0.2, p_corrupt=0.2,
+                                corrupt_mode="blowup", delay_sigma=0.5))
+mk, sync_fn, eng = build(3, 2, robust_agg="median")
+st1, _ = rounds.run_rounds_pipelined(
+    mk(), round_fn=eng, rng=np.random.default_rng(3), staleness=1,
+    data=data, key=jax.random.key(7), rounds=6, p=0.5, flush_every=3,
+    faults=fp, policy="quorum", quorum=1)
+for leaf in jax.tree.leaves(st1.x):
+    assert np.isfinite(np.asarray(leaf)).all()
+print("OK")
+""", devices=1, timeout=1500)
+
+
+def test_robust_shard_engine_no_population_collective(subproc):
+    """HLO regression for the robust shard engine: the owner-value
+    exchange is ``(s, d_local)``-bounded — the largest lowered collective
+    stays <= (s+1) * d_total elements, never the ``(n, d)`` population
+    gather a naive robust aggregation would need.  The non-meshed ws
+    gather on a dp-sharded client axis is the positive control that DOES
+    lower a population-scaled collective, validating the parser."""
+    subproc("""
+import re
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.transformer import ModelConfig
+from repro.dist import comm_ws, sharding, tamuna_dp
+
+COLL = re.compile(
+    r"= (?P<res>[^=]*?) (?:all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all)(?:-start)?\\(")
+SHAPE = re.compile(r"(?:f|s|u|pred|bf)[0-9]*\\[([0-9,]*)\\]")
+
+def max_coll_elems(hlo):
+    worst = 0
+    for line in hlo.splitlines():
+        m = COLL.search(line)
+        if not m or "-done" in line.split("(")[0]:
+            continue
+        for dims in SHAPE.findall(m.group("res")):
+            els = 1
+            for d in filter(None, dims.split(",")):
+                els *= int(d)
+            worst = max(worst, els)
+    return worst
+
+mesh = jax.make_mesh((8, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = ModelConfig(family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, dtype=jnp.float32,
+                  remat=False)
+n = sharding.n_clients(mesh)
+assert n == 8
+params = jax.eval_shape(
+    lambda: __import__("repro.dist.model_api", fromlist=["init"]).init(
+        jax.random.key(0), cfg))
+d_total = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+for agg, k, c, s in (("trimmed", 1, 4, 3), ("median", 0, 3, 2)):
+    tcfg = tamuna_dp.DistTamunaConfig(gamma=0.05, c=c, s=s, p=0.5,
+                                      uplink="masked_psum",
+                                      comm_impl="pallas",
+                                      robust_agg=agg, trim_k=k)
+    state = tamuna_dp.init_state(jax.random.key(0), cfg, mesh, tcfg)
+    sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                      tamuna_dp.state_pspecs(state, cfg, mesh),
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, sh)
+    fn = jax.jit(tamuna_dp.make_comm_step(cfg, tcfg, mesh))
+    hlo = fn.lower(state, jax.random.key(0)).compile().as_text()
+    worst = max_coll_elems(hlo)
+    # the owner-value stack psum is s * d_local per shard; with the
+    # d-sized bookkeeping that stays within (s + 1) * d_total and far
+    # below the n * d_total population gather (n = 8 here)
+    assert 0 < worst <= (s + 1) * d_total, (agg, worst, d_total)
+    assert worst < n * d_total // 2, (agg, worst, n * d_total)
+
+# positive control: the parser DOES see population-scaled collectives
+D = 1024
+x = {"w": jnp.zeros((n, D), jnp.float32)}
+h = {"w": jnp.zeros((n, D), jnp.float32)}
+xs = jax.tree.map(
+    lambda a: jax.device_put(a, NamedSharding(mesh, P("data"))), x)
+hs = jax.tree.map(
+    lambda a: jax.device_put(a, NamedSharding(mesh, P("data"))), h)
+slot = jnp.asarray(np.r_[np.arange(3), [-1] * (n - 3)].astype(np.int32))
+bad = jax.jit(lambda xs, hs: comm_ws.cyclic_comm(
+    xs, hs, slot, 3, 2, 0.37, impl="ws", meshed=False, block=256))
+worst = max_coll_elems(bad.lower(xs, hs).compile().as_text())
+assert worst >= 2 * D, worst
+print("OK")
+""", devices=8, timeout=1500)
